@@ -1,0 +1,61 @@
+"""Shared benchmark setup: one WatDiv instance + query loads per process."""
+
+from __future__ import annotations
+
+import time
+from functools import lru_cache
+
+from repro.configs.spf_watdiv import BENCH_GRAPH
+from repro.core import EngineConfig, QueryEngine
+from repro.rdf import TripleStore, generate_query_load, generate_watdiv
+from repro.rdf.queries import QueryLoadConfig
+
+LOADS = ("1-star", "2-stars", "3-stars", "paths", "union")
+INTERFACES = ("tpf", "brtpf", "spf", "endpoint")
+N_QUERIES = 6
+CLIENTS = (1, 4, 16, 64, 128)
+
+
+@lru_cache(maxsize=1)
+def bench_graph():
+    g = generate_watdiv(BENCH_GRAPH)
+    store = TripleStore.build(g.s, g.p, g.o, n_terms=g.n_terms,
+                              n_predicates=g.n_predicates)
+    return g, store
+
+
+@lru_cache(maxsize=None)
+def bench_load(load: str):
+    g, store = bench_graph()
+    return generate_query_load(g, store, load,
+                               QueryLoadConfig(n_queries=N_QUERIES))
+
+
+@lru_cache(maxsize=None)
+def engine(interface: str) -> QueryEngine:
+    _, store = bench_graph()
+    return QueryEngine(store, EngineConfig(interface=interface))
+
+
+def timed_run(eng: QueryEngine, q, repeats: int = 3):
+    """(wall seconds per run after warmup, stats)."""
+    tbl, stats = eng.run(q)  # warmup + compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        tbl, stats = eng.run(q)
+        tbl.rows.block_until_ready()
+    return (time.perf_counter() - t0) / repeats, stats
+
+
+@lru_cache(maxsize=None)
+def load_run(load: str, interface: str):
+    """Memoised (mean wall seconds, tuple of per-query stats) — every
+    figure reads from this one execution of the load."""
+    qs = bench_load(load)
+    eng = engine(interface)
+    wall, stats = 0.0, []
+    for q in qs:
+        sec, st = timed_run(eng, q, repeats=1)
+        wall += sec
+        stats.append(st)
+    return wall / len(qs), tuple(stats)

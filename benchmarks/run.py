@@ -1,0 +1,180 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+- ``us_per_call`` — measured wall time of the jitted engine execution on
+  this host (one CPU device; compile excluded);
+- ``derived``     — the figure's actual metric (modeled throughput, NRS,
+  NTB, ops, ...), computed from the engines' exact counts via the cost
+  model in repro.benchlib (see its docstring for the constants).
+
+Figures covered:
+  fig4_loadstats      query-load statistics
+  fig5_throughput     throughput vs concurrent clients, per load
+  fig5f_timeouts      overflow/timeout analogue count, union load
+  fig6_server_load    server CPU proxy vs clients, union load
+  fig7_network        NRS + NTB per interface per load (64 clients)
+  fig8_latency        QET / QRT per load (64 clients)
+  kernels             sorted_probe / flash_attention microbench
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, "src")  # allow `python -m benchmarks.run` from repo root
+
+from repro.benchlib import CostModel, modeled_query_seconds  # noqa: E402
+from repro.core import count_stars  # noqa: E402
+from repro.core.patterns import star_decomposition  # noqa: E402
+
+from benchmarks.common import (CLIENTS, INTERFACES, LOADS,  # noqa: E402
+                               bench_graph, bench_load, engine, load_run,
+                               timed_run)
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+# ------------------------------------------------------------------ Fig. 4
+
+def fig4_loadstats() -> None:
+    for load in LOADS:
+        qs = bench_load(load)
+        wall, stats_list = load_run(load, "spf")
+        n_res, n_tp_per_star, n_stars = [], [], []
+        for q, stats in zip(qs, stats_list):
+            n_res.append(int(stats.n_results))
+            sizes = [len(s.branches) for s in star_decomposition(q)]
+            big = [b for b in sizes if b >= 2]
+            n_tp_per_star.extend(big or [1])
+            n_stars.append(count_stars(q))
+        emit(f"fig4_loadstats/{load}", 1e6 * wall,
+             f"results_mean={np.mean(n_res):.1f};"
+             f"tp_per_star={np.mean(n_tp_per_star):.2f};"
+             f"stars={np.mean(n_stars):.2f}")
+
+
+# ------------------------------------------------------------------ Fig. 5
+
+def fig5_throughput() -> None:
+    for load in LOADS:
+        for iface in INTERFACES:
+            wall, per_q = load_run(load, iface)
+            for c in CLIENTS:
+                mean_s = np.mean([modeled_query_seconds(s, c) for s in per_q])
+                tput = c * 60.0 / mean_s
+                emit(f"fig5_throughput/{load}/{iface}/clients{c}",
+                     1e6 * wall, f"queries_per_min={tput:.1f}")
+
+
+def fig5f_timeouts() -> None:
+    for iface in INTERFACES:
+        wall, stats_list = load_run("union", iface)
+        # timeout analogue: modeled 128-client QET over 600 s, or overflow
+        n_to = sum(1 for s in stats_list
+                   if modeled_query_seconds(s, 128) > 600 or bool(s.overflow))
+        emit(f"fig5f_timeouts/union/{iface}", 1e6 * wall,
+             f"timeouts={n_to}/{len(stats_list)}")
+
+
+# ------------------------------------------------------------------ Fig. 6
+
+def fig6_server_load() -> None:
+    cm = CostModel()
+    for iface in INTERFACES:
+        _, stats = load_run("union", iface)
+        for c in CLIENTS:
+            mean_q = np.mean([modeled_query_seconds(s, c) for s in stats])
+            server_s = np.mean([int(s.server_ops) * cm.op_s for s in stats])
+            util = min(1.0, c * server_s / (mean_q * cm.server_cores))
+            emit(f"fig6_server_load/union/{iface}/clients{c}", 0.0,
+                 f"cpu_util={100 * util:.1f}%")
+
+
+# ------------------------------------------------------------------ Fig. 7
+
+def fig7_network() -> None:
+    for load in LOADS:
+        qs = bench_load(load)
+        for iface in INTERFACES:
+            wall, stats_list = load_run(load, iface)
+            nrs = sum(int(s.nrs) for s in stats_list)
+            ntb = sum(int(s.ntb) for s in stats_list)
+            n = len(stats_list)
+            emit(f"fig7_network/{load}/{iface}", 1e6 * wall,
+                 f"nrs_mean={nrs / n:.1f};ntb_mean_bytes={ntb / n:.0f}")
+
+
+# ------------------------------------------------------------------ Fig. 8
+
+def fig8_latency() -> None:
+    cm = CostModel()
+    for load in LOADS:
+        for iface in INTERFACES:
+            wall, stats_list = load_run(load, iface)
+            qets, qrts = [], []
+            for stats in stats_list:
+                qet = modeled_query_seconds(stats, 64)
+                # QRT: first result lands before the final page transfer
+                # completes (paper Sec. 6.1: QRT ~= QET for all interfaces)
+                qrt = qet - int(stats.ntb) / cm.bw_bytes_s * 0.5
+                qets.append(qet)
+                qrts.append(max(qrt, 0.0))
+            emit(f"fig8_latency/{load}/{iface}", 1e6 * wall,
+                 f"qet_ms={1e3 * np.mean(qets):.1f};"
+                 f"qrt_ms={1e3 * np.mean(qrts):.1f}")
+
+
+# ----------------------------------------------------------------- kernels
+
+def kernels() -> None:
+    import jax.numpy as jnp
+
+    from repro.kernels import ref
+
+    rng = np.random.default_rng(0)
+    keys = np.sort(rng.integers(0, 3_000_000, 1_000_000)).astype(np.int64)
+    queries = rng.integers(0, 3_000_000, 4096).astype(np.int64)
+    kj, qj = jnp.asarray(keys), jnp.asarray(queries)
+
+    r, c = ref.sorted_probe_ref(kj, qj)
+    r.block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(10):
+        r, c = ref.sorted_probe_ref(kj, qj)
+        r.block_until_ready()
+    emit("kernels/sorted_probe_ref_1Mx4k", 1e5 * (time.perf_counter() - t0),
+         "backend=cpu-jnp-oracle")
+
+    q = jnp.asarray(rng.normal(size=(1, 4, 256, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 2, 256, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 2, 256, 64)), jnp.float32)
+    o = ref.attention_ref(q, k, v)
+    o.block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(10):
+        o = ref.attention_ref(q, k, v)
+        o.block_until_ready()
+    emit("kernels/attention_ref_b1h4s256", 1e5 * (time.perf_counter() - t0),
+         "backend=cpu-jnp-oracle")
+
+
+FIGS = [fig4_loadstats, fig5_throughput, fig5f_timeouts, fig6_server_load,
+        fig7_network, fig8_latency, kernels]
+
+
+def main() -> None:
+    g, store = bench_graph()
+    print(f"# WatDiv bench instance: {store.n_triples} triples, "
+          f"{store.n_predicates} predicates")
+    print("name,us_per_call,derived")
+    for fig in FIGS:
+        fig()
+
+
+if __name__ == "__main__":
+    main()

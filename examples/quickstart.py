@@ -1,0 +1,67 @@
+"""Quickstart: build a knowledge graph, run SPARQL BGP queries through the
+four interfaces, and compare the paper's cost metrics.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+from repro.core import (BGP, C, EngineConfig, QueryEngine, TriplePattern, V,
+                        count_stars, results_as_numpy, star_decomposition)
+from repro.rdf import Dictionary, TripleStore
+
+# ---------------------------------------------------------------- the graph
+# A tiny DBpedia-flavoured graph around the paper's Listing 1.1.
+facts = [
+    ("dbr:Jens_Bratlie", "dbo:nationality", "dbr:Norway"),
+    ("dbr:Jens_Bratlie", "dbo:award", "dbr:Order_of_St_Olav"),
+    ("dbr:Jens_Bratlie", "dbo:birthDate", '"1856-01-17"'),
+    ("dbr:Carl_Bildt", "dbo:nationality", "dbr:Germany"),
+    ("dbr:Carl_Bildt", "dbo:award", "dbr:Order_of_St_Olav"),
+    ("dbr:Carl_Bildt", "dbo:birthDate", '"1850-08-15"'),
+    ("dbr:Someone_Else", "dbo:nationality", "dbr:Norway"),
+    ("dbr:Someone_Else", "dbo:award", "dbr:Nobel_Prize"),
+    ("dbr:Someone_Else", "dbo:birthDate", '"1901-05-02"'),
+]
+d = Dictionary()
+triples = d.encode_triples(facts)
+import numpy as np  # noqa: E402
+
+arr = np.array(triples)
+store = TripleStore.build(arr[:, 0], arr[:, 1], arr[:, 2],
+                          n_terms=d.n_terms, n_predicates=d.n_predicates)
+print(f"graph: {store.n_triples} triples, {d.n_predicates} predicates")
+
+# ---------------------------------------------------------------- the query
+# Listing 1.1: Germans and Norwegians who won the same award + birth dates.
+NAT = d.lookup_predicate("dbo:nationality")
+AWARD = d.lookup_predicate("dbo:award")
+BIRTH = d.lookup_predicate("dbo:birthDate")
+GER = d.lookup_term("dbr:Germany")
+NOR = d.lookup_term("dbr:Norway")
+p1, p2, aw, bd1, bd2 = range(5)
+query = BGP((
+    TriplePattern(V(p1), C(NAT), C(GER)),
+    TriplePattern(V(p1), C(AWARD), V(aw)),
+    TriplePattern(V(p1), C(BIRTH), V(bd1)),
+    TriplePattern(V(p2), C(NAT), C(NOR)),
+    TriplePattern(V(p2), C(AWARD), V(aw)),
+    TriplePattern(V(p2), C(BIRTH), V(bd2)),
+), n_vars=5)
+
+print(f"\nstar decomposition: {count_stars(query)} stars")
+for sp in star_decomposition(query):
+    print("  ", sp)
+
+# ------------------------------------------------------------ four engines
+print(f"\n{'interface':<10} {'NRS':>5} {'NTB':>8} {'srv_ops':>9} {'results':>8}")
+for iface in ["tpf", "brtpf", "spf", "endpoint"]:
+    eng = QueryEngine(store, EngineConfig(interface=iface))
+    tbl, stats = eng.run(query)
+    print(f"{iface:<10} {int(stats.nrs):>5} {int(stats.ntb):>8} "
+          f"{int(stats.server_ops):>9} {int(stats.n_results):>8}")
+
+rows = results_as_numpy(QueryEngine(store, EngineConfig()).run(query)[0])
+print("\nanswers (decoded):")
+for r in rows:
+    print("  ", d.decode_term(r[p1]), "&", d.decode_term(r[p2]),
+          "share", d.decode_term(r[aw]),
+          f"(born {d.decode_term(r[bd1])} / {d.decode_term(r[bd2])})")

@@ -1,0 +1,45 @@
+"""End-to-end driver #1: a batched SPF query service over a WatDiv graph.
+
+Generates a WatDiv instance and the paper's five query loads, serves them
+through all four interfaces, and prints the Fig. 5/7 metrics (modeled
+throughput at 64 clients, NRS, NTB).  This is the paper's experiment in
+miniature, runnable on one CPU:
+
+    PYTHONPATH=src python examples/spf_query_service.py [--scale 100]
+"""
+
+import argparse
+
+import numpy as np
+
+from repro.benchlib import load_throughput, run_load
+from repro.rdf import TripleStore, generate_query_load, generate_watdiv
+from repro.rdf.queries import QueryLoadConfig
+from repro.rdf.watdiv import WatDivConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=60)
+    ap.add_argument("--queries", type=int, default=5)
+    ap.add_argument("--clients", type=int, default=64)
+    args = ap.parse_args()
+
+    g = generate_watdiv(WatDivConfig(scale=args.scale))
+    store = TripleStore.build(g.s, g.p, g.o, n_terms=g.n_terms,
+                              n_predicates=g.n_predicates)
+    print(f"WatDiv: {store.n_triples} triples")
+    print(f"{'load':<9} {'iface':<9} {'tput q/min':>11} {'NRS':>7} {'NTB kB':>9}")
+    for load in ["1-star", "2-stars", "3-stars", "paths"]:
+        qs = generate_query_load(g, store, load,
+                                 QueryLoadConfig(n_queries=args.queries))
+        for iface in ["tpf", "brtpf", "spf", "endpoint"]:
+            stats = run_load(store, qs, iface)
+            tput = load_throughput(store, qs, iface, n_clients=args.clients)
+            nrs = np.mean([int(s.nrs) for s in stats])
+            ntb = np.mean([int(s.ntb) for s in stats]) / 1e3
+            print(f"{load:<9} {iface:<9} {tput:>11.1f} {nrs:>7.1f} {ntb:>9.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""End-to-end driver #2: train a small LM for a few hundred steps.
+
+Uses the real trainer substrate — AdamW, LR schedule, grad clipping,
+checkpointing with resume, metrics logging — on a ~10M-param Qwen2-family
+config with a synthetic token stream.  Loss must fall monotonically-ish;
+this is the framework's "train a model end-to-end on one host" proof.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer import TransformerConfig, init, loss_fn
+from repro.train.checkpoint import CheckpointManager
+from repro.train.optimizer import OptimizerConfig
+from repro.train.trainer import TrainerConfig, init_state, make_train_step
+
+
+def token_stream(vocab: int, batch: int, seq: int, seed: int = 0):
+    """Synthetic Zipf-ish Markov stream (learnable structure, not noise)."""
+    rng = np.random.default_rng(seed)
+    trans = rng.zipf(1.5, size=(64, vocab)) % vocab
+    state = rng.integers(0, 64, batch)
+    while True:
+        toks = np.zeros((batch, seq), np.int32)
+        for t in range(seq):
+            toks[:, t] = trans[state % 64, state % vocab]
+            state = (state * 1103515245 + 12345 + toks[:, t]) % (2**31)
+        yield {"tokens": jnp.asarray(toks)}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = TransformerConfig(
+        name="lm-10m", n_layers=4, d_model=256, n_heads=8, n_kv=4,
+        head_dim=32, d_ff=768, vocab=2048, remat=False)
+    tcfg = TrainerConfig(opt=OptimizerConfig(
+        lr=3e-4, warmup_steps=20, total_steps=args.steps))
+    state = init_state(jax.random.PRNGKey(0), init, cfg, tcfg)
+    n_params = sum(x.size for x in jax.tree.leaves(state["params"]))
+    print(f"params: {n_params / 1e6:.1f}M")
+
+    mgr = CheckpointManager(args.ckpt_dir, keep_n=2)
+    start = 0
+    if args.resume and mgr.latest_step() is not None:
+        state, start = mgr.restore(state)
+        print(f"resumed from step {start}")
+
+    step_fn = make_train_step(loss_fn, cfg, tcfg, donate=False)
+    stream = token_stream(cfg.vocab, args.batch, args.seq)
+    t0 = time.time()
+    first = last = None
+    for it in range(start, args.steps):
+        state, metrics = step_fn(state, next(stream))
+        loss = float(metrics["loss"])
+        if first is None:
+            first = loss
+        last = loss
+        if it % 20 == 0 or it == args.steps - 1:
+            print(f"step {it:4d} loss {loss:.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"({(time.time() - t0):.1f}s)")
+        if it and it % 100 == 0:
+            mgr.save(it, state, blocking=False)
+    mgr.wait()
+    mgr.save(args.steps, state, blocking=True)
+    print(f"final checkpoint at step {args.steps}; loss {first:.3f} -> {last:.3f}")
+    assert last < first, "loss did not improve"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""repro: Star Pattern Fragments (SPF) as a production JAX framework.
+
+x64 is enabled framework-wide: the triple-store composite sort keys are
+int64 (predicate-radix x term-radix products overflow int32 at knowledge-
+graph scale).  All neural-model code uses explicit float dtypes (bf16/f32),
+so enabling x64 does not change model numerics.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+__version__ = "0.1.0"

@@ -1,0 +1,71 @@
+"""Benchmark cost model shared by tests and the benchmark harness.
+
+This container has one CPU core, so wall-clock comparisons between the four
+interfaces would measure noise.  Instead the engines report *exact* counts
+(NRS, NTB, server/client work units), and this module converts them into
+modeled latency/throughput with explicit, paper-plausible constants:
+
+    QET(C) = client_time + NRS x RTT + NTB / BW + server_time x max(1, C/cores)
+
+i.e. requests pay a round-trip, bytes pay wire time, and the shared server
+saturates beyond ``cores`` concurrent clients (the paper's server had 16
+vCPUs; its endpoint crashed at 128 clients — here saturation shows up as
+linear degradation instead of a crash).
+
+The constants are configuration, not measurement — every claim the
+benchmarks make (orderings, ratios) is robust to any RTT/BW in LAN/WAN
+ranges because SPF dominates brTPF/TPF on *both* NRS and NTB.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.core import EngineConfig, QueryEngine
+
+
+@dataclass(frozen=True)
+class CostModel:
+    rtt_s: float = 0.005  # HTTP round trip (LAN)
+    bw_bytes_s: float = 125e6  # 1 Gbit/s
+    op_s: float = 20e-9  # one work unit (probe step / row touched)
+    server_cores: int = 16  # the paper's server
+
+
+def modeled_query_seconds(stats, n_clients: int = 1,
+                          cm: CostModel = CostModel()) -> float:
+    server = int(stats.server_ops) * cm.op_s
+    client = int(stats.client_ops) * cm.op_s
+    wire = int(stats.nrs) * cm.rtt_s + int(stats.ntb) / cm.bw_bytes_s
+    contention = max(1.0, n_clients / cm.server_cores)
+    return client + wire + server * contention
+
+
+def load_throughput(store, queries, interface: str, n_clients: int,
+                    cm: CostModel = CostModel(),
+                    cfg: EngineConfig | None = None) -> float:
+    """Modeled queries/minute for ``n_clients`` concurrent clients, each
+    executing the load one query at a time (the paper's setup)."""
+    cfg = cfg or EngineConfig(interface=interface)
+    if cfg.interface != interface:
+        cfg = EngineConfig(interface=interface, page_size=cfg.page_size,
+                           omega=cfg.omega, cap=cfg.cap)
+    eng = QueryEngine(store, cfg)
+    total_s = 0.0
+    for q in queries:
+        _, stats = eng.run(q)
+        total_s += modeled_query_seconds(stats, n_clients, cm)
+    mean_s = total_s / max(len(queries), 1)
+    return n_clients * 60.0 / mean_s
+
+
+def run_load(store, queries, interface: str,
+             cfg: EngineConfig | None = None):
+    """Run a load, returning per-query stats (for NRS/NTB/QET figures)."""
+    cfg = cfg or EngineConfig(interface=interface)
+    eng = QueryEngine(store, cfg)
+    out = []
+    for q in queries:
+        _, stats = eng.run(q)
+        out.append(stats)
+    return out

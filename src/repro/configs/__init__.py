@@ -1,0 +1,7 @@
+"""Per-architecture configs (assignment sheet) + the paper's own workload.
+
+``--arch <id>`` on the launchers resolves through ``registry.get``.
+"""
+from repro.configs import registry
+from repro.configs.registry import (all_archs, get, input_specs,
+                                    model_config_for, shape_defs)

@@ -1,0 +1,7 @@
+"""Config for --arch deepseek-v3-671b (see registry.py for the exact published numbers)."""
+from repro.configs.registry import get
+
+ENTRY = get("deepseek-v3-671b")
+FULL = ENTRY.full
+SMOKE = ENTRY.smoke
+SHAPES = ENTRY.shapes

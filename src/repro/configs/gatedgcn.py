@@ -1,0 +1,7 @@
+"""Config for --arch gatedgcn (see registry.py for the exact published numbers)."""
+from repro.configs.registry import get
+
+ENTRY = get("gatedgcn")
+FULL = ENTRY.full
+SMOKE = ENTRY.smoke
+SHAPES = ENTRY.shapes

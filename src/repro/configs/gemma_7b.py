@@ -1,0 +1,7 @@
+"""Config for --arch gemma-7b (see registry.py for the exact published numbers)."""
+from repro.configs.registry import get
+
+ENTRY = get("gemma-7b")
+FULL = ENTRY.full
+SMOKE = ENTRY.smoke
+SHAPES = ENTRY.shapes

@@ -1,0 +1,7 @@
+"""Config for --arch gin-tu (see registry.py for the exact published numbers)."""
+from repro.configs.registry import get
+
+ENTRY = get("gin-tu")
+FULL = ENTRY.full
+SMOKE = ENTRY.smoke
+SHAPES = ENTRY.shapes

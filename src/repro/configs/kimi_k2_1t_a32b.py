@@ -1,0 +1,7 @@
+"""Config for --arch kimi-k2-1t-a32b (see registry.py for the exact published numbers)."""
+from repro.configs.registry import get
+
+ENTRY = get("kimi-k2-1t-a32b")
+FULL = ENTRY.full
+SMOKE = ENTRY.smoke
+SHAPES = ENTRY.shapes

@@ -1,0 +1,7 @@
+"""Config for --arch meshgraphnet (see registry.py for the exact published numbers)."""
+from repro.configs.registry import get
+
+ENTRY = get("meshgraphnet")
+FULL = ENTRY.full
+SMOKE = ENTRY.smoke
+SHAPES = ENTRY.shapes

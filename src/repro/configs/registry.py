@@ -1,0 +1,310 @@
+"""Architecture registry: the 10 assigned archs + the paper's own workload.
+
+Each entry provides:
+- ``full``   — the exact published configuration (assignment sheet);
+- ``smoke``  — a reduced same-family config for CPU tests;
+- ``family`` — "lm" | "moe" | "gnn" | "recsys" (selects model module,
+  sharding rules and step builders);
+- ``shapes`` — the arch's own input-shape set (assignment sheet).
+
+``input_specs(arch, shape, smoke=False)`` returns ShapeDtypeStruct stand-ins
+for every step input (weak-type-correct, shardable, no allocation) — the
+multi-pod dry-run lowers against these.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, replace
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.gnn import GNNConfig
+from repro.models.moe import MoEConfig
+from repro.models.recsys import DeepFMConfig
+from repro.models.transformer import TransformerConfig
+
+
+@dataclass(frozen=True)
+class ArchEntry:
+    name: str
+    family: str
+    full: Any
+    smoke: Any
+    shapes: tuple[str, ...]
+    source: str  # provenance tag from the assignment sheet
+
+
+_REGISTRY: dict[str, ArchEntry] = {}
+
+
+def register(entry: ArchEntry) -> ArchEntry:
+    _REGISTRY[entry.name] = entry
+    return entry
+
+
+def get(name: str) -> ArchEntry:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def all_archs() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+# ======================================================================= LM
+LM_SHAPES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+
+register(ArchEntry(
+    name="glm4-9b", family="lm",
+    full=TransformerConfig(
+        name="glm4-9b", n_layers=40, d_model=4096, n_heads=32, n_kv=2,
+        head_dim=128, d_ff=13696, vocab=151552, act="swiglu", qkv_bias=True,
+        rope_fraction=0.5, rope_theta=10000.0),
+    smoke=TransformerConfig(
+        name="glm4-9b-smoke", n_layers=2, d_model=64, n_heads=4, n_kv=2,
+        head_dim=16, d_ff=128, vocab=256, act="swiglu", qkv_bias=True,
+        rope_fraction=0.5, remat=False),
+    shapes=LM_SHAPES, source="hf:THUDM/glm-4-9b; hf"))
+
+register(ArchEntry(
+    name="gemma-7b", family="lm",
+    full=TransformerConfig(
+        name="gemma-7b", n_layers=28, d_model=3072, n_heads=16, n_kv=16,
+        head_dim=256, d_ff=24576, vocab=256000, act="geglu", qkv_bias=False,
+        tie_embeddings=True, scale_embeddings=True),
+    smoke=TransformerConfig(
+        name="gemma-7b-smoke", n_layers=2, d_model=64, n_heads=4, n_kv=4,
+        head_dim=16, d_ff=192, vocab=256, act="geglu", tie_embeddings=True,
+        scale_embeddings=True, remat=False),
+    shapes=LM_SHAPES, source="arXiv:2403.08295; hf"))
+
+register(ArchEntry(
+    name="qwen2-7b", family="lm",
+    full=TransformerConfig(
+        name="qwen2-7b", n_layers=28, d_model=3584, n_heads=28, n_kv=4,
+        head_dim=128, d_ff=18944, vocab=152064, act="swiglu", qkv_bias=True,
+        rope_theta=1000000.0),
+    smoke=TransformerConfig(
+        name="qwen2-7b-smoke", n_layers=2, d_model=56, n_heads=4, n_kv=2,
+        head_dim=14, d_ff=112, vocab=256, act="swiglu", qkv_bias=True,
+        remat=False),
+    shapes=LM_SHAPES, source="arXiv:2407.10671; hf"))
+
+register(ArchEntry(
+    name="deepseek-v3-671b", family="moe",
+    full=MoEConfig(
+        name="deepseek-v3-671b", n_layers=61, n_dense_layers=3, d_model=7168,
+        n_heads=128, d_ff=2048, d_ff_dense=18432, vocab=129280,
+        n_experts=256, top_k=8, n_shared=1, attn_type="mla",
+        q_lora_rank=1536, kv_lora_rank=512, qk_nope_dim=128, qk_rope_dim=64,
+        v_head_dim=128, use_mtp=True),
+    smoke=MoEConfig(
+        name="deepseek-v3-smoke", n_layers=3, n_dense_layers=1, d_model=64,
+        n_heads=4, d_ff=64, d_ff_dense=128, vocab=256, n_experts=8, top_k=2,
+        n_shared=1, attn_type="mla", q_lora_rank=48, kv_lora_rank=32,
+        qk_nope_dim=16, qk_rope_dim=8, v_head_dim=16, use_mtp=True,
+        remat=False),
+    shapes=LM_SHAPES, source="arXiv:2412.19437; hf"))
+
+register(ArchEntry(
+    name="kimi-k2-1t-a32b", family="moe",
+    full=MoEConfig(
+        name="kimi-k2-1t-a32b", n_layers=61, n_dense_layers=1, d_model=7168,
+        n_heads=64, head_dim=112, n_kv=8, d_ff=2048, d_ff_dense=18432,
+        vocab=163840, n_experts=384, top_k=8, n_shared=1, attn_type="gqa",
+        use_mtp=False),
+    smoke=MoEConfig(
+        name="kimi-k2-smoke", n_layers=3, n_dense_layers=1, d_model=64,
+        n_heads=4, head_dim=16, n_kv=2, d_ff=64, d_ff_dense=128, vocab=256,
+        n_experts=8, top_k=2, n_shared=1, attn_type="gqa", use_mtp=False,
+        remat=False),
+    shapes=LM_SHAPES, source="arXiv:2501.kimi2; unverified (paper-table)"))
+
+
+LM_SHAPE_DEFS = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1, long=True),
+}
+LM_SMOKE_SHAPE_DEFS = {
+    "train_4k": dict(kind="train", seq=64, batch=4),
+    "prefill_32k": dict(kind="prefill", seq=128, batch=2),
+    "decode_32k": dict(kind="decode", seq=128, batch=4),
+    "long_500k": dict(kind="decode", seq=256, batch=1, long=True),
+}
+
+
+# ====================================================================== GNN
+GNN_SHAPES = ("full_graph_sm", "minibatch_lg", "ogb_products", "molecule")
+
+register(ArchEntry(
+    name="gin-tu", family="gnn",
+    full=GNNConfig(name="gin-tu", arch="gin", n_layers=5, d_hidden=64),
+    smoke=GNNConfig(name="gin-tu-smoke", arch="gin", n_layers=2, d_hidden=16),
+    shapes=GNN_SHAPES, source="arXiv:1810.00826; paper"))
+
+register(ArchEntry(
+    name="dimenet", family="gnn",
+    full=GNNConfig(name="dimenet", arch="dimenet", n_layers=6, d_hidden=128,
+                   n_bilinear=8, n_spherical=7, n_radial=6),
+    smoke=GNNConfig(name="dimenet-smoke", arch="dimenet", n_layers=2,
+                    d_hidden=16, n_bilinear=4, n_spherical=3, n_radial=3),
+    shapes=GNN_SHAPES, source="arXiv:2003.03123; unverified"))
+
+register(ArchEntry(
+    name="meshgraphnet", family="gnn",
+    full=GNNConfig(name="meshgraphnet", arch="meshgraphnet", n_layers=15,
+                   d_hidden=128, mlp_layers=2),
+    smoke=GNNConfig(name="meshgraphnet-smoke", arch="meshgraphnet",
+                    n_layers=2, d_hidden=16, mlp_layers=2),
+    shapes=GNN_SHAPES, source="arXiv:2010.03409; unverified"))
+
+register(ArchEntry(
+    name="gatedgcn", family="gnn",
+    full=GNNConfig(name="gatedgcn", arch="gatedgcn", n_layers=16,
+                   d_hidden=70),
+    smoke=GNNConfig(name="gatedgcn-smoke", arch="gatedgcn", n_layers=2,
+                    d_hidden=16),
+    shapes=GNN_SHAPES, source="arXiv:2003.00982; paper"))
+
+# fanout (15, 10) from 1024 seed nodes
+_MB_NODES = 1024 * (1 + 15 + 15 * 10)  # 169_984 (divides 512)
+_MB_EDGES = 1024 * (15 + 15 * 10)  # 168_960 (divides 512)
+# Shardable dims are padded UP to multiples of 512 (the max mesh size):
+# JAX NamedShardings require divisibility, and the data layer pads with
+# masked entries anyway (out-of-range-predicate padding, same trick as the
+# triple store).  True sizes in comments.
+GNN_SHAPE_DEFS = {
+    "full_graph_sm": dict(n_nodes=2708, n_edges=10752,  # 10_556 true edges
+                          d_feat=1433, task="node", n_classes=7),
+    "minibatch_lg": dict(n_nodes=_MB_NODES, n_edges=_MB_EDGES, d_feat=602,
+                         task="node", n_classes=41, sampled=True),
+    "ogb_products": dict(n_nodes=2_449_408,  # 2_449_029 true
+                         n_edges=61_866_496,  # 61_859_140 true
+                         d_feat=100, task="node", n_classes=47),
+    "molecule": dict(n_nodes=4096,  # 30x128 = 3840 true
+                     n_edges=64 * 128, d_feat=16,
+                     task="graph", n_classes=2, n_graphs=128),
+}
+GNN_SMOKE_SHAPE_DEFS = {
+    "full_graph_sm": dict(n_nodes=64, n_edges=256, d_feat=24, task="node",
+                          n_classes=7),
+    "minibatch_lg": dict(n_nodes=128, n_edges=256, d_feat=24, task="node",
+                         n_classes=8, sampled=True),
+    "ogb_products": dict(n_nodes=128, n_edges=512, d_feat=16, task="node",
+                         n_classes=8),
+    "molecule": dict(n_nodes=8 * 4, n_edges=16 * 4, d_feat=8, task="graph",
+                     n_classes=2, n_graphs=4),
+}
+
+
+# =================================================================== recsys
+RECSYS_SHAPES = ("train_batch", "serve_p99", "serve_bulk", "retrieval_cand")
+
+register(ArchEntry(
+    name="deepfm", family="recsys",
+    # vocab 2^20 per field: 39 x 1,048,576 = 40,894,464 rows — divides 512
+    # so the table row-shards cleanly over ("data","model")
+    full=DeepFMConfig(name="deepfm", n_fields=39, vocab_per_field=1 << 20,
+                      embed_dim=10, mlp_dims=(400, 400, 400)),
+    smoke=DeepFMConfig(name="deepfm-smoke", n_fields=8, vocab_per_field=100,
+                       embed_dim=4, mlp_dims=(16, 16)),
+    shapes=RECSYS_SHAPES, source="arXiv:1703.04247; paper"))
+
+RECSYS_SHAPE_DEFS = {
+    "train_batch": dict(kind="train", batch=65536),
+    "serve_p99": dict(kind="serve", batch=512),
+    "serve_bulk": dict(kind="serve", batch=262144),
+    "retrieval_cand": dict(kind="retrieval", batch=1,
+                           n_cand=1_000_448),  # 1M padded to /512
+}
+RECSYS_SMOKE_SHAPE_DEFS = {
+    "train_batch": dict(kind="train", batch=64),
+    "serve_p99": dict(kind="serve", batch=16),
+    "serve_bulk": dict(kind="serve", batch=128),
+    "retrieval_cand": dict(kind="retrieval", batch=1, n_cand=512),
+}
+
+
+# ============================================================= input specs
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def shape_defs(arch: str, smoke: bool = False) -> dict:
+    e = get(arch)
+    if e.family in ("lm", "moe"):
+        return LM_SMOKE_SHAPE_DEFS if smoke else LM_SHAPE_DEFS
+    if e.family == "gnn":
+        return GNN_SMOKE_SHAPE_DEFS if smoke else GNN_SHAPE_DEFS
+    return RECSYS_SMOKE_SHAPE_DEFS if smoke else RECSYS_SHAPE_DEFS
+
+
+def input_specs(arch: str, shape: str, smoke: bool = False) -> dict:
+    """ShapeDtypeStruct stand-ins for the step inputs of (arch, shape)."""
+    e = get(arch)
+    cfg = e.smoke if smoke else e.full
+    defs = shape_defs(arch, smoke)[shape]
+
+    if e.family in ("lm", "moe"):
+        kind = defs["kind"]
+        if kind in ("train", "prefill"):
+            return {"tokens": _sds((defs["batch"], defs["seq"]), jnp.int32)}
+        # decode: one new token against a filled cache
+        specs = {"token": _sds((defs["batch"],), jnp.int32)}
+        if e.family == "moe" and cfg.attn_type == "mla":
+            specs["cache"] = {"latent": _sds(
+                (cfg.n_layers, defs["batch"], defs["seq"],
+                 cfg.kv_lora_rank + cfg.qk_rope_dim), jnp.bfloat16)}
+        else:
+            kv = (cfg.n_layers, defs["batch"], cfg.n_kv, defs["seq"],
+                  cfg.head_dim)
+            specs["cache"] = {"k": _sds(kv, jnp.bfloat16),
+                              "v": _sds(kv, jnp.bfloat16)}
+        return specs
+
+    if e.family == "gnn":
+        n, m = defs["n_nodes"], defs["n_edges"]
+        specs = {
+            "node_feat": _sds((n, defs["d_feat"]), jnp.float32),
+            "edge_index": _sds((2, m), jnp.int32),
+            "labels": _sds((defs.get("n_graphs", n),), jnp.int32),
+        }
+        if cfg.arch == "dimenet":
+            specs["positions"] = _sds((n, 3), jnp.float32)
+            specs["triplet_index"] = _sds((2, 4 * m), jnp.int32)
+        if cfg.arch in ("gatedgcn", "meshgraphnet"):
+            specs["edge_feat"] = _sds((m, max(cfg.d_edge_in, 1)), jnp.float32)
+        if defs.get("task") == "graph":
+            specs["graph_ids"] = _sds((n,), jnp.int32)
+        else:
+            specs["label_mask"] = _sds((n,), jnp.float32)
+        return specs
+
+    # recsys
+    kind = defs["kind"]
+    if kind in ("train", "serve"):
+        specs = {"ids": _sds((defs["batch"], cfg.n_fields), jnp.int32)}
+        if kind == "train":
+            specs["labels"] = _sds((defs["batch"],), jnp.float32)
+        return specs
+    return {"query_ids": _sds((1, cfg.n_fields), jnp.int32),
+            "cand_ids": _sds((defs["n_cand"], cfg.n_fields), jnp.int32)}
+
+
+def model_config_for(arch: str, shape: str, smoke: bool = False) -> Any:
+    """Arch config adjusted per shape (GNN input dims / classes / task)."""
+    e = get(arch)
+    cfg = e.smoke if smoke else e.full
+    if e.family == "gnn":
+        defs = shape_defs(arch, smoke)[shape]
+        cfg = replace(cfg, d_in=defs["d_feat"], n_classes=defs["n_classes"],
+                      task="graph" if defs.get("task") == "graph" else "node",
+                      n_graphs=defs.get("n_graphs", 1))
+    return cfg

@@ -1,0 +1,19 @@
+"""The paper's own workload: WatDiv graph + query loads + SPF engine config.
+
+Paper-faithful constants: LDF page size 50, |Omega| <= 30, four interfaces,
+query loads 1-star/2-stars/3-stars/paths/union, up to 128 concurrent
+clients.  ``scale=85_000`` reproduces the ~10M-triple WatDiv instance; the
+CPU benchmarks default to ``scale=200`` (~100k triples) and scale linearly.
+"""
+from repro.core.engine import EngineConfig
+from repro.rdf.watdiv import WatDivConfig
+from repro.rdf.queries import QueryLoadConfig
+
+FULL_GRAPH = WatDivConfig(scale=85_000)
+BENCH_GRAPH = WatDivConfig(scale=200)
+SMOKE_GRAPH = WatDivConfig(scale=20)
+QUERY_LOADS = ("1-star", "2-stars", "3-stars", "paths", "union")
+QUERIES_PER_LOAD = QueryLoadConfig(n_queries=50)
+ENGINES = {i: EngineConfig(interface=i) for i in
+           ("tpf", "brtpf", "spf", "endpoint")}
+CLIENT_COUNTS = tuple(2 ** i for i in range(8))  # 1..128 concurrent clients

@@ -1,0 +1,155 @@
+"""Step builders: (arch, shape) -> the jittable function the cell runs.
+
+The same builders serve the smoke tests (reduced configs, real arrays, one
+real step on CPU) and the multi-pod dry-run (full configs,
+ShapeDtypeStruct stand-ins, ``.lower().compile()`` only).
+
+Cell kinds:
+- ``train``      LM/MoE/GNN/recsys: full train step (fwd+bwd+AdamW update);
+- ``prefill``    LM/MoE: batched forward over the full sequence;
+- ``decode``     LM/MoE: one-token decode against a filled KV/latent cache;
+- ``serve``      recsys: batched scoring forward;
+- ``retrieval``  recsys: 1 query x 1M candidates batched dot.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry as R
+from repro.models import gnn as gnn_mod
+from repro.models import moe as moe_mod
+from repro.models import recsys as rec_mod
+from repro.models import transformer as tfm_mod
+from repro.train.optimizer import OptimizerConfig
+from repro.train.trainer import TrainerConfig, init_state, make_train_step
+
+
+FAMILY_MODULES = {"lm": tfm_mod, "moe": moe_mod, "gnn": gnn_mod,
+                  "recsys": rec_mod}
+
+
+@dataclass
+class CellSpec:
+    arch: str
+    shape: str
+    kind: str
+    fn: Callable  # (state_or_params, inputs...) -> outputs
+    arg_specs: tuple  # ShapeDtypeStructs (pre-sharding)
+    model_cfg: Any
+    family: str
+
+
+def _opt_cfg(family: str, cfg: Any) -> OptimizerConfig:
+    # int8 moments for the giant MoE models (see optimizer.py)
+    if family == "moe" and getattr(cfg, "n_experts", 0) >= 64:
+        return OptimizerConfig(moment_dtype="int8")
+    return OptimizerConfig()
+
+
+def state_specs(arch: str, smoke: bool, shape: str) -> tuple[Any, Any]:
+    """(state ShapeDtypeStruct tree, model cfg) via eval_shape (no alloc)."""
+    e = R.get(arch)
+    cfg = R.model_config_for(arch, shape, smoke)
+    mod = FAMILY_MODULES[e.family]
+    tcfg = TrainerConfig(opt=_opt_cfg(e.family, cfg))
+    state = jax.eval_shape(
+        lambda: init_state(jax.random.PRNGKey(0), mod.init, cfg, tcfg))
+    return state, cfg
+
+
+def build_cell(arch: str, shape: str, smoke: bool = False,
+               overrides: dict | None = None) -> CellSpec:
+    from dataclasses import replace as _replace
+    e = R.get(arch)
+    cfg = R.model_config_for(arch, shape, smoke)
+    if overrides:
+        valid = {k: v for k, v in overrides.items() if hasattr(cfg, k)}
+        cfg = _replace(cfg, **valid)
+    mod = FAMILY_MODULES[e.family]
+    specs = R.input_specs(arch, shape, smoke)
+    defs = R.shape_defs(arch, smoke)[shape]
+    kind = defs.get("kind", "train")
+    tcfg = TrainerConfig(opt=_opt_cfg(e.family, cfg))
+
+    if e.family == "gnn":
+        kind = "train"  # every GNN cell exercises the training step
+
+    if kind == "train":
+        def loss(params, batch, c):
+            return mod.loss_fn(params, batch, c)
+
+        def step(state, batch):
+            def one(p):
+                return loss(p, batch, cfg)
+            lv, grads = jax.value_and_grad(one)(state["params"])
+            from repro.train.optimizer import apply_updates
+            new_p, new_o = apply_updates(state["params"], grads,
+                                         state["opt"], tcfg.opt)
+            return {"params": new_p, "opt": new_o}, lv
+
+        state_spec = jax.eval_shape(
+            lambda: init_state(jax.random.PRNGKey(0), mod.init, cfg, tcfg))
+        return CellSpec(arch, shape, "train", step, (state_spec, specs),
+                        cfg, e.family)
+
+    if kind == "prefill":
+        def step(params, batch):
+            out = mod.forward(params, batch["tokens"], cfg)
+            return out[0] if isinstance(out, tuple) else out
+
+        params_spec = jax.eval_shape(
+            lambda: mod.init(jax.random.PRNGKey(0), cfg))
+        return CellSpec(arch, shape, "prefill", step, (params_spec, specs),
+                        cfg, e.family)
+
+    if kind == "decode":
+        def step(params, token, cache):
+            pos = jnp.asarray(cache_len(specs) - 1, jnp.int32)
+            return mod.decode_step(params, token, cache, pos, cfg)
+
+        params_spec = jax.eval_shape(
+            lambda: mod.init(jax.random.PRNGKey(0), cfg))
+        return CellSpec(arch, shape, "decode", step,
+                        (params_spec, specs["token"], specs["cache"]),
+                        cfg, e.family)
+
+    if kind == "serve":
+        def step(params, batch):
+            return rec_mod.forward(params, batch, cfg)
+
+        params_spec = jax.eval_shape(
+            lambda: mod.init(jax.random.PRNGKey(0), cfg))
+        return CellSpec(arch, shape, "serve", step, (params_spec, specs),
+                        cfg, e.family)
+
+    if kind == "retrieval":
+        def step(params, batch):
+            return rec_mod.retrieval_scores(params, batch["query_ids"],
+                                            batch["cand_ids"], cfg)
+
+        params_spec = jax.eval_shape(
+            lambda: mod.init(jax.random.PRNGKey(0), cfg))
+        return CellSpec(arch, shape, "retrieval", step, (params_spec, specs),
+                        cfg, e.family)
+
+    raise ValueError(kind)
+
+
+def cache_len(specs: dict) -> int:
+    cache = specs["cache"]
+    if "latent" in cache:
+        return cache["latent"].shape[2]
+    return cache["k"].shape[3]
+
+
+def all_cells() -> list[tuple[str, str]]:
+    out = []
+    for arch in R.all_archs():
+        for shape in R.get(arch).shapes:
+            out.append((arch, shape))
+    return out

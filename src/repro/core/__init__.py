@@ -1,0 +1,36 @@
+"""The paper's primary contribution: the Star Pattern Fragments interface.
+
+- :mod:`repro.core.patterns`      — pattern algebra + star decomposition (Def. 7)
+- :mod:`repro.core.bindings`      — static-shape solution-mapping tables
+- :mod:`repro.core.server`        — seeded star / triple-pattern evaluation (Def. 5)
+- :mod:`repro.core.engine`        — the four interfaces (TPF / brTPF / SPF / endpoint)
+  with the paper's NRS / NTB / load accounting
+- :mod:`repro.core.distributed`   — shard_map multi-device runtime (subject-hash
+  sharded store; collectives are the "network")
+- :mod:`repro.core.oracle`        — brute-force ground truth (tests)
+"""
+
+from repro.core.patterns import (
+    BGP,
+    C,
+    StarPattern,
+    Term,
+    TriplePattern,
+    V,
+    count_stars,
+    star_decomposition,
+)
+from repro.core.engine import (
+    INTERFACES,
+    EngineConfig,
+    QueryEngine,
+    QueryStats,
+    results_as_numpy,
+)
+
+__all__ = [
+    "BGP", "C", "StarPattern", "Term", "TriplePattern", "V",
+    "count_stars", "star_decomposition",
+    "INTERFACES", "EngineConfig", "QueryEngine", "QueryStats",
+    "results_as_numpy",
+]

@@ -1,0 +1,162 @@
+"""Static-shape solution-mapping tables and vectorised join primitives.
+
+JAX needs static shapes, so a set of solution mappings (the paper's Omega /
+intermediate results) is a fixed-capacity table:
+
+    rows    int32[cap, n_vars]   (-1 = unbound)
+    valid   bool[cap]            valid rows form a prefix (tables are kept
+                                 compacted after filtering steps)
+    overflow bool                capacity was exceeded somewhere upstream —
+                                 the analogue of the paper's 10-min timeout.
+
+The two primitives everything else is built from:
+
+- ``eqrange``: vectorised equal-range binary search of composite keys into a
+  sorted key column (one ``searchsorted`` pair).
+- ``expand``: given per-row runs ``[lo_i, hi_i)``, enumerate (row, element)
+  pairs into a fresh table of capacity ``cap`` via cumsum + searchsorted —
+  the standard prefix-sum trick for ragged expansion under static shapes.
+
+These are exactly the operations the SPF server's star evaluation and the
+client's bind joins decompose into; the Pallas ``sorted_probe`` kernel is a
+fused fast path for ``eqrange`` on VMEM-tiled runs.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+UNBOUND = jnp.int32(-1)
+
+
+class BindingTable(NamedTuple):
+    rows: jnp.ndarray  # int32[cap, n_vars]
+    valid: jnp.ndarray  # bool[cap]
+    overflow: jnp.ndarray  # bool scalar
+
+    @property
+    def cap(self) -> int:
+        return self.rows.shape[0]
+
+    @property
+    def n_vars(self) -> int:
+        return self.rows.shape[1]
+
+    def count(self) -> jnp.ndarray:
+        return jnp.sum(self.valid.astype(jnp.int64))
+
+
+def unit_table(cap: int, n_vars: int) -> BindingTable:
+    """Table with a single all-unbound row — the evaluation seed (Omega with
+    the empty mapping), matching Def. 5's empty-Omega case."""
+    rows = jnp.full((cap, n_vars), UNBOUND, dtype=jnp.int32)
+    valid = jnp.zeros((cap,), dtype=bool).at[0].set(True)
+    return BindingTable(rows, valid, jnp.asarray(False))
+
+
+def empty_table(cap: int, n_vars: int) -> BindingTable:
+    rows = jnp.full((cap, n_vars), UNBOUND, dtype=jnp.int32)
+    return BindingTable(rows, jnp.zeros((cap,), bool), jnp.asarray(False))
+
+
+# --------------------------------------------------------------------------
+# search primitives
+# --------------------------------------------------------------------------
+
+def eqrange(sorted_keys: jnp.ndarray, query_keys: jnp.ndarray
+            ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-query equal range ``[lo, hi)`` in a globally sorted key array."""
+    lo = jnp.searchsorted(sorted_keys, query_keys, side="left")
+    hi = jnp.searchsorted(sorted_keys, query_keys, side="right")
+    return lo, hi
+
+
+def searchsorted_in_runs(values: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray,
+                         targets: jnp.ndarray, side: str = "left") -> jnp.ndarray:
+    """Binary search of ``targets[i]`` within ``values[lo[i]:hi[i]]`` (each run
+    individually sorted).  Returns absolute insertion positions.
+
+    Pure bisection with a fixed iteration count (static shapes); this is the
+    jnp oracle for the Pallas ``sorted_probe`` kernel.
+    """
+    n = values.shape[0]
+    steps = max(1, math.ceil(math.log2(max(n, 2))) + 1)
+
+    def body(_, state):
+        lo_, hi_ = state
+        mid = (lo_ + hi_) >> 1
+        v = values[jnp.clip(mid, 0, n - 1)]
+        if side == "left":
+            go_right = v < targets
+        else:
+            go_right = v <= targets
+        lo_ = jnp.where(go_right & (lo_ < hi_), mid + 1, lo_)
+        hi_ = jnp.where((~go_right) & (lo_ < hi_), mid, hi_)
+        return lo_, hi_
+
+    lo_f, _ = jax.lax.fori_loop(0, steps, body, (lo, hi))
+    return lo_f
+
+
+def run_contains(values: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray,
+                 targets: jnp.ndarray) -> jnp.ndarray:
+    """Membership of ``targets[i]`` in the sorted run ``values[lo[i]:hi[i]]``."""
+    pos = searchsorted_in_runs(values, lo, hi, targets, side="left")
+    n = values.shape[0]
+    at = values[jnp.clip(pos, 0, n - 1)]
+    return (pos < hi) & (at == targets)
+
+
+# --------------------------------------------------------------------------
+# ragged expansion
+# --------------------------------------------------------------------------
+
+class Expansion(NamedTuple):
+    src_row: jnp.ndarray  # int32[cap]   source row index per output row
+    flat_idx: jnp.ndarray  # int32[cap]  absolute index into the store array
+    valid: jnp.ndarray  # bool[cap]
+    total: jnp.ndarray  # int64 scalar: true (unclamped) number of outputs
+
+
+def expand(lo: jnp.ndarray, hi: jnp.ndarray, row_valid: jnp.ndarray,
+           cap: int) -> Expansion:
+    """Enumerate (row, run element) pairs for per-row runs ``[lo_i, hi_i)``.
+
+    Output row ``j`` draws from source row ``src = searchsorted(cumdeg, j)``
+    at offset ``j - cumdeg[src-1]``.  Rows with ``row_valid=False`` contribute
+    degree 0.  Output valid rows form a prefix by construction.
+    """
+    deg = jnp.where(row_valid, (hi - lo).astype(jnp.int64), 0)
+    cum = jnp.cumsum(deg)
+    total = cum[-1]
+    starts = cum - deg
+    j = jnp.arange(cap, dtype=jnp.int64)
+    # method="sort": the default scan lowering triggers pathological XLA
+    # constant folding on the (constant) arange at large capacities
+    src = jnp.searchsorted(cum, j, side="right", method="sort")
+    src_c = jnp.clip(src, 0, lo.shape[0] - 1)
+    r = j - starts[src_c]
+    flat = lo[src_c].astype(jnp.int64) + r
+    valid = j < total
+    flat = jnp.where(valid, flat, 0)
+    return Expansion(
+        src_row=src_c.astype(jnp.int32),
+        flat_idx=flat.astype(jnp.int64),
+        valid=valid,
+        total=total,
+    )
+
+
+def compact(table: BindingTable) -> BindingTable:
+    """Stable-partition valid rows to a prefix (cheap argsort on ~valid)."""
+    order = jnp.argsort(~table.valid, stable=True)
+    return BindingTable(table.rows[order], table.valid[order], table.overflow)
+
+
+def set_column(rows: jnp.ndarray, col: int, values: jnp.ndarray) -> jnp.ndarray:
+    return rows.at[:, col].set(values.astype(jnp.int32))

@@ -1,0 +1,289 @@
+"""Distributed SPF runtime: the interface protocols as mesh collectives.
+
+The paper's deployment is servers + clients over HTTP.  On a pod:
+
+- the **server** is the set of devices along mesh axis ``data``, each holding
+  a subject-hash shard of the triple store (``TripleStore.shard_by_subject``);
+- each **client** is a query lane along mesh axis ``model`` (a batch of
+  concurrent clients = the paper's 2^i-client configurations);
+- a **request/response cycle** is one collective exchange along ``data``:
+  the lane's current solution-mapping table Omega (replicated over ``data``)
+  seeds local evaluation on every shard, and shard-local results are
+  ``all_gather``-ed back to the lane.
+
+Because star-pattern matches share a subject and the store is subject-hash
+sharded, *server-side star joins never communicate* — only star-level
+results cross the network.  TPF/brTPF-granularity engines must gather after
+every triple pattern instead, so their collective schedule is strictly
+larger: this module makes the paper's NTB/NRS claims *measurable in HLO*
+(see launch/roofline.py which parses the lowered collectives).
+
+The multi-pod mesh adds a ``pod`` axis that replicates the store (the
+paper's availability argument) and splits the client population.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core.bindings import BindingTable, compact, unit_table
+from repro.core.engine import EngineConfig, QueryPlan, plan_query
+from repro.core.patterns import BGP
+from repro.core.server import eval_unit
+from repro.rdf.store import StoreArrays, TripleStore
+
+
+class DistStats(NamedTuple):
+    """Per-lane traffic account (analytic, device scalars)."""
+
+    rounds: jnp.ndarray  # collective rounds (the NRS analogue)
+    gathered_rows: jnp.ndarray  # rows crossing the network (NTB analogue)
+    gathered_bytes: jnp.ndarray
+    server_ops: jnp.ndarray
+    n_results: jnp.ndarray
+    overflow: jnp.ndarray
+
+
+@dataclass(frozen=True)
+class DistConfig:
+    cap: int = 2048  # per-lane table capacity
+    shard_cap: int = 1024  # per-shard local result capacity
+    data_axis: str = "data"
+    model_axis: str = "model"
+    pod_axis: str | None = None  # set for the multi-pod mesh
+    # beyond-paper optimisation (EXPERIMENTS.md §Perf): when a unit's
+    # subject is already bound, each Omega row can only match on the shard
+    # its subject hashes to — mask the other shards' evaluation instead of
+    # probing redundantly everywhere (server work / HBM reads ~ /n_shards)
+    owner_masking: bool = False
+
+
+def _subject_shard_jnp(s: jnp.ndarray, n_shards: int) -> jnp.ndarray:
+    """splitmix64 finaliser, must match rdf.store._subject_hash."""
+    x = s.astype(jnp.uint64)
+    x = (x ^ (x >> jnp.uint64(30))) * jnp.uint64(0xBF58476D1CE4E5B9)
+    x = (x ^ (x >> jnp.uint64(27))) * jnp.uint64(0x94D049BB133111EB)
+    x = x ^ (x >> jnp.uint64(31))
+    return ((x & jnp.uint64(0x7FFFFFFFFFFFFFFF)).astype(jnp.int64)
+            % n_shards).astype(jnp.int32)
+
+
+def _lane_eval(plans: tuple, n_vars: int, cfg: DistConfig, radix: int,
+               interface: str, dev: StoreArrays, const_vec: jnp.ndarray
+               ) -> tuple[jnp.ndarray, jnp.ndarray, DistStats]:
+    """Evaluate one query lane against the local shard, gathering along
+    ``data`` after every unit.  Runs *inside* shard_map.
+
+    ``dev`` is the local shard's index arrays; ``const_vec`` the lane's
+    constants.  Returns (rows, valid, stats); rows/valid are the lane's final
+    table (replicated along ``data``).
+    """
+    axis = cfg.data_axis
+    n_shards = jax.lax.axis_size(axis)
+    table = unit_table(cfg.cap, max(n_vars, 1))
+    rounds = jnp.int64(0)
+    g_rows = jnp.int64(0)
+    g_bytes = jnp.int64(0)
+    server_ops = jnp.int64(0)
+
+    my_shard = jax.lax.axis_index(axis)
+    for up in plans:
+        # --- server side: local (collective-free) unit evaluation ---------
+        valid_in = table.valid
+        first = up.branches[0]
+        if cfg.owner_masking and first.case.startswith("probe"):
+            # bound subject: only the owning shard can match each row
+            if first.subj_src[0] == "var":
+                subj = table.rows[:, first.subj_src[1]].astype(jnp.int64)
+            else:
+                subj = jnp.broadcast_to(const_vec[first.subj_src[1]],
+                                        table.valid.shape)
+            owner = _subject_shard_jnp(subj, n_shards)
+            valid_in = table.valid & (owner == my_shard)
+        local = BindingTable(table.rows, valid_in, table.overflow)
+        local, ops = eval_unit(dev, radix, up, const_vec, local)
+        # keep at most shard_cap local rows (page buffer)
+        local = compact(local)
+        keep = jnp.arange(cfg.cap) < cfg.shard_cap
+        local = BindingTable(local.rows,
+                             local.valid & keep,
+                             local.overflow | jnp.any(local.valid & ~keep))
+        server_ops = server_ops + ops
+
+        # --- network: shard-local results -> client lane ------------------
+        rows_g = jax.lax.all_gather(local.rows[: cfg.shard_cap], axis)
+        valid_g = jax.lax.all_gather(local.valid[: cfg.shard_cap], axis)
+        rows_flat = rows_g.reshape(n_shards * cfg.shard_cap, -1)
+        valid_flat = valid_g.reshape(n_shards * cfg.shard_cap)
+        n_found = jnp.sum(valid_flat.astype(jnp.int64))
+        # rebuild the lane table (client state, replicated along data)
+        order = jnp.argsort(~valid_flat, stable=True)
+        new_rows = rows_flat[order]
+        new_valid = valid_flat[order]
+        gathered = n_shards * cfg.shard_cap
+        if gathered >= cfg.cap:
+            new_rows = new_rows[: cfg.cap]
+            new_valid = new_valid[: cfg.cap]
+        else:
+            pad = cfg.cap - gathered
+            new_rows = jnp.concatenate(
+                [new_rows, jnp.full((pad, new_rows.shape[1]), -1, jnp.int32)])
+            new_valid = jnp.concatenate([new_valid, jnp.zeros((pad,), bool)])
+        overflow = local.overflow | (n_found > cfg.cap)
+        table = BindingTable(new_rows, new_valid, overflow)
+
+        rounds = rounds + 1
+        g_rows = g_rows + n_found
+        # bytes actually moved by the all_gather (both arrays, all shards)
+        g_bytes = g_bytes + n_shards * cfg.shard_cap * (new_rows.shape[1] * 4 + 1)
+
+    stats = DistStats(
+        rounds=rounds,
+        gathered_rows=g_rows,
+        gathered_bytes=g_bytes,
+        server_ops=jax.lax.psum(server_ops, axis),
+        n_results=table.count(),
+        overflow=table.overflow,
+    )
+    return table.rows, table.valid, stats
+
+
+class DistributedEngine:
+    """Batched multi-device query engine for one interface granularity.
+
+    A *step* evaluates a batch of structurally identical queries (one plan
+    signature), one lane per ``model``-axis (x ``pod``-axis) slot.  This is
+    the unit the dry-run lowers and the roofline analyses: its collective
+    schedule IS the interface's network behaviour.
+    """
+
+    def __init__(self, store: TripleStore, mesh: Mesh,
+                 cfg: EngineConfig, dcfg: DistConfig | None = None):
+        self.store = store
+        self.mesh = mesh
+        self.cfg = cfg
+        self.dcfg = dcfg or DistConfig()
+        if self.dcfg.pod_axis and self.dcfg.pod_axis not in mesh.axis_names:
+            self.dcfg = replace(self.dcfg, pod_axis=None)
+        self._n_data = mesh.shape[self.dcfg.data_axis]
+        self._stacked_cache: StoreArrays | None = None
+        self._cache: dict = {}
+
+    @property
+    def _stacked(self) -> StoreArrays:
+        """Sharded-store arrays, built lazily (dry-run never materialises)."""
+        if self._stacked_cache is None:
+            self._stacked_cache = self.store.stacked_shard_arrays(self._n_data)
+        return self._stacked_cache
+
+    # -------------------------------------------------------------- planning
+    def plan_batch(self, queries: list[BGP]) -> tuple[QueryPlan, np.ndarray]:
+        """Plan a batch; all queries must share the plan signature."""
+        plans = [plan_query(self.store, q, self.cfg) for q in queries]
+        sig = plans[0].signature
+        for p in plans[1:]:
+            if p.signature != sig:
+                raise ValueError("batch must be plan-homogeneous; group queries"
+                                 " by signature first (see group_by_signature)")
+        consts = np.stack([np.asarray(p.consts, np.int64) for p in plans])
+        return plans[0], consts
+
+    def group_by_signature(self, queries: list[BGP]) -> dict[tuple, list[BGP]]:
+        groups: dict[tuple, list[BGP]] = {}
+        for q in queries:
+            sig = plan_query(self.store, q, self.cfg).signature
+            groups.setdefault(sig, []).append(q)
+        return groups
+
+    # -------------------------------------------------------------- execution
+    def make_step(self, plan: QueryPlan, batch: int):
+        """Build the jitted shard_map step for ``batch`` query lanes."""
+        dcfg = self.dcfg
+        mesh = self.mesh
+        lane_axes = (dcfg.pod_axis, dcfg.model_axis) if dcfg.pod_axis \
+            else (dcfg.model_axis,)
+        n_lane_slots = 1
+        for a in lane_axes:
+            n_lane_slots *= mesh.shape[a]
+        if batch % n_lane_slots:
+            raise ValueError(f"batch {batch} not divisible by lane slots "
+                             f"{n_lane_slots}")
+        per_lane = batch // n_lane_slots
+
+        store_spec = StoreArrays(*[P(dcfg.data_axis) for _ in range(6)])
+        const_spec = P(lane_axes if len(lane_axes) > 1 else lane_axes[0])
+
+        def lane_fn(dev, const_vec):
+            return _lane_eval(plan.units, plan.n_vars, dcfg, self.store.radix,
+                              plan.interface, dev, const_vec)
+
+        def step(stacked: StoreArrays, const_batch: jnp.ndarray):
+            # const_batch: [batch, n_consts]
+            def shard_fn(dev: StoreArrays, consts_local: jnp.ndarray):
+                dev = StoreArrays(*[a[0] for a in dev])  # drop shard axis
+                rows, valid, stats = jax.vmap(
+                    lambda cv: lane_fn(dev, cv))(consts_local)
+                return rows, valid, stats
+
+            out_lane_spec = const_spec
+            return jax.shard_map(
+                shard_fn, mesh=mesh,
+                in_specs=(store_spec, const_spec),
+                out_specs=(out_lane_spec, out_lane_spec,
+                           DistStats(*[out_lane_spec] * 6)),
+                check_vma=False,
+            )(stacked, const_batch)
+
+        return jax.jit(step), per_lane
+
+    def run_batch(self, queries: list[BGP]):
+        plan, consts = self.plan_batch(queries)
+        step, _ = self._get_step(plan, consts.shape[0])
+        rows, valid, stats = step(self._stacked, jnp.asarray(consts))
+        return rows, valid, stats
+
+    def _get_step(self, plan: QueryPlan, batch: int):
+        key = (plan.signature, batch)
+        if key not in self._cache:
+            self._cache[key] = self.make_step(plan, batch)
+        return self._cache[key]
+
+    # ---------------------------------------------------------------- dry-run
+    def lower_step(self, plan: QueryPlan, batch: int,
+                   shard_len: int | None = None):
+        """Lower + compile the step for dry-run / roofline analysis.
+
+        ``shard_len`` overrides the per-shard triple count so the production
+        mesh can be dry-run without materialising a sharded store (shapes
+        only, ShapeDtypeStruct stand-ins).
+        """
+        step, _ = self.make_step(plan, batch)
+        n_consts = len(plan.consts)
+        if shard_len is None:
+            shard_len = -(-self.store.n_triples // self._n_data) + 64
+        D = self._n_data
+        ds = NamedSharding(self.mesh, P(self.dcfg.data_axis))
+        stacked_spec = StoreArrays(
+            key_ps_pso=jax.ShapeDtypeStruct((D, shard_len), jnp.int64, sharding=ds),
+            s_pso=jax.ShapeDtypeStruct((D, shard_len), jnp.int32, sharding=ds),
+            o_pso=jax.ShapeDtypeStruct((D, shard_len), jnp.int32, sharding=ds),
+            key_po_pos=jax.ShapeDtypeStruct((D, shard_len), jnp.int64, sharding=ds),
+            s_pos=jax.ShapeDtypeStruct((D, shard_len), jnp.int32, sharding=ds),
+            o_pos=jax.ShapeDtypeStruct((D, shard_len), jnp.int32, sharding=ds),
+        )
+        lane_axes = ((self.dcfg.pod_axis, self.dcfg.model_axis)
+                     if self.dcfg.pod_axis else (self.dcfg.model_axis,))
+        const_spec = jax.ShapeDtypeStruct(
+            (batch, n_consts), jnp.int64,
+            sharding=NamedSharding(
+                self.mesh,
+                P(lane_axes if len(lane_axes) > 1 else lane_axes[0])))
+        return step.lower(stacked_spec, const_spec)

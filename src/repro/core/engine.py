@@ -1,0 +1,256 @@
+"""The four RDF interfaces as query engines: SPF, brTPF, TPF, endpoint.
+
+All four share one seeded left-deep evaluator (``server.eval_unit``); they
+differ in (a) unit granularity — star patterns for SPF/endpoint, single
+triple patterns for TPF/brTPF — and (b) the interface cost model:
+
+                 unit        Omega block   where joins run    NRS per unit
+    TPF          triple      1             client             |Omega| (+pages)
+    brTPF        triple      30            server (bind)      ceil(|Omega|/30)
+    SPF          star        30            server (star+bind) ceil(|Omega|/30)
+    endpoint     star        unbounded     server             1 per query
+
+Join order across units: most selective (lowest Def. 6 cardinality
+estimate) first, greedily constrained to units sharing a variable with the
+already-bound set (no accidental cartesian products) — the client strategy
+of Section 5.1.  NRS/NTB are computed *exactly* from result counts inside
+the traced computation; wall-clock throughput modelling on top of these is
+the benchmark layer's job.
+
+Compilation: the whole per-query evaluation (all units + stats) is one
+jitted function keyed by the query's plan signature; constants are routed
+through a traced vector so structurally identical queries share compiles.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, replace
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bindings import BindingTable, unit_table
+from repro.core.patterns import BGP, StarPattern, star_decomposition
+from repro.core.server import UnitPlan, eval_unit, plan_unit
+from repro.rdf.store import StoreArrays, TripleStore
+
+
+INTERFACES = ("tpf", "brtpf", "spf", "endpoint")
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    interface: str = "spf"
+    page_size: int = 50  # LDF page size (paper: 50)
+    omega: int = 30  # max bindings per request (paper: 30)
+    cap: int = 4096  # binding-table capacity (the timeout analogue)
+    max_cap: int = 1 << 20  # overflow retry ceiling (doubling); then give up
+    # wire-format constants for NTB (bytes): pattern/bindings serialisation
+    request_base_bytes: int = 300  # HTTP request overhead
+    page_header_bytes: int = 200  # per-page metadata/controls (Def. 4 M', C')
+    term_bytes: int = 4  # dictionary-encoded term on the wire
+
+
+class QueryStats(NamedTuple):
+    """Per-query cost account (device scalars, all int64)."""
+
+    nrs: jnp.ndarray  # number of requests to the server
+    ntb: jnp.ndarray  # transferred bytes, both directions
+    server_ops: jnp.ndarray  # server-side work units
+    client_ops: jnp.ndarray  # client-side work units
+    n_results: jnp.ndarray
+    overflow: jnp.ndarray  # bool
+
+
+@dataclass(frozen=True)
+class QueryPlan:
+    units: tuple[UnitPlan, ...]
+    n_vars: int
+    consts: tuple[int, ...]
+    interface: str
+
+    @property
+    def signature(self) -> tuple:
+        return (self.interface, self.n_vars,
+                tuple(u.signature for u in self.units))
+
+
+# --------------------------------------------------------------------------
+# planning
+# --------------------------------------------------------------------------
+
+def _units_for_interface(bgp: BGP, interface: str) -> list[StarPattern]:
+    stars = star_decomposition(bgp)
+    if interface in ("spf", "endpoint"):
+        return stars
+    # TPF/brTPF: one unit per triple pattern
+    units: list[StarPattern] = []
+    for star in stars:
+        for p, o in star.branches:
+            units.append(StarPattern(star.subject, ((p, o),)))
+    return units
+
+
+def plan_query(store: TripleStore, bgp: BGP, cfg: EngineConfig) -> QueryPlan:
+    """Greedy selective-first join ordering over units (Section 5.1)."""
+    units = _units_for_interface(bgp, cfg.interface)
+
+    # Estimate each unit's cardinality with an *unseeded* plan (this is what
+    # the client learns from each unit's first-page metadata).
+    est = []
+    for u in units:
+        scratch: list[int] = []
+        p, _ = plan_unit(store, u, frozenset(), scratch)
+        est.append(p.est_card)
+
+    remaining = list(range(len(units)))
+    bound: frozenset[int] = frozenset()
+    consts: list[int] = []
+    ordered: list[UnitPlan] = []
+    while remaining:
+        # prefer units connected to the bound set; among those, lowest card
+        connected = [i for i in remaining
+                     if not bound or set(units[i].variables()) & bound]
+        pool = connected if connected else remaining
+        nxt = min(pool, key=lambda i: est[i])
+        plan, bound = plan_unit(store, units[nxt], bound, consts)
+        ordered.append(plan)
+        remaining.remove(nxt)
+    return QueryPlan(tuple(ordered), bgp.n_vars, tuple(consts), cfg.interface)
+
+
+# --------------------------------------------------------------------------
+# traced execution + cost model
+# --------------------------------------------------------------------------
+
+def _ceil_div(a: jnp.ndarray, b: int) -> jnp.ndarray:
+    return (a + b - 1) // b
+
+
+def _execute(plan_sig_static: tuple, plans: tuple[UnitPlan, ...], n_vars: int,
+             cfg: EngineConfig, radix: int, dev: StoreArrays,
+             const_vec: jnp.ndarray) -> tuple[BindingTable, QueryStats]:
+    del plan_sig_static  # only used as the jit cache key
+    table = unit_table(cfg.cap, max(n_vars, 1))
+    nrs = jnp.int64(0)
+    ntb = jnp.int64(0)
+    server_ops = jnp.int64(0)
+    client_ops = jnp.int64(0)
+    tb = cfg.term_bytes
+
+    for k, up in enumerate(plans):
+        in_count = table.count()
+        table, ops = eval_unit(dev, radix, up, const_vec, table)
+        out_count = table.count()
+        matched_triples = out_count * up.n_triple_patterns
+
+        if cfg.interface == "endpoint":
+            # all work server-side; traffic accounted once at the end
+            server_ops = server_ops + ops
+            continue
+
+        # ---- request counting -------------------------------------------
+        # one metadata request per unit (first page probe for join ordering)
+        meta_req = jnp.int64(1)
+        if cfg.interface == "tpf":
+            blocks = jnp.maximum(in_count, 1) if k > 0 else jnp.int64(1)
+        else:  # brtpf / spf: Omega-blocked requests
+            blocks = _ceil_div(jnp.maximum(in_count, 1), cfg.omega) if k > 0 \
+                else jnp.int64(1)
+        pages = _ceil_div(jnp.maximum(out_count, 1), cfg.page_size)
+        # page fetches beyond each block's first page are extra requests
+        extra_pages = jnp.maximum(pages - blocks, 0)
+        nrs = nrs + meta_req + blocks + extra_pages
+
+        # ---- byte counting ----------------------------------------------
+        sent = (blocks + meta_req + extra_pages) * cfg.request_base_bytes
+        if cfg.interface in ("brtpf", "spf") and k > 0:
+            # bindings serialised with each block
+            n_bound_vars = len(
+                {v for b in up.branches for src in (b.subj_src, b.obj_src)
+                 if src[0] == "var" for v in [src[1]]})
+            sent = sent + in_count * max(n_bound_vars, 1) * tb
+        recv = (matched_triples * 3 * tb
+                + (pages + meta_req) * cfg.page_header_bytes)
+        ntb = ntb + sent + recv
+
+        # ---- work split ---------------------------------------------------
+        if cfg.interface == "tpf":
+            # server only locates/pages each instantiated fragment; the
+            # client performs the joins (merging bindings into its table)
+            n = dev.key_ps_pso.shape[0]
+            logn = max(1, math.ceil(math.log2(max(n, 2))))
+            server_ops = server_ops + blocks * 2 * logn + matched_triples
+            client_ops = client_ops + ops
+        else:
+            server_ops = server_ops + ops
+            client_ops = client_ops + out_count  # client merges results
+
+    n_results = table.count()
+    if cfg.interface == "endpoint":
+        nrs = jnp.int64(1)
+        ntb = (jnp.int64(cfg.request_base_bytes)
+               + n_results * n_vars * tb + jnp.int64(cfg.page_header_bytes))
+
+    stats = QueryStats(
+        nrs=nrs, ntb=ntb, server_ops=server_ops, client_ops=client_ops,
+        n_results=n_results, overflow=table.overflow,
+    )
+    return table, stats
+
+
+class QueryEngine:
+    """Runs BGP queries against a TripleStore via one of the four interfaces."""
+
+    def __init__(self, store: TripleStore, cfg: EngineConfig):
+        if cfg.interface not in INTERFACES:
+            raise ValueError(f"unknown interface {cfg.interface!r}")
+        self.store = store
+        self.cfg = cfg
+        self._cache: dict[tuple, callable] = {}
+
+    def plan(self, bgp: BGP) -> QueryPlan:
+        return plan_query(self.store, bgp, self.cfg)
+
+    def run(self, bgp: BGP) -> tuple[BindingTable, QueryStats]:
+        """Run one query; on capacity overflow retry with doubled tables.
+
+        Overflow is the static-shape analogue of the paper's query timeout;
+        retry-with-larger-capacity is how a production deployment would
+        absorb the occasional fat intermediate result instead of failing.
+        """
+        plan = self.plan(bgp)
+        const_vec = jnp.asarray(np.asarray(plan.consts, dtype=np.int64))
+        cap = self.cfg.cap
+        while True:
+            cfg = replace(self.cfg, cap=cap)
+            key = (plan.signature, cap)
+            fn = self._cache.get(key)
+            if fn is None:
+                fn = jax.jit(
+                    partial(_execute, plan.signature, plan.units, plan.n_vars,
+                            cfg, self.store.radix))
+                self._cache[key] = fn
+            table, stats = fn(self.store.device, const_vec)
+            if not bool(stats.overflow) or cap >= self.cfg.max_cap:
+                return table, stats
+            cap *= 4
+
+    def run_load(self, queries: list[BGP]) -> tuple[list[BindingTable], list[QueryStats]]:
+        tables, stats = [], []
+        for q in queries:
+            t, s = self.run(q)
+            tables.append(t)
+            stats.append(s)
+        return tables, stats
+
+
+def results_as_numpy(table: BindingTable) -> np.ndarray:
+    """Valid rows as a numpy array (for tests / result checking)."""
+    rows = np.asarray(table.rows)
+    valid = np.asarray(table.valid)
+    return rows[valid]

@@ -1,0 +1,224 @@
+"""Server-side fragment evaluation: planning + traced star/TP evaluation.
+
+A *unit* is what one request evaluates — a star pattern for the SPF
+interface, a single triple pattern for TPF/brTPF (a 1-branch star).  The
+evaluator is *seeded*: it receives the current table of solution mappings
+(the paper's Omega) and extends/filters it, which is exactly bind-join /
+bindings-restricted semantics (Def. 5, non-empty-Omega case).
+
+Planning is host-side and uses exact run lengths from the store's numpy
+indexes (= the Def. 6 cardinality metadata, eps = 0); evaluation is traced
+JAX over the device indexes.  Query *structure* (the case-tag sequence) is
+static; every constant id is routed through a traced ``const_vec`` so that
+structurally identical queries share one XLA compilation.
+
+Branch cases (derived at plan time from the bound-variable set):
+
+    probe_oconst      subject bound, object const          -> filter
+    probe_ovar_bound  subject bound, object var bound      -> filter
+    probe_ovar_free   subject bound, object var free       -> expand objects
+    scan_oconst       subject free,  object const          -> expand subjects (POS run)
+    scan_ovar_bound   subject free,  object var bound      -> expand subjects (POS eqrange)
+    scan_ovar_free    subject free,  object var free       -> expand pred run (PSO)
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+from repro.core.bindings import (
+    BindingTable,
+    Expansion,
+    compact,
+    empty_table,
+    eqrange,
+    expand,
+    run_contains,
+    searchsorted_in_runs,
+)
+from repro.core.patterns import StarPattern, Term
+from repro.rdf.store import StoreArrays, TripleStore
+
+
+# --------------------------------------------------------------------------
+# plans (host-side, static)
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class BranchPlan:
+    case: str  # one of the six tags above
+    pred_ci: int  # index into const_vec (predicate id)
+    subj_src: tuple[str, int]  # ("var", var_idx) | ("const", const_vec idx)
+    obj_src: tuple[str, int]  # ("var", var_idx) | ("const", const_vec idx)
+    est_card: int  # host-side run length (planning metadata)
+
+
+@dataclass(frozen=True)
+class UnitPlan:
+    branches: tuple[BranchPlan, ...]
+    est_card: int  # Def. 6 metadata estimate for the whole unit
+    n_triple_patterns: int
+
+    @property
+    def signature(self) -> tuple:
+        """Compile-sharing key: case structure without constant values."""
+        return tuple((b.case, b.subj_src[0], b.obj_src[0],
+                      b.subj_src[1] if b.subj_src[0] == "var" else -1,
+                      b.obj_src[1] if b.obj_src[0] == "var" else -1)
+                     for b in self.branches)
+
+
+def plan_unit(store: TripleStore, star: StarPattern, bound: frozenset[int],
+              consts: list[int]) -> tuple[UnitPlan, frozenset[int]]:
+    """Plan one unit given the currently bound variable set.
+
+    Branch order: most selective first (smallest host cardinality), with the
+    constraint that once the subject is bound all remaining branches become
+    probes.  Returns the plan and the updated bound set.
+    """
+    if not star.subject.is_var and star.subject.id is None:
+        raise ValueError("invalid subject term")
+
+    def add_const(cid: int) -> int:
+        consts.append(int(cid))
+        return len(consts) - 1
+
+    # host cardinalities per branch (before binding anything)
+    infos = []
+    for p_term, o_term in star.branches:
+        if p_term.is_var:
+            raise NotImplementedError(
+                "unbound-predicate patterns are outside the WatDiv loads; "
+                "the SPF server would fall back to a full scan")
+        p = p_term.id
+        if not o_term.is_var:
+            card = store.tp_cardinality(p, o=o_term.id)
+        else:
+            card = store.tp_cardinality(p)
+        infos.append((card, p_term, o_term))
+    # selective-first ordering; const-object branches are naturally smallest
+    infos.sort(key=lambda t: t[0])
+
+    subj = star.subject
+    subj_bound = (not subj.is_var) or (subj.id in bound)
+    new_bound = set(bound)
+    branches: list[BranchPlan] = []
+    for card, p_term, o_term in infos:
+        p_ci = add_const(p_term.id)
+        subj_src = ("const", add_const(subj.id)) if not subj.is_var else ("var", subj.id)
+        if not o_term.is_var:
+            obj_src = ("const", add_const(o_term.id))
+            case = "probe_oconst" if subj_bound else "scan_oconst"
+        elif o_term.id in new_bound:
+            obj_src = ("var", o_term.id)
+            case = "probe_ovar_bound" if subj_bound else "scan_ovar_bound"
+        else:
+            obj_src = ("var", o_term.id)
+            case = "probe_ovar_free" if subj_bound else "scan_ovar_free"
+            new_bound.add(o_term.id)
+        branches.append(BranchPlan(case, p_ci, subj_src, obj_src, card))
+        if not subj_bound:
+            subj_bound = True
+            if subj.is_var:
+                new_bound.add(subj.id)
+
+    est = min(i[0] for i in infos)
+    return (UnitPlan(tuple(branches), est, len(star.branches)),
+            frozenset(new_bound))
+
+
+# --------------------------------------------------------------------------
+# traced evaluation
+# --------------------------------------------------------------------------
+
+def _subject_values(rows: jnp.ndarray, plan: BranchPlan,
+                    const_vec: jnp.ndarray) -> jnp.ndarray:
+    kind, idx = plan.subj_src
+    if kind == "const":
+        return jnp.broadcast_to(const_vec[idx], (rows.shape[0],))
+    return rows[:, idx].astype(jnp.int64)
+
+
+def _object_values(rows: jnp.ndarray, plan: BranchPlan,
+                   const_vec: jnp.ndarray) -> jnp.ndarray:
+    kind, idx = plan.obj_src
+    if kind == "const":
+        return jnp.broadcast_to(const_vec[idx], (rows.shape[0],))
+    return rows[:, idx].astype(jnp.int64)
+
+
+def eval_unit(dev: StoreArrays, radix: int, plan: UnitPlan,
+              const_vec: jnp.ndarray, table: BindingTable
+              ) -> tuple[BindingTable, jnp.ndarray]:
+    """Evaluate one unit seeded with ``table``; returns (table, ops).
+
+    ``ops`` counts probe/expansion work (device scalar) — the server/client
+    load accounting uses it.  Log-factors of binary searches are folded in.
+    """
+    n = dev.key_ps_pso.shape[0]
+    logn = max(1, int(math.ceil(math.log2(max(n, 2)))))
+    ops = jnp.int64(0)
+    cap = table.cap
+
+    for b in plan.branches:
+        rows, valid = table.rows, table.valid
+        p = const_vec[b.pred_ci]
+        active = jnp.sum(valid.astype(jnp.int64))
+
+        if b.case.startswith("probe"):
+            s_vals = _subject_values(rows, b, const_vec)
+            key = p * radix + s_vals
+            lo, hi = eqrange(dev.key_ps_pso, key)
+            ops = ops + active * (2 * logn)
+            if b.case == "probe_oconst" or b.case == "probe_ovar_bound":
+                o_vals = _object_values(rows, b, const_vec)
+                found = run_contains(dev.o_pso, lo, hi, o_vals)
+                ops = ops + active * logn
+                table = compact(BindingTable(rows, valid & found, table.overflow))
+            else:  # probe_ovar_free: expand objects within the (p, s) run
+                ex = expand(lo, hi, valid, cap)
+                new_rows = rows[ex.src_row]
+                o_col = b.obj_src[1]
+                new_rows = new_rows.at[:, o_col].set(
+                    dev.o_pso[ex.flat_idx].astype(jnp.int32))
+                overflow = table.overflow | (ex.total > cap)
+                ops = ops + jnp.minimum(ex.total, cap)
+                table = BindingTable(new_rows, ex.valid, overflow)
+
+        else:  # scan_* : subject free
+            if b.case == "scan_oconst" or b.case == "scan_ovar_bound":
+                o_vals = _object_values(rows, b, const_vec)
+                key = p * radix + o_vals
+                lo, hi = eqrange(dev.key_po_pos, key)
+                ops = ops + active * (2 * logn)
+                ex = expand(lo, hi, valid, cap)
+                new_rows = rows[ex.src_row]
+                subj_vals = dev.s_pos[ex.flat_idx].astype(jnp.int32)
+                if b.subj_src[0] == "var":
+                    new_rows = new_rows.at[:, b.subj_src[1]].set(subj_vals)
+                overflow = table.overflow | (ex.total > cap)
+                ops = ops + jnp.minimum(ex.total, cap)
+                table = BindingTable(new_rows, ex.valid, overflow)
+            else:  # scan_ovar_free: whole predicate run in PSO order
+                key_lo = p * radix
+                key_hi = (p + 1) * radix
+                lo0 = jnp.searchsorted(dev.key_ps_pso, key_lo, side="left")
+                hi0 = jnp.searchsorted(dev.key_ps_pso, key_hi, side="left")
+                lo = jnp.broadcast_to(lo0, rows.shape[:1])
+                hi = jnp.broadcast_to(hi0, rows.shape[:1])
+                ops = ops + active * (2 * logn)
+                ex = expand(lo, hi, valid, cap)
+                new_rows = rows[ex.src_row]
+                if b.subj_src[0] == "var":
+                    new_rows = new_rows.at[:, b.subj_src[1]].set(
+                        dev.s_pso[ex.flat_idx].astype(jnp.int32))
+                new_rows = new_rows.at[:, b.obj_src[1]].set(
+                    dev.o_pso[ex.flat_idx].astype(jnp.int32))
+                overflow = table.overflow | (ex.total > cap)
+                ops = ops + jnp.minimum(ex.total, cap)
+                table = BindingTable(new_rows, ex.valid, overflow)
+
+    return table, ops

@@ -1,0 +1,2 @@
+"""Data pipelines: synthetic batches, graph sampling, token streams."""
+from repro.data.synth import make_batch

@@ -1,0 +1,101 @@
+"""Synthetic batch generators matching ``configs.registry.input_specs``.
+
+Real arrays for smoke tests / examples / CPU benches.  Graph batches are
+structurally valid (edge indices in range, DimeNet triplets consistent
+with the edge list, per-graph ids for molecule batches).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs import registry as R
+
+
+def _graph_edges(rng, n_nodes: int, n_edges: int) -> np.ndarray:
+    src = rng.integers(0, n_nodes, n_edges)
+    dst = rng.integers(0, n_nodes, n_edges)
+    return np.stack([src, dst]).astype(np.int32)
+
+
+def triplet_index(edge_index: np.ndarray, max_triplets: int) -> np.ndarray:
+    """(t_in, t_out) pairs: edge k->j feeding edge j->i (k != i)."""
+    src, dst = edge_index
+    m = src.shape[0]
+    # incoming edge lists per node
+    by_dst: dict[int, list[int]] = {}
+    for eid in range(m):
+        by_dst.setdefault(int(dst[eid]), []).append(eid)
+    t_in, t_out = [], []
+    for e_out in range(m):
+        j = int(src[e_out])
+        for e_in in by_dst.get(j, ()):
+            if int(src[e_in]) != int(dst[e_out]):
+                t_in.append(e_in)
+                t_out.append(e_out)
+                if len(t_in) >= max_triplets:
+                    break
+        if len(t_in) >= max_triplets:
+            break
+    pad = max_triplets - len(t_in)
+    t_in.extend([0] * pad)
+    t_out.extend([0] * pad)
+    return np.stack([t_in, t_out]).astype(np.int32)
+
+
+def make_batch(arch: str, shape: str, smoke: bool = True, seed: int = 0
+               ) -> dict:
+    rng = np.random.default_rng(seed)
+    e = R.get(arch)
+    cfg = R.model_config_for(arch, shape, smoke)
+    specs = R.input_specs(arch, shape, smoke)
+    defs = R.shape_defs(arch, smoke)[shape]
+
+    if e.family in ("lm", "moe"):
+        if "tokens" in specs:
+            return {"tokens": rng.integers(
+                0, cfg.vocab, specs["tokens"].shape).astype(np.int32)}
+        out = {"token": rng.integers(
+            0, cfg.vocab, specs["token"].shape).astype(np.int32)}
+        cache = {}
+        for k, s in specs["cache"].items():
+            cache[k] = (rng.normal(size=s.shape) * 0.02).astype(np.float32)
+        out["cache"] = cache
+        return out
+
+    if e.family == "gnn":
+        n, m = defs["n_nodes"], defs["n_edges"]
+        edge_index = _graph_edges(rng, n, m)
+        batch = {
+            "node_feat": rng.normal(size=(n, defs["d_feat"])).astype(np.float32),
+            "edge_index": edge_index,
+        }
+        if cfg.arch == "dimenet":
+            batch["positions"] = rng.normal(size=(n, 3)).astype(np.float32)
+            batch["triplet_index"] = triplet_index(
+                edge_index, specs["triplet_index"].shape[1])
+        if "edge_feat" in specs:
+            batch["edge_feat"] = rng.normal(
+                size=specs["edge_feat"].shape).astype(np.float32)
+        if defs.get("task") == "graph":
+            g = defs["n_graphs"]
+            batch["graph_ids"] = np.repeat(np.arange(g), n // g).astype(np.int32)
+            batch["labels"] = rng.integers(0, defs["n_classes"], g).astype(np.int32)
+            batch["n_graphs"] = g
+        else:
+            batch["labels"] = rng.integers(0, defs["n_classes"], n).astype(np.int32)
+            batch["label_mask"] = (rng.random(n) < 0.5).astype(np.float32)
+        return batch
+
+    # recsys
+    if "ids" in specs:
+        batch = {"ids": rng.integers(
+            0, cfg.vocab_per_field, specs["ids"].shape).astype(np.int32)}
+        if "labels" in specs:
+            batch["labels"] = rng.integers(0, 2, specs["labels"].shape
+                                           ).astype(np.float32)
+        return batch
+    return {"query_ids": rng.integers(0, cfg.vocab_per_field,
+                                      specs["query_ids"].shape).astype(np.int32),
+            "cand_ids": rng.integers(0, cfg.vocab_per_field,
+                                     specs["cand_ids"].shape).astype(np.int32)}

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+- sorted_probe      — SPF server star-join probe (VPU broadcast-compare)
+- flash_attention   — fused attention for the LM architectures
+- ops               — jit'd dispatch wrappers (TPU: Pallas; CPU: jnp oracle)
+- ref               — pure-jnp oracles (kernel ground truth)
+"""

@@ -1,0 +1,138 @@
+"""Pallas TPU kernel: FlashAttention-style fused attention (fwd).
+
+The perf-critical compute layer for the LM architectures (train + prefill).
+Standard IO-aware streaming softmax (Dao et al., arXiv:2205.14135) adapted
+to TPU: Q/K/V tiles staged HBM->VMEM by BlockSpec, the [block_q x block_k]
+score tile feeds the MXU, and the online-softmax running max/denominator
+live in VMEM scratch carried across the (sequential) kv grid axis.
+
+Supports causal masking and GQA (query-head groups share a KV head) by
+mapping the kv-head axis in the BlockSpec index maps.  Block sizes default
+to MXU-aligned (128) multiples.
+
+TPU-adaptation notes: no warp-level primitives are involved (the GPU
+kernel's shared-memory/warp tricks have no analogue); block sizes are
+chosen so q/k/v tiles + the f32 score tile fit VMEM (~16 MB on v5e):
+(block_q + 2 block_k) * d * 2B + block_q * block_k * 4B << VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, block_q: int, block_k: int,
+                  kv_len: int):
+    i = pl.program_id(1)  # q block
+    j = pl.program_id(2)  # kv block (sequential, innermost)
+    nj = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    if causal:
+        # skip fully-masked kv blocks above the diagonal
+        run = (j * block_k) <= (i * block_q + block_q - 1)
+    else:
+        run = jnp.bool_(True)
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)  # [bq, d]
+        k = k_ref[0].astype(jnp.float32)  # [bk, d]
+        v = v_ref[0].astype(jnp.float32)  # [bk, d]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # [bq, bk]
+        kj = j * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kj < kv_len, s, NEG_INF)  # mask KV padding
+        if causal:
+            qi = i * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            s = jnp.where(qi >= kj, s, NEG_INF)
+
+        m_prev = m_ref[...]  # [bq]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_cur)
+        p = jnp.exp(s - m_cur[:, None])  # [bq, bk]
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                        + jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_ref[...] = m_cur
+
+    @pl.when(j == nj - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "scale", "block_q", "block_k", "interpret"))
+def flash_attention_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                           causal: bool = True, scale: float | None = None,
+                           block_q: int = DEFAULT_BLOCK_Q,
+                           block_k: int = DEFAULT_BLOCK_K,
+                           interpret: bool = False) -> jnp.ndarray:
+    """Fused attention.
+
+    Shapes: q [B, Hq, Sq, D]; k, v [B, Hkv, Sk, D]; Hq % Hkv == 0 (GQA).
+    Returns [B, Hq, Sq, D] in q's dtype.
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    assert hq % hkv == 0, "GQA requires Hq to be a multiple of Hkv"
+    group = hq // hkv
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+
+    q_pad = -sq % block_q
+    k_pad = -sk % block_k
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, q_pad), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, k_pad), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, k_pad), (0, 0)))
+    sq_p, sk_p = qp.shape[2], kp.shape[2]
+
+    qr = qp.reshape(b * hq, sq_p, d)
+    kr = kp.reshape(b * hkv, sk_p, d)
+    vr = vp.reshape(b * hkv, sk_p, d)
+
+    grid = (b * hq, sq_p // block_q, sk_p // block_k)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal,
+        block_q=block_q, block_k=block_k, kv_len=sk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda h, i, j: (h // group, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda h, i, j: (h // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hq, sq_p, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),  # running max
+            pltpu.VMEM((block_q,), jnp.float32),  # running denom
+            pltpu.VMEM((block_q, d), jnp.float32),  # output accumulator
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(b, hq, sq_p, d)[:, :, :sq, :]

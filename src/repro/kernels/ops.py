@@ -1,0 +1,67 @@
+"""Jit'd public wrappers over the Pallas kernels with jnp fallbacks.
+
+Dispatch policy: the Pallas kernels target TPU.  On the CPU backend we run
+them in ``interpret=True`` mode only inside the kernel test-suite; library
+call-sites go through these wrappers, which pick the Pallas path on TPU and
+the jnp oracle elsewhere (so smoke tests and CPU benches stay fast while
+the TPU lowering is exercised by the dry-run).
+
+Set ``repro.kernels.ops.FORCE`` to "pallas" / "ref" to override (tests use
+"pallas" + interpret to validate kernel bodies on CPU).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.sorted_probe import sorted_probe_pallas
+
+FORCE: str | None = None  # None | "pallas" | "ref"
+
+
+def _use_pallas() -> bool:
+    if FORCE == "pallas":
+        return True
+    if FORCE == "ref":
+        return False
+    return jax.default_backend() == "tpu"
+
+
+def _interpret() -> bool:
+    # interpret-mode execution when forced onto a non-TPU backend
+    return jax.default_backend() != "tpu"
+
+
+def sorted_probe(keys: jnp.ndarray, queries: jnp.ndarray
+                 ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(rank, contains) of each query in a sorted key array."""
+    if _use_pallas():
+        return sorted_probe_pallas(keys, queries, interpret=_interpret())
+    return ref.sorted_probe_ref(keys, queries)
+
+
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+              causal: bool = True, scale: float | None = None) -> jnp.ndarray:
+    """Fused (flash) attention with GQA support.
+
+    Non-TPU fallback: the flash-STRUCTURED chunked jnp computation for
+    long sequences (same IO profile as the Pallas kernel — what the
+    dry-run must lower), the simple dense reference for short ones.
+    """
+    if _use_pallas():
+        return flash_attention_pallas(q, k, v, causal=causal, scale=scale,
+                                      interpret=_interpret())
+    if k.shape[2] >= 2048:
+        return ref.attention_chunked(q, k, v, causal=causal, scale=scale)
+    return ref.attention_ref(q, k, v, causal=causal, scale=scale)
+
+
+def embedding_bag(table: jnp.ndarray, ids: jnp.ndarray,
+                  mode: str = "sum") -> jnp.ndarray:
+    """EmbeddingBag built from gather + reduce (JAX has no native one —
+    this IS the system's embedding-lookup substrate, used by DeepFM and
+    the SPF-backed feature store)."""
+    return ref.embedding_bag_ref(table, ids, mode=mode)

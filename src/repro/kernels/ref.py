@@ -1,0 +1,106 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sorted_probe_ref(keys: jnp.ndarray, queries: jnp.ndarray
+                     ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """rank = searchsorted-left; contains = membership (keys sorted asc)."""
+    rank = jnp.searchsorted(keys, queries, side="left").astype(jnp.int32)
+    n = keys.shape[0]
+    at = keys[jnp.clip(rank, 0, n - 1)]
+    contains = (rank < n) & (at == queries)
+    return rank, contains
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  causal: bool = True, scale: float | None = None
+                  ) -> jnp.ndarray:
+    """Dense reference attention with GQA head-group broadcast.
+
+    q [B, Hq, Sq, D]; k, v [B, Hkv, Sk, D] -> [B, Hq, Sq, D].
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    group = hq // hkv
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * scale
+    if causal:
+        qi = jnp.arange(sq)[:, None]
+        kj = jnp.arange(sk)[None, :]
+        s = jnp.where(qi >= kj, s, -1e30)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def attention_chunked(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                      causal: bool = True, scale: float | None = None,
+                      block_k: int = 1024) -> jnp.ndarray:
+    """Flash-structured attention in pure jnp: online softmax over KV
+    blocks via lax.scan, never materialising the [Sq, Sk] score matrix.
+
+    This mirrors the Pallas kernel's IO behaviour exactly, which matters
+    for the dry-run: lowering the dense reference would charge the roofline
+    with O(S^2) bytes and spurious gathers that the TPU kernel never pays.
+    Numerics are identical to ``attention_ref`` (same math, blocked).
+    """
+    import jax
+
+    b, hq, sq, dh = q.shape
+    _, hkv, sk, _ = k.shape
+    group = hq // hkv
+    if scale is None:
+        scale = 1.0 / (dh ** 0.5)
+    pad = -sk % block_k
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    nblk = kp.shape[2] // block_k
+    qg = q.reshape(b, hkv, group, sq, dh).astype(jnp.float32)
+    kb = kp.reshape(b, hkv, nblk, block_k, dh).transpose(2, 0, 1, 3, 4)
+    vb = vp.reshape(b, hkv, nblk, block_k, dh).transpose(2, 0, 1, 3, 4)
+
+    def body(carry, inp):
+        m, l, acc, j = carry[0], carry[1], carry[2], carry[3]
+        kj, vj = inp
+        s = jnp.einsum("bkgqd,bksd->bkgqs", qg,
+                       kj.astype(jnp.float32)) * scale
+        kpos = j * block_k + jnp.arange(block_k)
+        mask = kpos[None, None, None, None, :] < sk
+        if causal:
+            qpos = jnp.arange(sq)
+            mask = mask & (qpos[None, None, None, :, None]
+                           >= kpos[None, None, None, None, :])
+        s = jnp.where(mask, s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bkgqs,bksd->bkgqd", p, vj.astype(jnp.float32))
+        return (m_new, l, acc, j + 1), None
+
+    m0 = jnp.full((b, hkv, group, sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, hkv, group, sq), jnp.float32)
+    a0 = jnp.zeros((b, hkv, group, sq, dh), jnp.float32)
+    (m, l, acc, _), _ = jax.lax.scan(body, (m0, l0, a0, jnp.int32(0)),
+                                     (kb, vb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, hq, sq, dh).astype(q.dtype)
+
+
+def embedding_bag_ref(table: jnp.ndarray, ids: jnp.ndarray,
+                      mode: str = "sum") -> jnp.ndarray:
+    """EmbeddingBag oracle: table [V, D], ids [B, F] -> [B, D] (sum/mean)."""
+    emb = jnp.take(table, ids, axis=0)  # [B, F, D]
+    out = jnp.sum(emb, axis=1)
+    if mode == "mean":
+        out = out / ids.shape[1]
+    return out

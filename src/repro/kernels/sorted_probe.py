@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: batched probe of query keys into a sorted key run.
+
+This is the SPF server's hot loop.  Star-pattern evaluation reduces to, per
+branch, locating every candidate subject inside the branch's sorted
+predicate run (``searchsorted``) and testing membership — millions of
+probes against runs of 10^3..10^6 keys.
+
+TPU adaptation (vs. the CPU/Java original and vs. a GPU port): scalar
+binary search is hostile to the VPU (8x128 lanes, no per-lane branching),
+and per-lane gather from HBM is the slowest path on TPU.  Instead we
+stream the run through VMEM in tiles and compute, for every query key,
+
+    rank(q)     = sum_tiles  sum(tile_keys <  q)
+    contains(q) = or_tiles   any(tile_keys == q)
+
+i.e. probe-by-broadcast-compare-reduce: a dense [Q_tile x K_tile] compare on
+the VPU per grid step.  For run lengths up to ~10^6 this linear-scan-in-
+vector-registers beats the log-n scalar loop on TPU by orders of magnitude
+(the MXU is idle either way; the VPU does 8x128 compares/cycle), and it has
+a perfectly predictable, coalesced HBM->VMEM stream.  Complexity is
+O(N*Q / 1024) VPU ops versus O(Q log N) *serial* scalar ops.
+
+Grid: (num_q_tiles, num_k_tiles); TPU grids iterate the last axis fastest
+and sequentially, so the kernel accumulates partial ranks in the output
+block across k-tile steps (init at j == 0).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_Q_TILE = 256
+DEFAULT_K_TILE = 2048
+
+
+def _probe_kernel(keys_ref, queries_ref, rank_ref, contains_ref):
+    j = pl.program_id(1)
+    keys = keys_ref[...]  # [K_TILE]
+    qs = queries_ref[...]  # [Q_TILE]
+
+    # dense compare: [Q_TILE, K_TILE] on the VPU
+    lt = keys[None, :] < qs[:, None]
+    eq = keys[None, :] == qs[:, None]
+    partial_rank = jnp.sum(lt, axis=1, dtype=jnp.int32)
+    partial_contains = jnp.any(eq, axis=1)
+
+    @pl.when(j == 0)
+    def _init():
+        rank_ref[...] = partial_rank
+        contains_ref[...] = partial_contains
+
+    @pl.when(j != 0)
+    def _accum():
+        rank_ref[...] = rank_ref[...] + partial_rank
+        contains_ref[...] = contains_ref[...] | partial_contains
+
+
+@functools.partial(jax.jit, static_argnames=("q_tile", "k_tile", "interpret"))
+def sorted_probe_pallas(keys: jnp.ndarray, queries: jnp.ndarray,
+                        q_tile: int = DEFAULT_Q_TILE,
+                        k_tile: int = DEFAULT_K_TILE,
+                        interpret: bool = False
+                        ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """rank[i] = #{k in keys : k < queries[i]};  contains[i] = queries[i] in keys.
+
+    ``keys`` must be sorted ascending.  Both arrays are padded to tile
+    multiples; key padding uses +max so it never counts as ``< q`` for real
+    queries... (max-padding counts as neither < nor == any real query).
+    """
+    n = keys.shape[0]
+    q = queries.shape[0]
+    dt = keys.dtype
+    maxval = jnp.iinfo(dt).max
+    n_pad = -n % k_tile
+    q_pad = -q % q_tile
+    keys_p = jnp.pad(keys, (0, n_pad), constant_values=maxval)
+    queries_p = jnp.pad(queries, (0, q_pad), constant_values=maxval)
+
+    grid = (queries_p.shape[0] // q_tile, keys_p.shape[0] // k_tile)
+    rank, contains = pl.pallas_call(
+        _probe_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((k_tile,), lambda i, j: (j,)),
+            pl.BlockSpec((q_tile,), lambda i, j: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((q_tile,), lambda i, j: (i,)),
+            pl.BlockSpec((q_tile,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((queries_p.shape[0],), jnp.int32),
+            jax.ShapeDtypeStruct((queries_p.shape[0],), jnp.bool_),
+        ],
+        interpret=interpret,
+    )(keys_p, queries_p)
+    return rank[:q], contains[:q]

@@ -1,0 +1,364 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay the first statements in this file — jax locks
+the platform device count on first initialisation, and the dry-run (only)
+needs 512 placeholder host devices to build the production mesh.
+
+For each cell this produces:
+- ``compiled.memory_analysis()``  (does it fit per-device HBM),
+- ``compiled.cost_analysis()``    (FLOPs / bytes for the roofline),
+- the collective-op byte census parsed from the optimized HLO
+  (all-gather / all-reduce / reduce-scatter / all-to-all /
+  collective-permute), which cost_analysis does not report,
+
+written as JSON to ``experiments/dryrun/<mesh>/<arch>__<shape>.json``.
+
+Usage:
+  python -m repro.launch.dryrun --arch glm4-9b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--skip-existing]
+  python -m repro.launch.dryrun --spf            # the paper's own service
+"""
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.configs import registry as R  # noqa: E402
+from repro.configs.steps import build_cell  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.roofline import collective_bytes_from_hlo  # noqa: E402
+from repro.train import sharding as shd  # noqa: E402
+
+
+def _spec_tree_for_state(state_spec, family, mesh):
+    p_specs = shd.param_specs(state_spec["params"], family)
+    p_specs = shd.filter_specs_for_mesh(mesh, p_specs)
+    p_specs = shd.validate_divisibility(mesh, p_specs, state_spec["params"])
+
+    def opt_like(m, s):
+        if isinstance(m, dict) and "q" in m:
+            return {"q": s, "s": P()}
+        return s
+
+    o_m = jax.tree.map(opt_like, state_spec["opt"]["m"], p_specs,
+                       is_leaf=lambda x: isinstance(x, dict) and "q" in x)
+    o_v = jax.tree.map(opt_like, state_spec["opt"]["v"], p_specs,
+                       is_leaf=lambda x: isinstance(x, dict) and "q" in x)
+    return {"params": p_specs, "opt": {"m": o_m, "v": o_v, "step": P()}}
+
+
+def _with_sharding(tree, specs, mesh):
+    return jax.tree.map(
+        lambda sds, sp: jax.ShapeDtypeStruct(
+            sds.shape, sds.dtype, sharding=NamedSharding(mesh, sp)),
+        tree, specs, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def _batch_specs(batch_spec_tree, mesh, family, shape_name, model_cfg):
+    dp = shd.dp_axes(mesh)
+    long_ctx = "long" in shape_name
+
+    def rule(path_str: str, sds: jax.ShapeDtypeStruct) -> P:
+        nd = len(sds.shape)
+        if family in ("lm", "moe"):
+            if path_str.endswith("tokens"):
+                return P(dp, *([None] * (nd - 1)))
+            if path_str.endswith("token"):
+                # B=1 long-context lanes cannot shard the token batch
+                return P(dp) if sds.shape[0] % _axsize(mesh, dp) == 0 else P()
+            if "cache" in path_str:
+                if "latent" in path_str:  # [L, B, S, r]
+                    if long_ctx:
+                        return P(None, None, ("data", "model"), None)
+                    return P(None, dp, "model", None)
+                # k/v [L, B, kv, S, D]
+                if long_ctx:
+                    return P(None, None, None, ("data", "model"), None)
+                return P(None, dp, None, "model", None)
+            return P(*([None] * nd))
+        if family == "gnn":
+            if path_str.endswith("edge_index") or path_str.endswith("triplet_index"):
+                return P(None, ("data", "model"))
+            if nd >= 1 and sds.shape[0] > 1024:
+                return P(("data", "model"), *([None] * (nd - 1)))
+            return P(*([None] * nd))
+        # recsys
+        if path_str.endswith("cand_ids"):
+            return P(("data", "model"), None)
+        if path_str.endswith("ids") or path_str.endswith("labels"):
+            return P(dp, *([None] * (nd - 1)))
+        return P(*([None] * nd))
+
+    def spec_for(path, sds):
+        ps = "/".join(str(getattr(p, "key", getattr(p, "idx", ""))) for p in path)
+        sp = rule(ps, sds)
+        # divisibility guard: replicate any axis that does not divide
+        out = []
+        for d, entry in zip(sds.shape, tuple(sp) + (None,) * nd_pad(sds, sp)):
+            if entry is None:
+                out.append(None)
+                continue
+            size = _axsize(mesh, entry)
+            out.append(entry if d % size == 0 else None)
+        return P(*out[: len(sds.shape)])
+
+    def nd_pad(sds, sp):
+        return max(0, len(sds.shape) - len(sp))
+
+    return jax.tree_util.tree_map_with_path(
+        spec_for, batch_spec_tree,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def _axsize(mesh, entry) -> int:
+    if entry is None:
+        return 1
+    axes = entry if isinstance(entry, tuple) else (entry,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def dryrun_cell(arch: str, shape: str, multi_pod: bool = False,
+                smoke: bool = False, variant: str = "baseline",
+                overrides: dict | None = None) -> dict:
+    """Lower + compile one cell on the production mesh; return the record.
+
+    Layers are lowered UNROLLED (scan_layers=False): XLA cost_analysis does
+    not multiply while-loop bodies by trip count, so unrolled HLO is the
+    only way to get exact per-step FLOPs/bytes/collectives.  Training runs
+    keep scan_layers=True for fast compiles.
+    """
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ov = {"scan_layers": False}
+    ov.update(overrides or {})
+    cell = build_cell(arch, shape, smoke=smoke, overrides=ov)
+    family = cell.family
+
+    from repro.models.moe import MESH_CTX
+    mesh_tok = MESH_CTX.set(mesh)
+    t0 = time.time()
+    with mesh:
+        if cell.kind == "train":
+            state_spec, batch_spec = cell.arg_specs
+            sspecs = _spec_tree_for_state(state_spec, family, mesh)
+            bspecs = _batch_specs(batch_spec, mesh, family, shape,
+                                  cell.model_cfg)
+            args = (_with_sharding(state_spec, sspecs, mesh),
+                    _with_sharding(batch_spec, bspecs, mesh))
+            jitted = jax.jit(cell.fn, donate_argnums=(0,))
+        elif cell.kind == "decode":
+            params_spec, token_spec, cache_spec = cell.arg_specs
+            p_specs = shd.param_specs(params_spec, family)
+            p_specs = shd.filter_specs_for_mesh(mesh, p_specs)
+            p_specs = shd.validate_divisibility(mesh, p_specs, params_spec)
+            io_specs = _batch_specs({"token": token_spec, "cache": cache_spec},
+                                    mesh, family, shape, cell.model_cfg)
+            args = (_with_sharding(params_spec, p_specs, mesh),
+                    _with_sharding(token_spec, io_specs["token"], mesh),
+                    _with_sharding(cache_spec, io_specs["cache"], mesh))
+            jitted = jax.jit(cell.fn, donate_argnums=(2,))
+        else:  # prefill / serve / retrieval
+            params_spec, batch_spec = cell.arg_specs
+            p_specs = shd.param_specs(params_spec, family)
+            p_specs = shd.filter_specs_for_mesh(mesh, p_specs)
+            p_specs = shd.validate_divisibility(mesh, p_specs, params_spec)
+            bspecs = _batch_specs(batch_spec, mesh, family, shape,
+                                  cell.model_cfg)
+            args = (_with_sharding(params_spec, p_specs, mesh),
+                    _with_sharding(batch_spec, bspecs, mesh))
+            jitted = jax.jit(cell.fn)
+
+        lowered = jitted.lower(*args)
+        compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        coll = collective_bytes_from_hlo(hlo)
+    MESH_CTX.reset(mesh_tok)
+
+    record = {
+        "arch": arch, "shape": shape, "kind": cell.kind, "variant": variant,
+        "mesh": list(mesh.devices.shape), "multi_pod": multi_pod,
+        "n_devices": mesh.size,
+        "compile_seconds": round(time.time() - t0, 1),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        },
+        "cost": {k: cost.get(k) for k in
+                 ("flops", "bytes accessed", "transcendentals")
+                 if isinstance(cost, dict) and k in cost},
+        "collectives": coll,
+    }
+    # model-level FLOPs for the useful-compute ratio
+    record["model_flops"] = model_flops(cell, smoke)
+    return record
+
+
+def model_flops(cell, smoke: bool) -> float:
+    """Analytic MODEL_FLOPS: 6 N D (train), 2 N D (prefill), 2 N B (+KV
+    reads) per decoded token; GNN/recsys use the same 2*params*examples
+    forward convention (x3 with backward)."""
+    cfg = cell.model_cfg
+    defs = R.shape_defs(cell.arch, smoke)[cell.shape]
+    if cell.family in ("lm", "moe"):
+        n = (cfg.n_active_params if cell.family == "moe" else cfg.n_params)
+        if cell.kind == "train":
+            toks = defs["batch"] * defs["seq"]
+            return 6.0 * n * toks
+        if cell.kind == "prefill":
+            toks = defs["batch"] * defs["seq"]
+            return 2.0 * n * toks
+        # decode: one token per lane + attention reads over the context
+        toks = defs["batch"]
+        attn = 0.0
+        if cell.family == "moe" and cfg.attn_type == "mla":
+            attn = (2.0 * cfg.n_layers * defs["seq"]
+                    * (cfg.kv_lora_rank + cfg.qk_rope_dim) * cfg.n_heads
+                    * 2 * toks)
+        else:
+            attn = (2.0 * cfg.n_layers * defs["seq"] * cfg.n_kv
+                    * cfg.head_dim * 2 * toks
+                    * (cfg.n_heads // max(cfg.n_kv, 1)))
+        return 2.0 * n * toks + attn
+    if cell.family == "gnn":
+        # params are applied once per node (message passing adds O(E d)
+        # adds, negligible FLOPs): train = 6 N * n_nodes
+        return 6.0 * cfg.n_params * defs["n_nodes"]
+    # recsys
+    n_mlp = cfg.n_params - cfg.total_vocab * (cfg.embed_dim + 1)
+    ex = defs.get("batch", 1) * (defs.get("n_cand", 1))
+    mult = 6.0 if cell.kind == "train" else 2.0
+    if cell.kind == "retrieval":
+        return 2.0 * ex * cfg.embed_dim * cfg.n_fields
+    return mult * n_mlp * ex
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--spf", action="store_true",
+                    help="dry-run the paper's distributed SPF service step")
+    ap.add_argument("--spf-optimized", action="store_true",
+                    help="owner-masked + page-tight SPF variant")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    mesh_tag = "pod2x16x16" if args.multi_pod else "pod16x16"
+    outdir = os.path.join(args.out, mesh_tag)
+    os.makedirs(outdir, exist_ok=True)
+
+    if args.spf:
+        rec = dryrun_spf(args.multi_pod, optimized=args.spf_optimized)
+        tag = "spf-watdiv__union__optimized" if args.spf_optimized \
+            else "spf-watdiv__union"
+        path = os.path.join(outdir, f"{tag}.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(json.dumps({k: rec[k] for k in
+                          ("arch", "collectives", "memory")}, indent=1))
+        return
+
+    cells = ([(args.arch, args.shape)] if args.arch and args.shape
+             else [(a, s) for a in R.all_archs() for s in R.get(a).shapes]
+             if args.all else None)
+    if cells is None:
+        ap.error("pass --arch+--shape, --all, or --spf")
+
+    failures = []
+    for arch, shape in cells:
+        path = os.path.join(outdir, f"{arch}__{shape}.json")
+        if args.skip_existing and os.path.exists(path):
+            print(f"[skip] {arch} {shape}")
+            continue
+        try:
+            rec = dryrun_cell(arch, shape, multi_pod=args.multi_pod,
+                              smoke=args.smoke)
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+            peak = rec["memory"]["peak_bytes"]
+            peak_s = f"{peak / 2**30:.2f}GiB" if peak else "?"
+            print(f"[ok]   {arch:18s} {shape:14s} peak/dev={peak_s} "
+                  f"flops={rec['cost'].get('flops', 0):.3e} "
+                  f"coll={rec['collectives']['total_bytes'] / 2**20:.1f}MiB "
+                  f"({rec['compile_seconds']}s)")
+        except Exception as e:  # noqa: BLE001
+            failures.append((arch, shape, repr(e)))
+            print(f"[FAIL] {arch} {shape}: {e}")
+            traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} failures")
+        sys.exit(1)
+    print("\nall cells compiled")
+
+
+def dryrun_spf(multi_pod: bool, optimized: bool = False) -> dict:
+    """Dry-run the paper's own distributed service: a 3-star SPF query batch
+    on the production mesh (store subject-sharded, one lane per model slot).
+
+    ``optimized`` enables the beyond-paper variant: owner-masked probe
+    evaluation + page-tight shard result buffers (shard_cap 512 -> 128)."""
+    import numpy as np
+    from repro.core import EngineConfig
+    from repro.core.distributed import DistConfig, DistributedEngine
+    from repro.rdf import TripleStore, WatDivConfig, generate_watdiv
+    from repro.rdf.queries import QueryLoadConfig, generate_query_load
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    g = generate_watdiv(WatDivConfig(scale=50))
+    store = TripleStore.build(g.s, g.p, g.o, n_terms=g.n_terms,
+                              n_predicates=g.n_predicates)
+    qs = generate_query_load(g, store, "3-stars", QueryLoadConfig(n_queries=1))
+    eng = DistributedEngine(
+        store, mesh, EngineConfig(interface="spf"),
+        DistConfig(cap=4096, shard_cap=128 if optimized else 512,
+                   owner_masking=optimized,
+                   pod_axis="pod" if multi_pod else None))
+    plan = eng.plan_batch([qs[0]])[0]
+    lanes = mesh.size // mesh.shape["data"]
+    t0 = time.time()
+    # shard_len mirrors the paper's 10M-triple instance
+    lowered = eng.lower_step(plan, lanes, shard_len=10_000_000 // 16 + 64)
+    compiled = lowered.compile()
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    coll = collective_bytes_from_hlo(compiled.as_text())
+    return {
+        "arch": "spf-watdiv", "shape": "3-stars-batch", "kind": "serve",
+        "variant": "optimized" if optimized else "baseline", "mesh": list(mesh.devices.shape),
+        "multi_pod": multi_pod, "n_devices": mesh.size,
+        "compile_seconds": round(time.time() - t0, 1),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        },
+        "cost": {k: cost.get(k) for k in ("flops", "bytes accessed")
+                 if isinstance(cost, dict) and k in cost},
+        "collectives": coll,
+        "model_flops": 0.0,
+    }
+
+
+if __name__ == "__main__":
+    main()

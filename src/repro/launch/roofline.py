@@ -1,0 +1,175 @@
+"""Roofline analysis: three-term model from the compiled dry-run artifacts.
+
+Hardware model (TPU v5e, per chip):
+    peak bf16 compute   197 TFLOP/s
+    HBM bandwidth       819 GB/s
+    ICI link bandwidth  ~50 GB/s
+
+Terms (seconds, per step, for a mesh of ``chips`` devices):
+    compute    = HLO_FLOPs      / (chips x peak)
+    memory     = HLO_bytes      / (chips x hbm_bw)
+    collective = collective_B   / (chips x ici_bw)
+
+``cost_analysis()`` on an SPMD-partitioned module reports *per-device*
+numbers; the collective census is parsed from the optimized HLO (operand
+bytes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute, per the spec) and is likewise per-device.  We therefore
+use chips=1 when the inputs are per-device (the default from dryrun.py) —
+the table records both conventions explicitly.
+
+The dominant term is the bottleneck the §Perf loop iterates on;
+MODEL_FLOPS / HLO_FLOPs is the useful-compute ratio (catches remat and
+redundancy waste).
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import re
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s / chip
+ICI_BW = 50e9  # B/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(pred|[suf]\d+|bf16|c64|c128)\[([\d,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum the byte sizes of every shape literal in an HLO operand list."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def collective_bytes_from_hlo(hlo: str) -> dict:
+    """Census of collective ops in optimized (per-partition SPMD) HLO.
+
+    Modern HLO prints operands without shapes, so per-op payload is derived
+    from the *result* shape printed between ``=`` and the op name (tuples
+    are summed):
+
+        all-gather          result bytes        (device materialises the
+                                                 gathered array)
+        all-reduce          result bytes        (ring: ~2x on the wire;
+                                                 we count the payload once)
+        reduce-scatter      result x group      (operand = pre-scatter)
+        all-to-all          sum of tuple parts  (full payload exchanged)
+        collective-permute  result bytes
+
+    ``replica_groups=[G,S]`` gives the group size S for the reduce-scatter
+    multiplier.  All numbers are per-device, matching ``cost_analysis``.
+    """
+    out = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        eq = stripped.find("= ")
+        if eq < 0:
+            continue
+        base, pos = None, -1
+        for k in _COLLECTIVES:
+            # match " <op>(" and async "-start(" variants
+            for tag in (f" {k}(", f" {k}-start("):
+                p = stripped.find(tag, eq)
+                if p >= 0:
+                    base, pos = k, p
+                    break
+            if base:
+                break
+        if base is None:
+            continue
+        result_text = stripped[eq + 2: pos]
+        nbytes = _shape_bytes(result_text)
+        if base == "reduce-scatter":
+            m = _GROUPS_RE.search(stripped)
+            if m:
+                nbytes *= int(m.group(2))
+        out[base]["count"] += 1
+        out[base]["bytes"] += nbytes
+    total = sum(v["bytes"] for v in out.values())
+    n_ops = sum(v["count"] for v in out.values())
+    return {"per_op": out, "total_bytes": total, "total_count": n_ops}
+
+
+def roofline_terms(record: dict, per_device: bool = True) -> dict:
+    """Three roofline terms (seconds) from a dryrun JSON record."""
+    chips = 1 if per_device else record["n_devices"]
+    flops = record["cost"].get("flops") or 0.0
+    bytes_acc = record["cost"].get("bytes accessed") or 0.0
+    coll = record["collectives"]["total_bytes"]
+    compute_s = flops / (chips * PEAK_FLOPS)
+    memory_s = bytes_acc / (chips * HBM_BW)
+    collective_s = coll / (chips * ICI_BW)
+    dominant = max((compute_s, "compute"), (memory_s, "memory"),
+                   (collective_s, "collective"))[1]
+    model_flops = record.get("model_flops") or 0.0
+    # cost_analysis flops are per-device; MODEL_FLOPS is global
+    useful = (model_flops / (flops * record["n_devices"])
+              if flops else 0.0)
+    bound = max(compute_s, memory_s, collective_s)
+    frac = compute_s / bound if bound > 0 else 0.0
+    return {
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": collective_s, "dominant": dominant,
+        "useful_compute_ratio": useful,
+        "roofline_fraction": frac,  # compute / binding term
+    }
+
+
+def fmt_table(records: list[dict]) -> str:
+    hdr = (f"{'arch':<18} {'shape':<14} {'kind':<9} {'peak/dev':>9} "
+           f"{'compute_s':>11} {'memory_s':>11} {'collect_s':>11} "
+           f"{'dominant':>10} {'useful':>7} {'roofline':>8}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in sorted(records, key=lambda r: (r["arch"], r["shape"])):
+        t = roofline_terms(r)
+        peak = r["memory"].get("peak_bytes")
+        peak_s = f"{peak / 2**30:.1f}GiB" if peak else "?"
+        lines.append(
+            f"{r['arch']:<18} {r['shape']:<14} {r['kind']:<9} {peak_s:>9} "
+            f"{t['compute_s']:>11.3e} {t['memory_s']:>11.3e} "
+            f"{t['collective_s']:>11.3e} {t['dominant']:>10} "
+            f"{t['useful_compute_ratio']:>7.2f} "
+            f"{t['roofline_fraction']:>8.2f}")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun/pod16x16")
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args()
+    records = []
+    for path in sorted(glob.glob(os.path.join(args.dir, "*.json"))):
+        with open(path) as f:
+            records.append(json.load(f))
+    if args.json:
+        out = [{**{k: r[k] for k in ("arch", "shape", "kind")},
+                **roofline_terms(r)} for r in records]
+        print(json.dumps(out, indent=1))
+    else:
+        print(fmt_table(records))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id> --shape
+decode_32k`` — runs batched decode (LM) or scoring (recsys) steps.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry as R
+from repro.configs.steps import build_cell
+from repro.data.synth import make_batch
+from repro.models import moe as moe_mod
+from repro.models import recsys as rec_mod
+from repro.models import transformer as tfm_mod
+
+MODS = {"lm": tfm_mod, "moe": moe_mod, "recsys": rec_mod}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--tokens", type=int, default=8,
+                    help="decode steps to run (LM shapes)")
+    args = ap.parse_args()
+
+    e = R.get(args.arch)
+    cell = build_cell(args.arch, args.shape, smoke=True)
+    mod = MODS[e.family]
+    params = mod.init(jax.random.PRNGKey(0), cell.model_cfg)
+    batch = make_batch(args.arch, args.shape, smoke=True)
+
+    if cell.kind == "decode":
+        cache = {k: jnp.asarray(v, jnp.bfloat16)
+                 for k, v in batch["cache"].items()}
+        token = jnp.asarray(batch["token"])
+        step = jax.jit(mod.decode_step, static_argnames=("cfg",))
+        pos0 = (cache["latent"].shape[2] if "latent" in cache
+                else cache["k"].shape[3]) // 2
+        t0 = time.time()
+        for i in range(args.tokens):
+            logits, cache = step(params, token, cache,
+                                 jnp.asarray(pos0 + i, jnp.int32),
+                                 cfg=cell.model_cfg)
+            token = jnp.argmax(logits, -1).astype(jnp.int32)
+        dt = time.time() - t0
+        print(f"{args.tokens} decode steps, batch {token.shape[0]}: "
+              f"{1e3 * dt / args.tokens:.1f} ms/token (CPU smoke)")
+    else:
+        fn = jax.jit(cell.fn)
+        out = fn(params, jax.tree.map(jnp.asarray, batch))
+        t0 = time.time()
+        for _ in range(5):
+            out = fn(params, jax.tree.map(jnp.asarray, batch))
+            jax.block_until_ready(out)
+        print(f"{cell.kind} step: {1e3 * (time.time() - t0) / 5:.1f} ms "
+              f"(CPU smoke)")
+
+
+if __name__ == "__main__":
+    main()

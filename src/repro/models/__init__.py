@@ -1,0 +1,1 @@
+"""Model zoo: dense LM, MoE (MLA) LM, GNNs, DeepFM — pure JAX, functional."""

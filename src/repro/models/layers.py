@@ -1,0 +1,237 @@
+"""Shared neural layers (pure JAX, functional): norms, RoPE, attention, FFN.
+
+Conventions:
+- params are nested dicts of jnp arrays; ``init_*`` builds them, the apply
+  functions are pure.
+- compute dtype is explicit everywhere (bf16 activations / f32 reductions by
+  default); enabling x64 for the RDF engine therefore never leaks into
+  models.
+- tensor-parallel sharding is applied by the caller via
+  ``jax.lax.with_sharding_constraint``; layers stay mesh-agnostic.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+Params = dict[str, Any]
+
+
+def _init_dense(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    if scale is None:
+        scale = (2.0 / (d_in + d_out)) ** 0.5
+    return (jax.random.normal(key, (d_in, d_out), dtype=jnp.float32)
+            * scale).astype(dtype)
+
+
+def dense(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray | None = None
+          ) -> jnp.ndarray:
+    y = jnp.einsum("...d,df->...f", x, w.astype(x.dtype))
+    if b is not None:
+        y = y + b.astype(x.dtype)
+    return y
+
+
+# ------------------------------------------------------------------ RMSNorm
+
+def init_rmsnorm(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.zeros((d,), dtype)}
+
+
+def rmsnorm(x: jnp.ndarray, p: Params, eps: float = 1e-6,
+            plus_one: bool = True) -> jnp.ndarray:
+    """RMSNorm; ``plus_one`` stores scale as an offset from 1 (Gemma/LLaMA
+    convention — zero-init gives the identity transform)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    xn = xf * jax.lax.rsqrt(var + eps)
+    scale = p["scale"].astype(jnp.float32)
+    scale = (1.0 + scale) if plus_one else scale
+    return (xn * scale).astype(x.dtype)
+
+
+# --------------------------------------------------------------------- RoPE
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10000.0,
+               fraction: float = 1.0) -> jnp.ndarray:
+    """Rotary embedding over the leading ``fraction`` of the head dim.
+
+    x: [..., S, D]; positions: [S] or broadcastable to x[..., S].
+    """
+    d = x.shape[-1]
+    d_rot = int(d * fraction)
+    d_rot -= d_rot % 2
+    if d_rot == 0:
+        return x
+    xr, xp = x[..., :d_rot], x[..., d_rot:]
+    freqs = rope_freqs(d_rot, theta)  # [d_rot/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, d_rot/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1 = xr[..., 0::2].astype(jnp.float32)
+    x2 = xr[..., 1::2].astype(jnp.float32)
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    rot = jnp.stack([r1, r2], axis=-1).reshape(xr.shape).astype(x.dtype)
+    return jnp.concatenate([rot, xp], axis=-1)
+
+
+# ---------------------------------------------------------------- attention
+
+def init_attention(key, d_model: int, n_heads: int, n_kv: int, head_dim: int,
+                   qkv_bias: bool, dtype) -> Params:
+    ks = jax.random.split(key, 4)
+    p: Params = {
+        "wq": _init_dense(ks[0], d_model, n_heads * head_dim, dtype),
+        "wk": _init_dense(ks[1], d_model, n_kv * head_dim, dtype),
+        "wv": _init_dense(ks[2], d_model, n_kv * head_dim, dtype),
+        "wo": _init_dense(ks[3], n_heads * head_dim, d_model, dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((n_kv * head_dim,), dtype)
+        p["bv"] = jnp.zeros((n_kv * head_dim,), dtype)
+    return p
+
+
+def attention(x: jnp.ndarray, p: Params, n_heads: int, n_kv: int,
+              head_dim: int, positions: jnp.ndarray, rope_theta: float,
+              rope_fraction: float = 1.0, causal: bool = True,
+              kv_cache: tuple[jnp.ndarray, jnp.ndarray] | None = None,
+              ) -> tuple[jnp.ndarray, tuple[jnp.ndarray, jnp.ndarray] | None]:
+    """GQA attention; optionally reads/extends a KV cache (decode path).
+
+    x [B, S, d_model] -> [B, S, d_model].  With ``kv_cache`` = (k, v) of
+    shape [B, n_kv, S_past, head_dim], returns the updated cache.
+    """
+    b, s, _ = x.shape
+    q = dense(x, p["wq"], p.get("bq")).reshape(b, s, n_heads, head_dim)
+    k = dense(x, p["wk"], p.get("bk")).reshape(b, s, n_kv, head_dim)
+    v = dense(x, p["wv"], p.get("bv")).reshape(b, s, n_kv, head_dim)
+    q = q.transpose(0, 2, 1, 3)  # [B, H, S, D]
+    k = k.transpose(0, 2, 1, 3)
+    v = v.transpose(0, 2, 1, 3)
+    q = apply_rope(q, positions, rope_theta, rope_fraction)
+    k = apply_rope(k, positions, rope_theta, rope_fraction)
+
+    new_cache = None
+    if kv_cache is not None:
+        pk, pv = kv_cache
+        k = jnp.concatenate([pk.astype(k.dtype), k], axis=2)
+        v = jnp.concatenate([pv.astype(v.dtype), v], axis=2)
+        new_cache = (k, v)
+        causal = False  # single new token attends to everything
+
+    o = kops.attention(q, k, v, causal=causal)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, n_heads * head_dim)
+    return dense(o, p["wo"]), new_cache
+
+
+# ---------------------------------------------------------------------- FFN
+
+def init_glu_ffn(key, d_model: int, d_ff: int, dtype) -> Params:
+    ks = jax.random.split(key, 3)
+    return {
+        "wi": _init_dense(ks[0], d_model, d_ff, dtype),
+        "wg": _init_dense(ks[1], d_model, d_ff, dtype),
+        "wo": _init_dense(ks[2], d_ff, d_model, dtype),
+    }
+
+
+def glu_ffn(x: jnp.ndarray, p: Params, act: str = "swiglu") -> jnp.ndarray:
+    h = dense(x, p["wi"])
+    g = dense(x, p["wg"])
+    if act == "swiglu":
+        h = jax.nn.silu(g) * h
+    elif act == "geglu":
+        h = jax.nn.gelu(g, approximate=True) * h
+    else:
+        raise ValueError(act)
+    return dense(h, p["wo"])
+
+
+def init_mlp(key, dims: list[int], dtype, bias: bool = True) -> Params:
+    ks = jax.random.split(key, len(dims) - 1)
+    p: Params = {}
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        p[f"w{i}"] = _init_dense(ks[i], a, b, dtype)
+        if bias:
+            p[f"b{i}"] = jnp.zeros((b,), dtype)
+    return p
+
+
+def mlp(x: jnp.ndarray, p: Params, act=jax.nn.relu,
+        final_act: bool = False) -> jnp.ndarray:
+    n = 0
+    while f"w{n}" in p:  # layer count is static (from the param tree keys)
+        n += 1
+    for i in range(n):
+        x = dense(x, p[f"w{i}"], p.get(f"b{i}"))
+        if i < n - 1 or final_act:
+            x = act(x)
+    return x
+
+
+# -------------------------------------------------------------------- utils
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Token-level CE in f32; logits [..., V], labels int [...]."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - ll
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def chunked_cross_entropy(hidden: jnp.ndarray, w_out: jnp.ndarray,
+                          labels: jnp.ndarray, n_chunks: int = 16
+                          ) -> jnp.ndarray:
+    """Fused unembed + CE without ever materialising full [T, V] logits.
+
+    Token chunks are processed sequentially under jax.checkpoint: live
+    memory is one [T/n, V] logits block (recomputed in backward), and the
+    label log-prob uses a one-hot contraction — which stays vocab-sharded
+    under GSPMD, unlike take_along_axis (which all-gathers the logits).
+    The production fix for the 30+ GiB logits buffers of 130k-vocab models
+    (EXPERIMENTS.md §Perf).
+    hidden [B, S, d]; w_out [d, V]; labels [B, S] -> mean NLL (f32).
+    """
+    b, s, d = hidden.shape
+    V = w_out.shape[1]
+    T = b * s
+    h = hidden.reshape(T, d)
+    y = labels.reshape(T)
+    n = max(1, n_chunks)
+    Tc = -(-T // n)
+    pad = n * Tc - T
+    h = jnp.pad(h, ((0, pad), (0, 0)))
+    y = jnp.pad(y, (0, pad))
+    valid = jnp.arange(n * Tc) < T
+
+    @jax.checkpoint
+    def chunk_nll(hc, yc, vc):
+        logits = jnp.einsum("td,dv->tv", hc, w_out.astype(hc.dtype)
+                            ).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        onehot = jax.nn.one_hot(yc, V, dtype=jnp.float32)
+        ll = jnp.sum(logits * onehot, axis=-1)
+        return jnp.sum((logz - ll) * vc)
+
+    total = jnp.float32(0.0)
+    for i in range(n):
+        sl = slice(i * Tc, (i + 1) * Tc)
+        total = total + chunk_nll(h[sl], y[sl],
+                                  valid[sl].astype(jnp.float32))
+    return total / T

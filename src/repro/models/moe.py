@@ -1,0 +1,735 @@
+"""MoE decoder LMs: DeepSeek-V3 (MLA attention, shared+routed experts, MTP)
+and Kimi-K2 (per the assignment sheet: GQA attention, 384 experts top-8).
+
+Design notes (TPU / GSPMD):
+- expert dispatch is the capacity-based sort-free scatter: tokens are ranked
+  within their expert bucket via argsort + searchsorted, scattered into a
+  dense [E, C, d] buffer (``mode="drop"`` handles capacity overflow), expert
+  FFNs run as one batched einsum, and results gather back weighted by the
+  router probabilities.  Static shapes, no ragged ops; EP = sharding E over
+  the mesh; the scatter/gather becomes XLA all_to_all under GSPMD.
+- MLA is implemented in the materialised ("naive") form for train/prefill:
+  per-head K/V are up-projected from the 512-d latent; the decode path
+  caches only (c_kv, k_rope) = 576 f per token — the property that makes
+  the 500k-context cell feasible.
+- DeepSeek-V3's aux-loss-free balancing is replaced by the standard
+  Switch-style auxiliary load-balance loss (documented deviation — the
+  bias-update rule is an *optimizer-side* mechanism, orthogonal to this
+  paper); MTP is one extra scanned block with shared unembedding.
+- layers are scanned in two groups (leading dense layers, then MoE layers)
+  to keep stacked params homogeneous.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    name: str = "moe"
+    n_layers: int = 4
+    n_dense_layers: int = 1  # leading dense-FFN layers (DeepSeek-V3: 3)
+    d_model: int = 256
+    n_heads: int = 4
+    head_dim: int = 64
+    d_ff: int = 512  # per-expert FFN width
+    d_ff_dense: int = 1024  # dense-layer FFN width
+    vocab: int = 1000
+    n_experts: int = 8
+    top_k: int = 2
+    n_shared: int = 1
+    capacity_factor: float = 1.25
+    aux_loss_weight: float = 0.001
+    # attention
+    attn_type: str = "mla"  # "mla" | "gqa"
+    n_kv: int = 4  # gqa only
+    qkv_bias: bool = False
+    q_lora_rank: int = 384  # mla
+    kv_lora_rank: int = 128  # mla
+    qk_nope_dim: int = 64  # mla per-head
+    qk_rope_dim: int = 32  # mla per-head (shared key rope dim)
+    v_head_dim: int = 64  # mla
+    rope_theta: float = 10000.0
+    # MTP
+    use_mtp: bool = True
+    mtp_loss_weight: float = 0.3
+    dtype: str = "bfloat16"
+    remat: bool = True
+    # >1: fused chunked unembed+CE (never materialises [T, V] logits)
+    ce_chunks: int = 1
+    scan_layers: bool = True  # dry-run unrolls (see transformer.py note)
+    # --- dispatch optimisation knobs (EXPERIMENTS.md §Perf) ---------------
+    # constrain dispatch buffers so GSPMD routes tokens expert-shard-wise
+    # (all_to_all) instead of replicating activations to every data shard
+    # [measured: no effect — GSPMD still replicates the scatter updates]
+    dispatch_constraints: bool = False
+    # rank tokens within expert buckets by one-hot cumsum instead of a
+    # global argsort [measured: 54x compute blow-up at E=256 — rejected]
+    rank_via_cumsum: bool = False
+    # communication-explicit expert parallelism: shard_map over the data
+    # axis, local scatter, all_to_all dispatch/return, Megatron-style psum
+    # for the f-sharded second GEMM.  THE fix for the dispatch all-gathers.
+    dispatch_shard_map: bool = False
+    # process the dispatch in ep_chunks capacity windows (sequential scan):
+    # live slab memory divides by ep_chunks, total wire bytes unchanged
+    ep_chunks: int = 1
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def n_params(self) -> int:
+        d = self.d_model
+        if self.attn_type == "mla":
+            attn = (d * self.q_lora_rank
+                    + self.q_lora_rank * self.n_heads
+                    * (self.qk_nope_dim + self.qk_rope_dim)
+                    + d * (self.kv_lora_rank + self.qk_rope_dim)
+                    + self.kv_lora_rank * self.n_heads
+                    * (self.qk_nope_dim + self.v_head_dim)
+                    + self.n_heads * self.v_head_dim * d)
+        else:
+            attn = (d * self.n_heads * self.head_dim
+                    + 2 * d * self.n_kv * self.head_dim
+                    + self.n_heads * self.head_dim * d)
+        moe_ffn = (3 * d * self.d_ff * (self.n_experts + self.n_shared)
+                   + d * self.n_experts)
+        dense_ffn = 3 * d * self.d_ff_dense
+        n_moe = self.n_layers - self.n_dense_layers
+        total = (self.n_dense_layers * (attn + dense_ffn + 2 * d)
+                 + n_moe * (attn + moe_ffn + 2 * d)
+                 + 2 * self.vocab * d + d)
+        if self.use_mtp:
+            total += attn + dense_ffn + 2 * d + 2 * d * d
+        return total
+
+    @property
+    def n_active_params(self) -> int:
+        """Active params per token (for MoE MODEL_FLOPS = 6 * N_active * D)."""
+        d = self.d_model
+        if self.attn_type == "mla":
+            attn = (d * self.q_lora_rank
+                    + self.q_lora_rank * self.n_heads
+                    * (self.qk_nope_dim + self.qk_rope_dim)
+                    + d * (self.kv_lora_rank + self.qk_rope_dim)
+                    + self.kv_lora_rank * self.n_heads
+                    * (self.qk_nope_dim + self.v_head_dim)
+                    + self.n_heads * self.v_head_dim * d)
+        else:
+            attn = (d * self.n_heads * self.head_dim
+                    + 2 * d * self.n_kv * self.head_dim
+                    + self.n_heads * self.head_dim * d)
+        active_ffn = 3 * d * self.d_ff * (self.top_k + self.n_shared)
+        dense_ffn = 3 * d * self.d_ff_dense
+        n_moe = self.n_layers - self.n_dense_layers
+        return (self.n_dense_layers * (attn + dense_ffn)
+                + n_moe * (attn + active_ffn) + 2 * self.vocab * d)
+
+
+# --------------------------------------------------------------- MLA attention
+
+def init_mla(key, cfg: MoEConfig) -> dict:
+    dt = cfg.jdtype
+    ks = jax.random.split(key, 6)
+    H = cfg.n_heads
+    return {
+        "wq_a": L._init_dense(ks[0], cfg.d_model, cfg.q_lora_rank, dt),
+        "q_norm": L.init_rmsnorm(cfg.q_lora_rank),
+        "wq_b": L._init_dense(ks[1], cfg.q_lora_rank,
+                              H * (cfg.qk_nope_dim + cfg.qk_rope_dim), dt),
+        "wkv_a": L._init_dense(ks[2], cfg.d_model,
+                               cfg.kv_lora_rank + cfg.qk_rope_dim, dt),
+        "kv_norm": L.init_rmsnorm(cfg.kv_lora_rank),
+        "wkv_b": L._init_dense(ks[3], cfg.kv_lora_rank,
+                               H * (cfg.qk_nope_dim + cfg.v_head_dim), dt),
+        "wo": L._init_dense(ks[4], H * cfg.v_head_dim, cfg.d_model, dt),
+    }
+
+
+def mla_attention(x: jnp.ndarray, p: dict, cfg: MoEConfig,
+                  positions: jnp.ndarray, causal: bool = True) -> jnp.ndarray:
+    """Multi-head Latent Attention (materialised train/prefill path)."""
+    from repro.kernels import ops as kops
+    b, s, _ = x.shape
+    H, dn, dr, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+
+    cq = L.rmsnorm(L.dense(x, p["wq_a"]), p["q_norm"])
+    q = L.dense(cq, p["wq_b"]).reshape(b, s, H, dn + dr).transpose(0, 2, 1, 3)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = L.apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv_a = L.dense(x, p["wkv_a"])
+    c_kv = L.rmsnorm(kv_a[..., :cfg.kv_lora_rank], p["kv_norm"])
+    k_rope = kv_a[..., cfg.kv_lora_rank:][:, :, None, :].transpose(0, 2, 1, 3)
+    k_rope = L.apply_rope(k_rope, positions, cfg.rope_theta)  # [B,1,S,dr]
+
+    kv = L.dense(c_kv, p["wkv_b"]).reshape(b, s, H, dn + dv).transpose(0, 2, 1, 3)
+    k_nope, v = kv[..., :dn], kv[..., dn:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (b, H, s, dr))], axis=-1)
+    qh = jnp.concatenate([q_nope, q_rope], axis=-1)  # [B,H,S,dn+dr]
+    # pad V to the qk head dim so the fused kernel sees uniform head_dim
+    v_pad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, dn + dr - dv)))
+    o = kops.attention(qh, k, v_pad, causal=causal,
+                       scale=1.0 / (dn + dr) ** 0.5)[..., :dv]
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, H * dv)
+    return L.dense(o, p["wo"])
+
+
+# ------------------------------------------------------------------ MoE FFN
+
+def init_moe_ffn(key, cfg: MoEConfig) -> dict:
+    dt = cfg.jdtype
+    ks = jax.random.split(key, 5)
+    E, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    scale = (2.0 / (d + f)) ** 0.5
+    p = {
+        "router": L._init_dense(ks[0], d, E, jnp.float32, scale=0.02),
+        "wi": (jax.random.normal(ks[1], (E, d, f), jnp.float32) * scale).astype(dt),
+        "wg": (jax.random.normal(ks[2], (E, d, f), jnp.float32) * scale).astype(dt),
+        "wo": (jax.random.normal(ks[3], (E, f, d), jnp.float32) * scale).astype(dt),
+    }
+    if cfg.n_shared:
+        p["shared"] = L.init_glu_ffn(ks[4], d, f * cfg.n_shared, dt)
+    return p
+
+
+# ambient mesh for the shard_map dispatch path (set by dryrun / trainer);
+# None -> fall back to the GSPMD-auto path (single-host smoke tests)
+import contextvars
+
+MESH_CTX: contextvars.ContextVar = contextvars.ContextVar("moe_mesh",
+                                                          default=None)
+
+
+def moe_ffn_ep(x: jnp.ndarray, p: dict, cfg: MoEConfig, mesh
+               ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Communication-explicit expert parallelism (EXPERIMENTS.md §Perf).
+
+    shard_map over ("data", "model"): tokens sharded over data, expert
+    weights [E/data, d, f/model].  Per layer and device the wire carries
+    exactly 2 all_to_all slabs ([E, C_loc, d] there and back) plus one
+    f-contraction psum — instead of GSPMD's replicate-everything gathers.
+    Drop semantics differ slightly from the global-rank path: capacity is
+    enforced per source shard (C_loc = C / n_data), which is what real EP
+    systems do (GShard, Switch).
+    """
+    from jax.sharding import PartitionSpec as P
+    b, s, d = x.shape
+    T = b * s
+    E, K = cfg.n_experts, cfg.top_k
+    n_data = mesh.shape["data"]
+    pod = mesh.shape.get("pod", 1)
+    dp = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    n_dp = n_data * pod
+    T_loc = T // n_dp
+    C_loc = max(4, int(cfg.capacity_factor * T_loc * K / E + 0.999))
+
+    def shard_fn(xt, router, wi, wg, wo, shared):
+        # xt [T_loc, d]; router [d, E]; wi/wg [E/n_data, d, f/model]
+        logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), router)
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_p, top_e = jax.lax.top_k(probs, K)
+        top_p = top_p / jnp.maximum(jnp.sum(top_p, -1, keepdims=True), 1e-9)
+        density = jnp.mean(jax.nn.one_hot(top_e[:, 0], E,
+                                          dtype=jnp.float32), 0)
+        aux_loc = jnp.sum(density * jnp.mean(probs, 0)) * E * cfg.aux_loss_weight
+        aux = jax.lax.pmean(aux_loc, dp)
+
+        # local rank within expert bucket (local sort is collective-free)
+        flat_e = top_e.reshape(T_loc * K)
+        order = jnp.argsort(flat_e)
+        sorted_e = flat_e[order]
+        start = jnp.searchsorted(sorted_e, sorted_e, side="left")
+        rank = jnp.zeros((T_loc * K,), jnp.int32).at[order].set(
+            (jnp.arange(T_loc * K) - start).astype(jnp.int32))
+        keep = rank < C_loc
+        tok_idx = jnp.repeat(jnp.arange(T_loc), K)
+
+        send = jnp.zeros((E, C_loc, d), xt.dtype)
+        send = send.at[jnp.where(keep, flat_e, E),
+                       jnp.where(keep, rank, 0)].set(xt[tok_idx],
+                                                     mode="drop")
+        w = top_p.reshape(T_loc * K)[:, None]
+
+        G = max(1, cfg.ep_chunks)
+        C_c = -(-C_loc // G)  # capacity window per chunk
+
+        def one_chunk(send_c, keep_c, rank_c):
+            # dispatch: slab e -> the data shard owning expert e
+            recv = jax.lax.all_to_all(send_c, "data", split_axis=0,
+                                      concat_axis=1, tiled=True)
+            h = jnp.einsum("ecd,edf->ecf", recv, wi.astype(recv.dtype))
+            g = jnp.einsum("ecd,edf->ecf", recv, wg.astype(recv.dtype))
+            h = jax.nn.silu(g) * h
+            y_part = jnp.einsum("ecf,efd->ecd", h, wo.astype(h.dtype))
+            # f is sharded over "model", so y_part is a PARTIAL sum.  The
+            # combine is linear, so the psum is deferred past the return
+            # all_to_all and the combine: payload shrinks from
+            # [E_loc, n*C_loc, d] to [T_loc, d] (~10x), and the big slab
+            # never exists in f32.
+            y_ret = jax.lax.all_to_all(y_part, "data", split_axis=1,
+                                       concat_axis=0, tiled=True)
+            gathered = y_ret[jnp.where(keep_c, flat_e, 0),
+                             jnp.where(keep_c, rank_c, 0)]
+            gathered = jnp.where(keep_c[:, None], gathered, 0)
+            return jax.ops.segment_sum(
+                gathered * w.astype(gathered.dtype), tok_idx,
+                num_segments=T_loc)
+
+        if G == 1:
+            y = one_chunk(send, keep, rank)
+        else:
+            # sequential capacity windows: live slab memory / G.  The loop
+            # is UNROLLED (not lax.scan) so the dry-run's HLO census sees
+            # every all_to_all instance (cost analysis does not multiply
+            # loop bodies by trip count).
+            send_p = jnp.pad(send, ((0, 0), (0, G * C_c - C_loc), (0, 0)))
+            y = jnp.zeros((T_loc, d), send.dtype)
+            for g_idx in range(G):
+                lo = g_idx * C_c
+                send_c = send_p[:, lo: lo + C_c]
+                in_win = (rank >= lo) & (rank < lo + C_c) & keep
+                y = y + one_chunk(send_c, in_win, rank - lo)
+        if shared is not None:
+            wi_s, wg_s, wo_s = shared
+            hs = jnp.einsum("td,df->tf", xt, wi_s.astype(xt.dtype))
+            gs = jnp.einsum("td,df->tf", xt, wg_s.astype(xt.dtype))
+            ys = jnp.einsum("tf,fd->td", jax.nn.silu(gs) * hs,
+                            wo_s.astype(xt.dtype))
+            y = y + ys.astype(y.dtype)  # also f-partial; folded into psum
+        y = jax.lax.psum(y.astype(jnp.float32), "model")
+        return y.astype(xt.dtype), aux
+
+    shared = None
+    shared_specs = None
+    if cfg.n_shared:
+        shared = (p["shared"]["wi"], p["shared"]["wg"], p["shared"]["wo"])
+        shared_specs = (P(None, "model"), P(None, "model"), P("model", None))
+
+    lead = P(dp if len(dp) > 1 else dp[0], None)
+    if cfg.remat:
+        # remat must sit INSIDE the shard_map for the dispatch slabs to be
+        # recomputed in backward; otherwise every unrolled layer's send/recv
+        # buffers stay live until the backward pass (90 GiB at 4 layers).
+        # Cost: the forward all_to_alls are re-issued in backward (~1.5x
+        # dispatch wire bytes) — the classic memory/traffic remat trade.
+        shard_fn = jax.checkpoint(shard_fn)
+    out = jax.shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(lead, P(None, None),
+                  P("data", None, "model"), P("data", None, "model"),
+                  P("data", "model", None), shared_specs),
+        out_specs=(lead, P()),
+        check_vma=False,
+    )(x.reshape(T, d), p["router"], p["wi"], p["wg"], p["wo"], shared)
+    y, aux = out
+    return y.reshape(b, s, d), aux
+
+
+def _try_constrain(x: jnp.ndarray, *spec) -> jnp.ndarray:
+    """with_sharding_constraint if a mesh context is active, else no-op —
+    keeps the model mesh-agnostic for smoke tests."""
+    from jax.sharding import PartitionSpec as P
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except (ValueError, RuntimeError, TypeError):
+        return x
+
+
+def moe_ffn(x: jnp.ndarray, p: dict, cfg: MoEConfig
+            ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x [B, S, d] -> (y, aux_loss).  Capacity-dropping top-k routing."""
+    if cfg.dispatch_shard_map:
+        mesh = MESH_CTX.get()
+        if mesh is not None:
+            return moe_ffn_ep(x, p, cfg, mesh)
+    b, s, d = x.shape
+    T = b * s
+    E, K = cfg.n_experts, cfg.top_k
+    xt = x.reshape(T, d)
+
+    logits = L.dense(xt.astype(jnp.float32), p["router"])  # [T, E] f32
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, K)  # [T, K]
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, -1, keepdims=True), 1e-9)
+
+    # Switch-style aux load-balance loss
+    density = jnp.mean(jax.nn.one_hot(top_e[:, 0], E, dtype=jnp.float32), 0)
+    router_mean = jnp.mean(probs, axis=0)
+    aux = jnp.sum(density * router_mean) * E * cfg.aux_loss_weight
+
+    # ---- rank within expert bucket -----------------------------------------
+    C = max(8, int(cfg.capacity_factor * T * K / E + 0.999))
+    flat_e = top_e.reshape(T * K)
+    if cfg.rank_via_cumsum:
+        # sort-free: exclusive running count per expert.  The cumsum along
+        # the (data-sharded) token axis lowers to local scans + one small
+        # inter-shard carry instead of the global sort's all-gather.
+        onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)  # [T*K, E]
+        rank = (jnp.cumsum(onehot, axis=0) - onehot)  # exclusive
+        rank = jnp.sum(rank * onehot, axis=1).astype(jnp.int32)
+    else:
+        order = jnp.argsort(flat_e)
+        sorted_e = flat_e[order]
+        group_start = jnp.searchsorted(sorted_e, sorted_e, side="left")
+        rank_sorted = jnp.arange(T * K) - group_start
+        rank = jnp.zeros((T * K,), jnp.int32).at[order].set(
+            rank_sorted.astype(jnp.int32))
+    keep = rank < C
+    tok_idx = jnp.repeat(jnp.arange(T), K)
+
+    # ---- dispatch ----------------------------------------------------------
+    updates = xt[tok_idx]  # [T*K, d], token-sharded
+    if cfg.dispatch_constraints:
+        updates = _try_constrain(updates, ("data",), None)
+    buf = jnp.zeros((E, C, d), xt.dtype)
+    if cfg.dispatch_constraints:
+        buf = _try_constrain(buf, "data", None, None)
+    buf = buf.at[jnp.where(keep, flat_e, E), jnp.where(keep, rank, 0)].set(
+        updates, mode="drop")
+    if cfg.dispatch_constraints:
+        buf = _try_constrain(buf, "data", None, None)
+
+    # ---- expert FFNs: batched GEMMs ---------------------------------------
+    h = jnp.einsum("ecd,edf->ecf", buf, p["wi"].astype(buf.dtype))
+    g = jnp.einsum("ecd,edf->ecf", buf, p["wg"].astype(buf.dtype))
+    h = jax.nn.silu(g) * h
+    y_buf = jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(buf.dtype))
+    if cfg.dispatch_constraints:
+        y_buf = _try_constrain(y_buf, "data", None, None)
+
+    # ---- combine -----------------------------------------------------------
+    gathered = y_buf[jnp.where(keep, flat_e, 0), jnp.where(keep, rank, 0)]
+    if cfg.dispatch_constraints:
+        gathered = _try_constrain(gathered, ("data",), None)
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    w = top_p.reshape(T * K)[:, None].astype(gathered.dtype)
+    y = jax.ops.segment_sum(gathered * w, tok_idx, num_segments=T)
+
+    if cfg.n_shared:
+        y = y + L.glu_ffn(xt, p["shared"], "swiglu")
+    return y.reshape(b, s, d), aux
+
+
+# ------------------------------------------------------------------- model
+
+def init(key, cfg: MoEConfig) -> dict:
+    dt = cfg.jdtype
+    keys = jax.random.split(key, 6)
+
+    def init_attn(k):
+        if cfg.attn_type == "mla":
+            return init_mla(k, cfg)
+        return L.init_attention(k, cfg.d_model, cfg.n_heads, cfg.n_kv,
+                                cfg.head_dim, cfg.qkv_bias, dt)
+
+    def init_dense_layer(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "attn_norm": L.init_rmsnorm(cfg.d_model),
+            "attn": init_attn(k1),
+            "ffn_norm": L.init_rmsnorm(cfg.d_model),
+            "ffn": L.init_glu_ffn(k2, cfg.d_model, cfg.d_ff_dense, dt),
+        }
+
+    def init_moe_layer(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "attn_norm": L.init_rmsnorm(cfg.d_model),
+            "attn": init_attn(k1),
+            "ffn_norm": L.init_rmsnorm(cfg.d_model),
+            "moe": init_moe_ffn(k2, cfg),
+        }
+
+    n_moe = cfg.n_layers - cfg.n_dense_layers
+    params = {
+        "embed": (jax.random.normal(keys[0], (cfg.vocab, cfg.d_model),
+                                    jnp.float32) * 0.02).astype(dt),
+        "dense_layers": jax.vmap(init_dense_layer)(
+            jax.random.split(keys[1], cfg.n_dense_layers)),
+        "moe_layers": jax.vmap(init_moe_layer)(
+            jax.random.split(keys[2], n_moe)),
+        "final_norm": L.init_rmsnorm(cfg.d_model),
+        "unembed": L._init_dense(keys[3], cfg.d_model, cfg.vocab, dt),
+    }
+    if cfg.use_mtp:
+        params["mtp"] = {
+            "proj": L._init_dense(keys[4], 2 * cfg.d_model, cfg.d_model, dt),
+            "block": init_dense_layer(keys[5]),
+            "norm": L.init_rmsnorm(cfg.d_model),
+        }
+    return params
+
+
+def _attn(x, lp, cfg: MoEConfig, positions):
+    if cfg.attn_type == "mla":
+        return mla_attention(L.rmsnorm(x, lp["attn_norm"]), lp["attn"], cfg,
+                             positions)
+    h, _ = L.attention(L.rmsnorm(x, lp["attn_norm"]), lp["attn"], cfg.n_heads,
+                       cfg.n_kv, cfg.head_dim, positions, cfg.rope_theta)
+    return h
+
+
+def forward_hidden(params: dict, tokens: jnp.ndarray, cfg: MoEConfig
+                   ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """tokens [B, S] -> (final hidden [B, S, d], aux_loss)."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    positions = jnp.arange(tokens.shape[1])
+
+    def dense_body(x, lp):
+        x = x + _attn(x, lp, cfg, positions)
+        x = x + L.glu_ffn(L.rmsnorm(x, lp["ffn_norm"]), lp["ffn"], "swiglu")
+        return x, None
+
+    def moe_body(carry, lp):
+        x, aux = carry
+        x = x + _attn(x, lp, cfg, positions)
+        y, a = moe_ffn(L.rmsnorm(x, lp["ffn_norm"]), lp["moe"], cfg)
+        return (x + y, aux + a), None
+
+    if cfg.remat:
+        dense_body = jax.checkpoint(dense_body)
+        moe_body = jax.checkpoint(moe_body)
+
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(dense_body, x, params["dense_layers"])
+        (x, aux), _ = jax.lax.scan(moe_body, (x, jnp.float32(0.0)),
+                                   params["moe_layers"])
+    else:
+        for i in range(cfg.n_dense_layers):
+            x, _ = dense_body(x, jax.tree.map(lambda a: a[i],
+                                              params["dense_layers"]))
+        carry = (x, jnp.float32(0.0))
+        for i in range(cfg.n_layers - cfg.n_dense_layers):
+            carry, _ = moe_body(carry, jax.tree.map(lambda a: a[i],
+                                                    params["moe_layers"]))
+        x, aux = carry
+    return L.rmsnorm(x, params["final_norm"]), aux
+
+
+def forward(params: dict, tokens: jnp.ndarray, cfg: MoEConfig
+            ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """tokens [B, S] -> (logits [B, S, V], aux_loss)."""
+    x, aux = forward_hidden(params, tokens, cfg)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"].astype(x.dtype))
+    return logits, aux
+
+
+def loss_fn(params: dict, batch: dict, cfg: MoEConfig) -> jnp.ndarray:
+    tokens = batch["tokens"]
+    if cfg.ce_chunks > 1:
+        h, aux = forward_hidden(params, tokens, cfg)
+        loss = L.chunked_cross_entropy(h[:, :-1], params["unembed"],
+                                       tokens[:, 1:], cfg.ce_chunks) + aux
+    else:
+        logits, aux = forward(params, tokens, cfg)
+        loss = L.cross_entropy(logits[:, :-1], tokens[:, 1:]) + aux
+    if cfg.use_mtp:
+        # MTP: predict t+2 from (h_t, emb_{t+1}) through one extra block.
+        x = jnp.take(params["embed"], tokens, axis=0)
+        h = jnp.concatenate([x[:, :-1], x[:, 1:]], axis=-1)
+        h = L.dense(h, params["mtp"]["proj"])
+        positions = jnp.arange(h.shape[1])
+        lp = params["mtp"]["block"]
+        h = h + _attn(h, lp, cfg, positions)
+        h = h + L.glu_ffn(L.rmsnorm(h, lp["ffn_norm"]), lp["ffn"], "swiglu")
+        h = L.rmsnorm(h, params["mtp"]["norm"])
+        if cfg.ce_chunks > 1:
+            mtp_loss = L.chunked_cross_entropy(
+                h[:, :-1], params["unembed"], tokens[:, 2:], cfg.ce_chunks)
+        else:
+            mtp_logits = jnp.einsum("bsd,dv->bsv", h,
+                                    params["unembed"].astype(h.dtype))
+            mtp_loss = L.cross_entropy(mtp_logits[:, :-1], tokens[:, 2:])
+        loss = loss + cfg.mtp_loss_weight * mtp_loss
+    return loss
+
+
+# ------------------------------------------------------------------- decode
+
+def init_cache(cfg: MoEConfig, batch: int, seq: int) -> dict:
+    if cfg.attn_type == "mla":
+        # latent cache: (c_kv + k_rope) per token — 576 f for DeepSeek-V3
+        return {"latent": jnp.zeros(
+            (cfg.n_layers, batch, seq, cfg.kv_lora_rank + cfg.qk_rope_dim),
+            cfg.jdtype)}
+    shape = (cfg.n_layers, batch, cfg.n_kv, seq, cfg.head_dim)
+    return {"k": jnp.zeros(shape, cfg.jdtype),
+            "v": jnp.zeros(shape, cfg.jdtype)}
+
+
+def decode_step(params: dict, token: jnp.ndarray, cache: dict,
+                pos: jnp.ndarray, cfg: MoEConfig) -> tuple[jnp.ndarray, dict]:
+    """One-token decode.  MLA path attends in latent space: scores are
+    computed against the cached latent via the absorbed q-projection
+    (W_uk^T q), so per-step FLOPs scale with kv_lora_rank, not heads*dim.
+    GQA path (Kimi-K2) uses the standard per-head KV cache."""
+    if cfg.attn_type != "mla":
+        return _decode_step_gqa(params, token, cache, pos, cfg)
+    b = token.shape[0]
+    x = jnp.take(params["embed"], token[:, None], axis=0)
+    positions = jnp.full((1,), pos, jnp.int32)
+    H, dn, dr, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    r = cfg.kv_lora_rank
+
+    def layer_step(x, lp, lat):
+        xn = L.rmsnorm(x, lp["attn_norm"])
+        cq = L.rmsnorm(L.dense(xn, lp["attn"]["wq_a"]), lp["attn"]["q_norm"])
+        q = L.dense(cq, lp["attn"]["wq_b"]).reshape(b, 1, H, dn + dr)
+        q = q.transpose(0, 2, 1, 3)
+        q_nope, q_rope = q[..., :dn], q[..., dn:]
+        q_rope = L.apply_rope(q_rope, positions, cfg.rope_theta)
+
+        kv_a = L.dense(xn, lp["attn"]["wkv_a"])  # [b,1,r+dr]
+        c_new = jnp.concatenate(
+            [L.rmsnorm(kv_a[..., :r], lp["attn"]["kv_norm"]),
+             L.apply_rope(kv_a[..., None, r:], positions, cfg.rope_theta
+                          )[..., 0, :]], axis=-1)
+        lat = jax.lax.dynamic_update_slice(
+            lat, c_new.astype(lat.dtype), (jnp.int32(0), pos, jnp.int32(0)))
+        c_all, krope_all = lat[..., :r], lat[..., r:]  # [b,S,r],[b,S,dr]
+
+        # absorbed attention: q_nope -> latent space via W_uk per head
+        wkv_b = lp["attn"]["wkv_b"].reshape(r, H, dn + dv)
+        w_uk = wkv_b[:, :, :dn]  # [r, H, dn]
+        q_lat = jnp.einsum("bhqd,rhd->bhqr", q_nope.astype(jnp.float32),
+                           w_uk.astype(jnp.float32))  # [b,H,1,r]
+        s = (jnp.einsum("bhqr,bsr->bhqs", q_lat,
+                        c_all.astype(jnp.float32))
+             + jnp.einsum("bhqd,bsd->bhqs", q_rope.astype(jnp.float32),
+                          krope_all.astype(jnp.float32)))
+        s = s / (dn + dr) ** 0.5
+        mask = jnp.arange(lat.shape[1])[None, None, None, :] <= pos
+        p_att = jax.nn.softmax(jnp.where(mask, s, -1e30), axis=-1)
+        ctx = jnp.einsum("bhqs,bsr->bhqr", p_att,
+                         c_all.astype(jnp.float32))  # [b,H,1,r]
+        w_uv = wkv_b[:, :, dn:]  # [r, H, dv]
+        o = jnp.einsum("bhqr,rhd->bhqd", ctx, w_uv.astype(jnp.float32))
+        o = o.astype(x.dtype).transpose(0, 2, 1, 3).reshape(b, 1, H * dv)
+        x = x + L.dense(o, lp["attn"]["wo"])
+        return x, lat
+
+    def dense_body(x, inp):
+        lp, lat = inp
+        x, lat = layer_step(x, lp, lat)
+        x = x + L.glu_ffn(L.rmsnorm(x, lp["ffn_norm"]), lp["ffn"], "swiglu")
+        return x, lat
+
+    def moe_body(x, inp):
+        lp, lat = inp
+        x, lat = layer_step(x, lp, lat)
+        y, _ = moe_ffn(L.rmsnorm(x, lp["ffn_norm"]), lp["moe"], cfg)
+        return x + y, lat
+
+    nd = cfg.n_dense_layers
+    lat = cache["latent"]
+    if cfg.scan_layers:
+        x, lat_d = jax.lax.scan(
+            lambda c, i: dense_body(c, i), x,
+            (params["dense_layers"], lat[:nd]))
+        x, lat_m = jax.lax.scan(
+            lambda c, i: moe_body(c, i), x,
+            (params["moe_layers"], lat[nd:]))
+        new_lat = jnp.concatenate([lat_d, lat_m], axis=0)
+    else:
+        outs = []
+        for i in range(nd):
+            x, l_i = dense_body(x, (jax.tree.map(lambda a: a[i],
+                                                 params["dense_layers"]),
+                                    lat[i]))
+            outs.append(l_i)
+        for i in range(cfg.n_layers - nd):
+            x, l_i = moe_body(x, (jax.tree.map(lambda a: a[i],
+                                               params["moe_layers"]),
+                                  lat[nd + i]))
+            outs.append(l_i)
+        new_lat = jnp.stack(outs)
+    x = L.rmsnorm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x,
+                        params["unembed"].astype(x.dtype))[:, 0]
+    return logits, {"latent": new_lat}
+
+
+def _decode_step_gqa(params: dict, token: jnp.ndarray, cache: dict,
+                     pos: jnp.ndarray, cfg: MoEConfig
+                     ) -> tuple[jnp.ndarray, dict]:
+    b = token.shape[0]
+    x = jnp.take(params["embed"], token[:, None], axis=0)
+    positions = jnp.full((1,), pos, jnp.int32)
+    group = cfg.n_heads // cfg.n_kv
+
+    def attn_step(x, lp, ck, cv):
+        xn = L.rmsnorm(x, lp["attn_norm"])
+        ap = lp["attn"]
+        q = L.dense(xn, ap["wq"], ap.get("bq")).reshape(
+            b, 1, cfg.n_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+        kk = L.dense(xn, ap["wk"], ap.get("bk")).reshape(
+            b, 1, cfg.n_kv, cfg.head_dim).transpose(0, 2, 1, 3)
+        vv = L.dense(xn, ap["wv"], ap.get("bv")).reshape(
+            b, 1, cfg.n_kv, cfg.head_dim).transpose(0, 2, 1, 3)
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        kk = L.apply_rope(kk, positions, cfg.rope_theta)
+        ck = jax.lax.dynamic_update_slice(ck, kk.astype(ck.dtype),
+                                          (jnp.int32(0), jnp.int32(0), pos, jnp.int32(0)))
+        cv = jax.lax.dynamic_update_slice(cv, vv.astype(cv.dtype),
+                                          (jnp.int32(0), jnp.int32(0), pos, jnp.int32(0)))
+        # grouped einsum: no KV repeat (see transformer.decode_step)
+        qg = q[:, :, 0].reshape(b, cfg.n_kv, group, cfg.head_dim)
+        s = jnp.einsum("bkgd,bksd->bkgs", qg.astype(jnp.float32),
+                       ck.astype(jnp.float32)) / cfg.head_dim ** 0.5
+        mask = jnp.arange(ck.shape[2])[None, None, None, :] <= pos
+        pa = jax.nn.softmax(jnp.where(mask, s, -1e30), axis=-1)
+        o = jnp.einsum("bkgs,bksd->bkgd", pa, cv.astype(jnp.float32))
+        o = o.astype(x.dtype).reshape(b, 1, cfg.n_heads * cfg.head_dim)
+        return x + L.dense(o, ap["wo"]), ck, cv
+
+    def dense_body(x, inp):
+        lp, ck, cv = inp
+        x, ck, cv = attn_step(x, lp, ck, cv)
+        x = x + L.glu_ffn(L.rmsnorm(x, lp["ffn_norm"]), lp["ffn"], "swiglu")
+        return x, (ck, cv)
+
+    def moe_body(x, inp):
+        lp, ck, cv = inp
+        x, ck, cv = attn_step(x, lp, ck, cv)
+        y, _ = moe_ffn(L.rmsnorm(x, lp["ffn_norm"]), lp["moe"], cfg)
+        return x + y, (ck, cv)
+
+    nd = cfg.n_dense_layers
+    if cfg.scan_layers:
+        x, (kd, vd) = jax.lax.scan(dense_body, x,
+                                   (params["dense_layers"],
+                                    cache["k"][:nd], cache["v"][:nd]))
+        x, (km, vm) = jax.lax.scan(moe_body, x,
+                                   (params["moe_layers"],
+                                    cache["k"][nd:], cache["v"][nd:]))
+        new_k = jnp.concatenate([kd, km], axis=0)
+        new_v = jnp.concatenate([vd, vm], axis=0)
+    else:
+        ks, vs = [], []
+        for i in range(nd):
+            x, (ck, cv) = dense_body(
+                x, (jax.tree.map(lambda a: a[i], params["dense_layers"]),
+                    cache["k"][i], cache["v"][i]))
+            ks.append(ck)
+            vs.append(cv)
+        for i in range(cfg.n_layers - nd):
+            x, (ck, cv) = moe_body(
+                x, (jax.tree.map(lambda a: a[i], params["moe_layers"]),
+                    cache["k"][nd + i], cache["v"][nd + i]))
+            ks.append(ck)
+            vs.append(cv)
+        new_k = jnp.stack(ks)
+        new_v = jnp.stack(vs)
+    x = L.rmsnorm(x, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", x,
+                        params["unembed"].astype(x.dtype))[:, 0]
+    return logits, {"k": new_k, "v": new_v}

@@ -1,0 +1,224 @@
+"""Dense decoder-only LM (GLM-4 / Gemma / Qwen2 family), pure JAX.
+
+- layers are *scanned* (stacked params, ``jax.lax.scan``) so 40-60-layer
+  models lower to compact HLO — essential for the 512-device dry-run;
+- remat policy is applied around the scanned block;
+- GQA attention through the flash kernel wrapper, RoPE (optionally partial,
+  GLM-4 style), GLU FFN (SwiGLU / GeGLU), optional QKV bias (Qwen2/GLM),
+  optional tied embeddings + embedding scaling (Gemma);
+- decode path reuses the same block with a KV cache.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+@dataclass(frozen=True)
+class TransformerConfig:
+    name: str = "lm"
+    n_layers: int = 4
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv: int = 2
+    head_dim: int = 64
+    d_ff: int = 1024
+    vocab: int = 1000
+    act: str = "swiglu"  # swiglu | geglu
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    rope_fraction: float = 1.0
+    tie_embeddings: bool = False
+    scale_embeddings: bool = False  # Gemma: x *= sqrt(d_model)
+    dtype: str = "bfloat16"
+    remat: bool = True
+    # >1: fused chunked unembed+CE (never materialises [T, V] logits)
+    ce_chunks: int = 1
+    # scan=True gives compact HLO (fast compiles); the dry-run lowers with
+    # scan=False (unrolled layers) because XLA cost_analysis does not
+    # multiply while-loop bodies by trip count — unrolled HLO makes the
+    # roofline terms exact.
+    scan_layers: bool = True
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def n_params(self) -> int:
+        """Analytic parameter count (for roofline MODEL_FLOPS)."""
+        d, h, kv, hd, f, v = (self.d_model, self.n_heads, self.n_kv,
+                              self.head_dim, self.d_ff, self.vocab)
+        attn = d * h * hd + 2 * d * kv * hd + h * hd * d
+        ffn = 3 * d * f
+        per_layer = attn + ffn + 2 * d
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        return self.n_layers * per_layer + emb + d
+
+
+# ------------------------------------------------------------------- params
+
+def init(key, cfg: TransformerConfig) -> dict:
+    dt = cfg.jdtype
+    k_emb, k_out, k_layers = jax.random.split(key, 3)
+
+    def init_layer(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "attn_norm": L.init_rmsnorm(cfg.d_model),
+            "attn": L.init_attention(k1, cfg.d_model, cfg.n_heads, cfg.n_kv,
+                                     cfg.head_dim, cfg.qkv_bias, dt),
+            "ffn_norm": L.init_rmsnorm(cfg.d_model),
+            "ffn": L.init_glu_ffn(k2, cfg.d_model, cfg.d_ff, dt),
+        }
+
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    stacked = jax.vmap(init_layer)(layer_keys)
+    params = {
+        "embed": (jax.random.normal(k_emb, (cfg.vocab, cfg.d_model),
+                                    jnp.float32) * 0.02).astype(dt),
+        "layers": stacked,
+        "final_norm": L.init_rmsnorm(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = L._init_dense(k_out, cfg.d_model, cfg.vocab, dt)
+    return params
+
+
+# ------------------------------------------------------------------ forward
+
+def _block(x, lp, cfg: TransformerConfig, positions, cache=None):
+    h, new_cache = L.attention(
+        L.rmsnorm(x, lp["attn_norm"]), lp["attn"], cfg.n_heads, cfg.n_kv,
+        cfg.head_dim, positions, cfg.rope_theta, cfg.rope_fraction,
+        causal=True, kv_cache=cache)
+    x = x + h
+    x = x + L.glu_ffn(L.rmsnorm(x, lp["ffn_norm"]), lp["ffn"], cfg.act)
+    return x, new_cache
+
+
+def forward_hidden(params: dict, tokens: jnp.ndarray, cfg: TransformerConfig
+                   ) -> jnp.ndarray:
+    """tokens [B, S] -> final hidden states [B, S, d]."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.scale_embeddings:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    positions = jnp.arange(tokens.shape[1])
+
+    def body(x, lp):
+        x, _ = _block(x, lp, cfg, positions)
+        return x, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, params["layers"])
+    else:
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            x, _ = body(x, lp)
+    return L.rmsnorm(x, params["final_norm"])
+
+
+def _w_out(params: dict, cfg: TransformerConfig) -> jnp.ndarray:
+    return params["embed"].T if cfg.tie_embeddings else params["unembed"]
+
+
+def forward(params: dict, tokens: jnp.ndarray, cfg: TransformerConfig
+            ) -> jnp.ndarray:
+    """tokens [B, S] -> logits [B, S, V]."""
+    x = forward_hidden(params, tokens, cfg)
+    return jnp.einsum("bsd,dv->bsv", x, _w_out(params, cfg).astype(x.dtype))
+
+
+def loss_fn(params: dict, batch: dict, cfg: TransformerConfig) -> jnp.ndarray:
+    tokens = batch["tokens"]
+    if cfg.ce_chunks > 1:
+        h = forward_hidden(params, tokens, cfg)
+        return L.chunked_cross_entropy(h[:, :-1], _w_out(params, cfg),
+                                       tokens[:, 1:], cfg.ce_chunks)
+    logits = forward(params, tokens, cfg)
+    return L.cross_entropy(logits[:, :-1], tokens[:, 1:])
+
+
+# ------------------------------------------------------------------- decode
+
+def init_cache(cfg: TransformerConfig, batch: int, seq: int) -> dict:
+    """KV cache [L, B, n_kv, S, head_dim] (bf16)."""
+    shape = (cfg.n_layers, batch, cfg.n_kv, seq, cfg.head_dim)
+    return {"k": jnp.zeros(shape, cfg.jdtype),
+            "v": jnp.zeros(shape, cfg.jdtype)}
+
+
+def decode_step(params: dict, token: jnp.ndarray, cache: dict,
+                pos: jnp.ndarray, cfg: TransformerConfig
+                ) -> tuple[jnp.ndarray, dict]:
+    """One-token decode against a filled cache.
+
+    token [B]; cache k/v [L, B, n_kv, S, D] (S = context length, filled);
+    pos scalar: current position.  Returns (logits [B, V], updated cache).
+    Attention over the cache uses masking by ``pos`` rather than dynamic
+    shapes (cache is preallocated at max context).
+    """
+    b = token.shape[0]
+    x = jnp.take(params["embed"], token[:, None], axis=0)  # [B, 1, d]
+    if cfg.scale_embeddings:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    positions = jnp.full((1,), pos, jnp.int32)
+
+    def body(carry, inp):
+        x = carry
+        lp, ck, cv = inp
+        xn = L.rmsnorm(x, lp["attn_norm"])
+        q = L.dense(xn, lp["attn"]["wq"], lp["attn"].get("bq")).reshape(
+            b, 1, cfg.n_heads, cfg.head_dim).transpose(0, 2, 1, 3)
+        kk = L.dense(xn, lp["attn"]["wk"], lp["attn"].get("bk")).reshape(
+            b, 1, cfg.n_kv, cfg.head_dim).transpose(0, 2, 1, 3)
+        vv = L.dense(xn, lp["attn"]["wv"], lp["attn"].get("bv")).reshape(
+            b, 1, cfg.n_kv, cfg.head_dim).transpose(0, 2, 1, 3)
+        q = L.apply_rope(q, positions, cfg.rope_theta, cfg.rope_fraction)
+        kk = L.apply_rope(kk, positions, cfg.rope_theta, cfg.rope_fraction)
+        ck = jax.lax.dynamic_update_slice(
+            ck, kk.astype(ck.dtype), (jnp.int32(0), jnp.int32(0), pos, jnp.int32(0)))
+        cv = jax.lax.dynamic_update_slice(
+            cv, vv.astype(cv.dtype), (jnp.int32(0), jnp.int32(0), pos, jnp.int32(0)))
+        # masked attention over the preallocated cache.  Grouped einsum (no
+        # KV repeat): with a sequence-sharded cache this lowers into local
+        # partial softmax terms + small all-reduces (flash-decode pattern)
+        # instead of an all-gather of the cache.
+        group = cfg.n_heads // cfg.n_kv
+        qg = q[:, :, 0].reshape(b, cfg.n_kv, group, cfg.head_dim)
+        s = jnp.einsum("bkgd,bksd->bkgs", qg.astype(jnp.float32),
+                       ck.astype(jnp.float32)) / (cfg.head_dim ** 0.5)
+        mask = jnp.arange(ck.shape[2])[None, None, None, :] <= pos
+        s = jnp.where(mask, s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkgs,bksd->bkgd", p,
+                       cv.astype(jnp.float32)).astype(x.dtype)
+        o = o.reshape(b, 1, cfg.n_heads * cfg.head_dim)
+        x = x + L.dense(o, lp["attn"]["wo"])
+        x = x + L.glu_ffn(L.rmsnorm(x, lp["ffn_norm"]), lp["ffn"], cfg.act)
+        return x, (ck, cv)
+
+    if cfg.scan_layers:
+        x, (new_k, new_v) = jax.lax.scan(
+            body, x, (params["layers"], cache["k"], cache["v"]))
+    else:
+        ks, vs = [], []
+        for i in range(cfg.n_layers):
+            inp = jax.tree.map(lambda a: a[i],
+                               (params["layers"], cache["k"], cache["v"]))
+            x, (ck, cv) = body(x, inp)
+            ks.append(ck)
+            vs.append(cv)
+        new_k = jnp.stack(ks)
+        new_v = jnp.stack(vs)
+    x = L.rmsnorm(x, params["final_norm"])
+    w_out = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = jnp.einsum("bsd,dv->bsv", x, w_out.astype(x.dtype))[:, 0]
+    return logits, {"k": new_k, "v": new_v}

@@ -1,0 +1,28 @@
+"""RDF substrate: dictionary encoding, HDT-style triple store, data generators.
+
+The paper's backend is HDT (Fernandez et al., JWS 2013): a dictionary-encoded,
+index-backed triple store answering triple/star patterns without parsing.
+This package is our JAX/numpy equivalent:
+
+- :mod:`repro.rdf.dictionary` — term <-> id mapping.
+- :mod:`repro.rdf.store`      — sorted-index triple store (PSO/POS orders,
+  per-predicate CSR, composite int64 keys for vectorised binary search).
+- :mod:`repro.rdf.watdiv`     — WatDiv-like synthetic knowledge-graph
+  generator (Aluc et al., ISWC 2014) used by the paper's evaluation.
+- :mod:`repro.rdf.queries`    — query-load generator: 1-star / 2-star /
+  3-star / path / union loads as in the paper's Section 6.
+"""
+
+from repro.rdf.dictionary import Dictionary
+from repro.rdf.store import TripleStore
+from repro.rdf.watdiv import WatDivConfig, generate_watdiv
+from repro.rdf.queries import QueryLoadConfig, generate_query_load
+
+__all__ = [
+    "Dictionary",
+    "TripleStore",
+    "WatDivConfig",
+    "generate_watdiv",
+    "QueryLoadConfig",
+    "generate_query_load",
+]

@@ -1,0 +1,69 @@
+"""Term dictionary: bidirectional mapping between RDF terms and int32 ids.
+
+HDT stores four dictionary sections (shared subject-object, subjects,
+predicates, objects).  We keep a single id space for subjects/objects (so a
+term used in both positions has one id, as in HDT's shared section) and a
+separate compact id space for predicates, which keeps predicate ids small —
+that matters because composite sort keys multiply by the predicate radix.
+"""
+
+from __future__ import annotations
+
+from typing import Iterable
+
+
+class Dictionary:
+    """Bidirectional term <-> id dictionary with separate predicate space."""
+
+    def __init__(self) -> None:
+        self._term_to_id: dict[str, int] = {}
+        self._id_to_term: list[str] = []
+        self._pred_to_id: dict[str, int] = {}
+        self._id_to_pred: list[str] = []
+
+    # -- encoding ---------------------------------------------------------
+    def encode_term(self, term: str) -> int:
+        tid = self._term_to_id.get(term)
+        if tid is None:
+            tid = len(self._id_to_term)
+            self._term_to_id[term] = tid
+            self._id_to_term.append(term)
+        return tid
+
+    def encode_predicate(self, pred: str) -> int:
+        pid = self._pred_to_id.get(pred)
+        if pid is None:
+            pid = len(self._id_to_pred)
+            self._pred_to_id[pred] = pid
+            self._id_to_pred.append(pred)
+        return pid
+
+    def encode_triples(
+        self, triples: Iterable[tuple[str, str, str]]
+    ) -> list[tuple[int, int, int]]:
+        return [
+            (self.encode_term(s), self.encode_predicate(p), self.encode_term(o))
+            for s, p, o in triples
+        ]
+
+    # -- decoding ---------------------------------------------------------
+    def decode_term(self, tid: int) -> str:
+        return self._id_to_term[tid]
+
+    def decode_predicate(self, pid: int) -> str:
+        return self._id_to_pred[pid]
+
+    # -- stats ------------------------------------------------------------
+    @property
+    def n_terms(self) -> int:
+        return len(self._id_to_term)
+
+    @property
+    def n_predicates(self) -> int:
+        return len(self._id_to_pred)
+
+    def lookup_term(self, term: str) -> int | None:
+        return self._term_to_id.get(term)
+
+    def lookup_predicate(self, pred: str) -> int | None:
+        return self._pred_to_id.get(pred)

@@ -1,0 +1,232 @@
+"""HDT-style triple store: sorted permutation indexes over dictionary ids.
+
+Layout
+------
+Triples are dictionary-encoded ``(s, p, o)`` int32 triples.  We materialise
+two sort orders (HDT materialises SPO + optional secondary indexes; the SPF
+server's access paths need exactly these two):
+
+- **PSO order** — sorted by ``(p, s, o)``.  A predicate's triples form a
+  contiguous run (CSR ``pred_offsets``); within the run subjects are sorted,
+  so ``(?s, p, ?o)`` yields a *sorted* subject list and ``(s, p, ?o)`` is a
+  binary-search run.  Star-pattern evaluation intersects these sorted subject
+  lists — the paper's "stars are linear for the server" property maps to
+  merge-intersection of sorted runs.
+- **POS order** — sorted by ``(p, o, s)``.  ``(?s, p, o)`` is a binary-search
+  run whose subjects are sorted — again merge-intersectable.
+
+Composite int64 keys (``p*R + s`` etc.) make every lookup a vectorised
+``searchsorted``; radix overflow is checked at build time.
+
+The store keeps **numpy** copies for host-side query planning (join ordering
+uses exact run lengths — the Def. 6 cardinality metadata with eps = 0) and
+**jax** device arrays for evaluation.  ``shard_by_subject`` hash-partitions
+the store for the distributed runtime: every star pattern's matches share a
+subject, so subject hashing makes server-side star joins collective-free.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class StoreArrays(NamedTuple):
+    """Device-resident index arrays (a pytree; safe to close over in jit).
+
+    All arrays padded entries (if any) sort to the end with key = +max and
+    never fall inside a real predicate/key run.
+    """
+
+    # PSO order
+    key_ps_pso: jnp.ndarray  # int64[n]  p*R_term + s, ascending
+    s_pso: jnp.ndarray  # int32[n]
+    o_pso: jnp.ndarray  # int32[n]
+    # POS order
+    key_po_pos: jnp.ndarray  # int64[n]  p*R_term + o, ascending
+    s_pos: jnp.ndarray  # int32[n]
+    o_pos: jnp.ndarray  # int32[n]  (object of each POS row; run-constant)
+
+
+@dataclass
+class TripleStore:
+    """Immutable dictionary-id triple store with PSO/POS sorted indexes."""
+
+    n_triples: int
+    n_terms: int  # radix for subject/object ids (shared id space)
+    n_predicates: int
+    # host (numpy) copies for planning
+    h_key_ps: np.ndarray
+    h_s_pso: np.ndarray
+    h_o_pso: np.ndarray
+    h_key_po: np.ndarray
+    h_s_pos: np.ndarray
+    h_o_pos: np.ndarray
+    h_pred_offsets: np.ndarray  # int64[n_predicates + 2] CSR (PSO==POS runs)
+    # device copies (built lazily)
+    _device: StoreArrays | None = field(default=None, repr=False)
+
+    # ------------------------------------------------------------------ build
+    @staticmethod
+    def build(s: np.ndarray, p: np.ndarray, o: np.ndarray, n_terms: int | None = None,
+              n_predicates: int | None = None) -> "TripleStore":
+        s = np.asarray(s, dtype=np.int64)
+        p = np.asarray(p, dtype=np.int64)
+        o = np.asarray(o, dtype=np.int64)
+        if n_terms is None:
+            n_terms = int(max(s.max(initial=0), o.max(initial=0))) + 1
+        if n_predicates is None:
+            n_predicates = int(p.max(initial=0)) + 1
+        n = s.shape[0]
+        r = np.int64(n_terms)
+        # radix-overflow check: key = p * R + term must fit int64.
+        if (n_predicates + 1) * int(r) >= 2**62:
+            raise ValueError("composite key radix overflow; shard the dictionary")
+
+        # deduplicate (RDF graphs are triple *sets*)
+        pso = np.stack([p, s, o], axis=1)
+        pso = np.unique(pso, axis=0)  # sorts lexicographically by (p, s, o)
+        p_, s_, o_ = pso[:, 0], pso[:, 1], pso[:, 2]
+        n = p_.shape[0]
+        key_ps = p_ * r + s_
+
+        order_pos = np.lexsort((s_, o_, p_))  # sort by (p, o, s)
+        s_pos = s_[order_pos]
+        o_pos = o_[order_pos]
+        key_po = p_[order_pos] * r + o_pos
+
+        # CSR over predicates (same boundaries in both orders).
+        pred_offsets = np.searchsorted(p_, np.arange(n_predicates + 2))
+        return TripleStore(
+            n_triples=int(n),
+            n_terms=int(n_terms),
+            n_predicates=int(n_predicates),
+            h_key_ps=key_ps,
+            h_s_pso=s_.astype(np.int32),
+            h_o_pso=o_.astype(np.int32),
+            h_key_po=key_po,
+            h_s_pos=s_pos.astype(np.int32),
+            h_o_pos=o_pos.astype(np.int32),
+            h_pred_offsets=pred_offsets.astype(np.int64),
+        )
+
+    # ------------------------------------------------------------- device view
+    @property
+    def device(self) -> StoreArrays:
+        if self._device is None:
+            object.__setattr__(
+                self,
+                "_device",
+                StoreArrays(
+                    key_ps_pso=jnp.asarray(self.h_key_ps),
+                    s_pso=jnp.asarray(self.h_s_pso),
+                    o_pso=jnp.asarray(self.h_o_pso),
+                    key_po_pos=jnp.asarray(self.h_key_po),
+                    s_pos=jnp.asarray(self.h_s_pos),
+                    o_pos=jnp.asarray(self.h_o_pos),
+                ),
+            )
+        return self._device
+
+    @property
+    def radix(self) -> int:
+        return self.n_terms
+
+    # ------------------------------------------------- host planning helpers
+    def pred_run(self, p: int) -> tuple[int, int]:
+        """Run [lo, hi) of predicate ``p`` in PSO (== POS) order."""
+        return int(self.h_pred_offsets[p]), int(self.h_pred_offsets[p + 1])
+
+    def ps_run(self, p: int, s: int) -> tuple[int, int]:
+        """Run [lo, hi) of (p, s, ?o) rows in PSO order."""
+        key = np.int64(p) * self.n_terms + s
+        lo = int(np.searchsorted(self.h_key_ps, key, side="left"))
+        hi = int(np.searchsorted(self.h_key_ps, key, side="right"))
+        return lo, hi
+
+    def po_run(self, p: int, o: int) -> tuple[int, int]:
+        """Run [lo, hi) of (?s, p, o) rows in POS order."""
+        key = np.int64(p) * self.n_terms + o
+        lo = int(np.searchsorted(self.h_key_po, key, side="left"))
+        hi = int(np.searchsorted(self.h_key_po, key, side="right"))
+        return lo, hi
+
+    def tp_cardinality(self, p: int, s: int | None = None, o: int | None = None) -> int:
+        """Exact cardinality of a bound-predicate triple pattern.
+
+        This is the Def. 6 ``void:triples`` metadata value (here exact, i.e.
+        the F-specific threshold eps = 0).
+        """
+        if s is not None and o is not None:
+            lo, hi = self.ps_run(p, s)
+            return int(np.searchsorted(self.h_o_pso[lo:hi], o, side="right")
+                       - np.searchsorted(self.h_o_pso[lo:hi], o, side="left"))
+        if s is not None:
+            lo, hi = self.ps_run(p, s)
+            return hi - lo
+        if o is not None:
+            lo, hi = self.po_run(p, o)
+            return hi - lo
+        lo, hi = self.pred_run(p)
+        return hi - lo
+
+    # --------------------------------------------------------------- sharding
+    def shard_by_subject(self, n_shards: int) -> list["TripleStore"]:
+        """Hash-partition by subject; pad shards to equal triple count.
+
+        Padding triples use predicate id ``n_predicates`` (one past the last
+        real predicate) so they can never match a query pattern, and sort to
+        the end of every index.
+        """
+        # reconstruct (s, p, o) from the PSO arrays
+        p_all = (self.h_key_ps // self.n_terms).astype(np.int64)
+        s_all = self.h_s_pso.astype(np.int64)
+        o_all = self.h_o_pso.astype(np.int64)
+        shard_of = _subject_hash(s_all) % n_shards
+        counts = np.bincount(shard_of, minlength=n_shards)
+        cap = int(counts.max()) if n_shards > 0 else 0
+        shards: list[TripleStore] = []
+        for i in range(n_shards):
+            m = shard_of == i
+            pad = cap - int(m.sum())
+            # padding triples carry the out-of-range predicate and distinct
+            # subjects (so the build-time dedup keeps all of them)
+            s_i = np.concatenate([s_all[m], np.arange(pad, dtype=np.int64)])
+            p_i = np.concatenate([p_all[m], np.full(pad, self.n_predicates, np.int64)])
+            o_i = np.concatenate([o_all[m], np.zeros(pad, np.int64)])
+            shards.append(
+                TripleStore.build(
+                    s_i, p_i, o_i,
+                    n_terms=self.n_terms,
+                    n_predicates=self.n_predicates,  # padding pred is out of range by design
+                )
+            )
+        return shards
+
+    def stacked_shard_arrays(self, n_shards: int) -> StoreArrays:
+        """Shard and stack device arrays along a leading shard axis.
+
+        Output arrays have shape ``[n_shards, cap]`` — the layout consumed by
+        ``shard_map`` in the distributed engine.
+        """
+        shards = self.shard_by_subject(n_shards)
+        return StoreArrays(
+            key_ps_pso=jnp.stack([s.device.key_ps_pso for s in shards]),
+            s_pso=jnp.stack([s.device.s_pso for s in shards]),
+            o_pso=jnp.stack([s.device.o_pso for s in shards]),
+            key_po_pos=jnp.stack([s.device.key_po_pos for s in shards]),
+            s_pos=jnp.stack([s.device.s_pos for s in shards]),
+            o_pos=jnp.stack([s.device.o_pos for s in shards]),
+        )
+
+
+def _subject_hash(s: np.ndarray) -> np.ndarray:
+    """Deterministic 64-bit mix (splitmix64 finaliser) for subject sharding."""
+    x = s.astype(np.uint64)
+    x = (x ^ (x >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+    x = (x ^ (x >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+    x = x ^ (x >> np.uint64(31))
+    return (x & np.uint64(0x7FFFFFFFFFFFFFFF)).astype(np.int64)

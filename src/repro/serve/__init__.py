@@ -1,0 +1,2 @@
+"""Serving substrate: prefill + KV-cache decode with sharded caches."""
+from repro.serve.serving import cache_specs, make_decode_step, make_prefill

@@ -1,0 +1,68 @@
+"""Serving layer: batched prefill and KV-cache decode with cache sharding.
+
+Cache layouts and shardings (production mesh ("pod","data","model")):
+
+- GQA cache  k/v [L, B, n_kv, S, D]
+- MLA cache  latent [L, B, S, r+dr]   (DeepSeek-V3: 576 per token)
+
+``decode_32k``  (B=128, S=32k): batch over ("pod","data"), sequence over
+"model" — each chip holds a 1/16 slice of every lane's context.
+``long_500k``   (B=1, S=524k): sequence over ("data","model") (x"pod") —
+the cache is the model state; 500k-token contexts only exist sharded.
+
+The decode attention is written as grouped einsum + masked softmax, which
+GSPMD lowers over a sequence-sharded cache into local partial reductions +
+small all-reduces (2-pass flash-decoding) rather than gathering the cache.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models import moe as moe_mod
+from repro.models import transformer as tfm_mod
+
+
+def _axes(mesh: Mesh, *names: str):
+    got = tuple(a for a in names if a in mesh.axis_names)
+    return got if got else None
+
+
+def cache_specs(family: str, cfg: Any, mesh: Mesh, long_context: bool) -> Any:
+    """PartitionSpec tree for the cache pytree."""
+    if family == "moe" and cfg.attn_type == "mla":
+        if long_context:
+            seq = _axes(mesh, "data", "model")
+            return {"latent": P(None, None, seq, None)}
+        return {"latent": P(None, _axes(mesh, "pod", "data"), "model", None)}
+    # gqa caches [L, B, kv, S, D]
+    if long_context:
+        seq = _axes(mesh, "data", "model")
+        return {"k": P(None, None, None, seq, None),
+                "v": P(None, None, None, seq, None)}
+    b_ax = _axes(mesh, "pod", "data")
+    return {"k": P(None, b_ax, None, "model", None),
+            "v": P(None, b_ax, None, "model", None)}
+
+
+def make_decode_step(family: str, cfg: Any):
+    if family == "moe":
+        return moe_mod.decode_step
+    return tfm_mod.decode_step
+
+
+def make_prefill(family: str, cfg: Any) -> Callable:
+    """Prefill = forward pass producing logits (cache write elided in the
+    dry-run cost model; prefill compute dominates)."""
+    if family == "moe":
+        def fwd(params, tokens):
+            logits, _ = moe_mod.forward(params, tokens, cfg)
+            return logits
+        return fwd
+    return lambda params, tokens: tfm_mod.forward(params, tokens, cfg)

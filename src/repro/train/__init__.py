@@ -1,0 +1,4 @@
+"""Training substrate: optimizer, trainer, checkpointing, compression."""
+from repro.train.optimizer import OptimizerConfig, init_opt_state, apply_updates, lr_schedule
+from repro.train.trainer import TrainerConfig, init_state, make_train_step
+from repro.train.checkpoint import CheckpointManager

@@ -1,0 +1,146 @@
+"""Parameter / activation partition rules (DP, TP, EP, SP; ZeRO-style state).
+
+Rules map parameter-tree paths to PartitionSpecs.  Conventions on the
+production mesh ("pod", "data", "model") / single-pod ("data", "model"):
+
+- DP: batch over ("pod", "data") (pods split the global batch too);
+- TP: attention heads / FFN hidden / vocab over "model";
+- EP: MoE expert dim over "data" (expert-parallel shares the DP axis, the
+  standard MaxText/GShard layout — dispatch becomes all_to_all over data);
+- SP: long-context KV caches shard sequence over "model" (and "data" too
+  for the 500k cells);
+- optimizer moments inherit the parameter specs (params are already
+  TP/EP-sharded, so big-model state is fully distributed; int8 moments
+  handle the rest — see optimizer.py).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _lm_rule(path: str, ndim: int) -> P:
+    """Partition rule for transformer/MoE param tensors by path name.
+
+    Stacked scanned layers carry a leading layer dim -> prepend None.
+    """
+    lead = (None,) if ndim >= 3 and ("layers" in path) else ()
+    if "embed" in path or "unembed" in path:
+        # [V, d] / [d, V]: vocab over model axis
+        return P("model", None) if "unembed" not in path else P(None, "model")
+    if any(k in path for k in ("wq", "wk", "wv", "wi", "wg", "wq_b", "wkv_b")):
+        return P(*lead, None, "model")  # output-feature sharded
+    if any(k in path for k in ("wo",)):
+        return P(*lead, "model", None)  # input-feature sharded
+    if any(k in path for k in ("bq", "bk", "bv")):
+        return P(*lead, "model")
+    if "router" in path:
+        return P(*lead, None, None)
+    # MoE expert tensors: [L, E, d, f] -> experts over data, f over model
+    if path.endswith("moe/wi") or path.endswith("moe/wg"):
+        return P(*lead, "data", None, "model")
+    if path.endswith("moe/wo"):
+        return P(*lead, "data", "model", None)
+    return P(*([None] * ndim))
+
+
+def _moe_aware_rule(path: str, ndim: int) -> P:
+    if "/moe/" in path and path.split("/")[-1] in ("wi", "wg", "wo"):
+        lead = (None,) if ndim == 4 else ()
+        if path.endswith("wo"):
+            return P(*lead, "data", "model", None)
+        return P(*lead, "data", None, "model")
+    return _lm_rule(path, ndim)
+
+
+def _recsys_rule(path: str, ndim: int) -> P:
+    if "embed" in path or path.endswith("w1"):
+        return P(("data", "model"))  # row-shard the huge table over everything
+    return P(*([None] * ndim))
+
+
+def _gnn_rule(path: str, ndim: int) -> P:
+    return P(*([None] * ndim))  # GNN params are tiny; replicate
+
+
+RULES = {"lm": _lm_rule, "moe": _moe_aware_rule, "recsys": _recsys_rule,
+         "gnn": _gnn_rule}
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+    return "/".join(parts)
+
+
+def param_specs(params: Any, family: str) -> Any:
+    """PartitionSpec tree matching ``params`` for the given model family."""
+    rule = RULES[family]
+
+    def spec_for(path, leaf):
+        s = rule(_path_str(path), leaf.ndim)
+        # drop axes that exceed rank (bias vectors etc.)
+        if len(s) > leaf.ndim:
+            s = P(*tuple(s)[-leaf.ndim:]) if leaf.ndim else P()
+        if len(s) < leaf.ndim:
+            s = P(*(tuple(s) + (None,) * (leaf.ndim - len(s))))
+        return s
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+def named_shardings(mesh: Mesh, specs: Any) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def filter_specs_for_mesh(mesh: Mesh, specs: Any) -> Any:
+    """Drop axis names not present in the mesh (e.g. 'pod' on single-pod)
+    and axes whose mesh size does not divide the dim (checked by caller)."""
+    names = set(mesh.axis_names)
+
+    def fix(spec: P) -> P:
+        out = []
+        for entry in spec:
+            if entry is None:
+                out.append(None)
+            elif isinstance(entry, tuple):
+                kept = tuple(a for a in entry if a in names)
+                out.append(kept if kept else None)
+            else:
+                out.append(entry if entry in names else None)
+        return P(*out)
+
+    return jax.tree.map(fix, specs, is_leaf=lambda x: isinstance(x, P))
+
+
+def validate_divisibility(mesh: Mesh, specs: Any, params: Any) -> Any:
+    """Replace any spec axis that does not divide the tensor dim with None
+    (e.g. n_kv=2 heads cannot shard 16-way -> replicate that dim)."""
+    def fix(spec: P, leaf):
+        out = []
+        for d, entry in zip(leaf.shape, tuple(spec) + (None,) * leaf.ndim):
+            if entry is None:
+                out.append(None)
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            size = 1
+            for a in axes:
+                size *= mesh.shape[a]
+            out.append(entry if d % size == 0 else None)
+        return P(*out[: leaf.ndim])
+
+    return jax.tree.map(fix, specs, params,
+                        is_leaf=lambda x: isinstance(x, P))

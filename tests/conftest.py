@@ -1,0 +1,20 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests see the real device
+count (1 on this container); only launch/dryrun.py forces 512 devices."""
+
+import numpy as np
+import pytest
+
+from repro.rdf import TripleStore, WatDivConfig, generate_watdiv
+
+
+@pytest.fixture(scope="session")
+def watdiv_small():
+    g = generate_watdiv(WatDivConfig(scale=10))
+    store = TripleStore.build(g.s, g.p, g.o, n_terms=g.n_terms,
+                              n_predicates=g.n_predicates)
+    return g, store
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,70 @@
+"""Property tests for the static-shape join primitives."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.bindings import (eqrange, expand, run_contains,
+                                 searchsorted_in_runs)
+
+
+@given(st.lists(st.integers(0, 100), min_size=1, max_size=100),
+       st.lists(st.integers(-5, 105), min_size=1, max_size=50))
+@settings(max_examples=50, deadline=None)
+def test_eqrange_matches_numpy(keys, queries):
+    keys = np.sort(np.array(keys, np.int64))
+    q = np.array(queries, np.int64)
+    lo, hi = eqrange(jnp.asarray(keys), jnp.asarray(q))
+    np.testing.assert_array_equal(np.asarray(lo),
+                                  np.searchsorted(keys, q, "left"))
+    np.testing.assert_array_equal(np.asarray(hi),
+                                  np.searchsorted(keys, q, "right"))
+
+
+@given(st.data())
+@settings(max_examples=50, deadline=None)
+def test_searchsorted_in_runs(data):
+    n = data.draw(st.integers(4, 120))
+    vals = np.sort(np.array(data.draw(
+        st.lists(st.integers(0, 50), min_size=n, max_size=n)), np.int32))
+    n_rows = data.draw(st.integers(1, 20))
+    lo = np.array([data.draw(st.integers(0, n)) for _ in range(n_rows)])
+    hi = np.array([min(n, l + data.draw(st.integers(0, n)))
+                   for l in lo])
+    hi = np.maximum(hi, lo)
+    targets = np.array([data.draw(st.integers(-2, 52))
+                        for _ in range(n_rows)], np.int32)
+    got = np.asarray(searchsorted_in_runs(
+        jnp.asarray(vals), jnp.asarray(lo), jnp.asarray(hi),
+        jnp.asarray(targets)))
+    want = np.array([l + np.searchsorted(vals[l:h], t, "left")
+                     for l, h, t in zip(lo, hi, targets)])
+    np.testing.assert_array_equal(got, want)
+    # membership agrees with python `in`
+    got_c = np.asarray(run_contains(
+        jnp.asarray(vals), jnp.asarray(lo), jnp.asarray(hi),
+        jnp.asarray(targets)))
+    want_c = np.array([t in vals[l:h].tolist()
+                       for l, h, t in zip(lo, hi, targets)])
+    np.testing.assert_array_equal(got_c, want_c)
+
+
+@given(st.data())
+@settings(max_examples=50, deadline=None)
+def test_expand_enumerates_runs(data):
+    n_rows = data.draw(st.integers(1, 16))
+    lo = np.array([data.draw(st.integers(0, 30)) for _ in range(n_rows)])
+    deg = np.array([data.draw(st.integers(0, 6)) for _ in range(n_rows)])
+    hi = lo + deg
+    valid = np.array([data.draw(st.booleans()) for _ in range(n_rows)])
+    cap = data.draw(st.integers(1, 64))
+    ex = expand(jnp.asarray(lo), jnp.asarray(hi), jnp.asarray(valid), cap)
+    want = [(r, lo[r] + j) for r in range(n_rows) if valid[r]
+            for j in range(deg[r])]
+    total = len(want)
+    assert int(ex.total) == total
+    got = [(int(ex.src_row[i]), int(ex.flat_idx[i]))
+           for i in range(min(cap, total))]
+    assert got == want[:cap]
+    assert np.asarray(ex.valid).sum() == min(cap, total)

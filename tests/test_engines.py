@@ -1,0 +1,80 @@
+"""Engine correctness (vs brute force) + the paper's cost-ordering claims."""
+
+import numpy as np
+import pytest
+
+from repro.core import EngineConfig, QueryEngine, count_stars, results_as_numpy
+from repro.core.oracle import eval_bgp_bruteforce, table_to_solution_set
+from repro.rdf import generate_query_load
+from repro.rdf.queries import QueryLoadConfig
+
+LOADS = ["1-star", "2-stars", "3-stars", "paths"]
+
+
+@pytest.fixture(scope="module")
+def engines(watdiv_small):
+    _, store = watdiv_small
+    return {i: QueryEngine(store, EngineConfig(interface=i, cap=2048))
+            for i in ["tpf", "brtpf", "spf", "endpoint"]}
+
+
+@pytest.fixture(scope="module")
+def loads(watdiv_small):
+    g, store = watdiv_small
+    return {load: generate_query_load(g, store, load,
+                                      QueryLoadConfig(n_queries=2))
+            for load in LOADS}
+
+
+@pytest.mark.parametrize("load", LOADS)
+def test_all_interfaces_agree_with_oracle(watdiv_small, engines, loads, load):
+    g, _ = watdiv_small
+    for q in loads[load]:
+        truth = eval_bgp_bruteforce(g.s, g.p, g.o, q)
+        assert truth, "query loads must have >= 1 answer (paper Sec. 6)"
+        for iface, eng in engines.items():
+            tbl, stats = eng.run(q)
+            got = table_to_solution_set(results_as_numpy(tbl))
+            assert got == truth, (iface, load)
+            assert not bool(stats.overflow)
+
+
+def test_load_star_counts(loads):
+    assert all(count_stars(q) == 1 for q in loads["1-star"])
+    assert all(count_stars(q) == 2 for q in loads["2-stars"])
+    assert all(count_stars(q) == 3 for q in loads["3-stars"])
+    assert all(count_stars(q) == 0 for q in loads["paths"])
+
+
+def test_paper_cost_orderings(engines, loads):
+    """Fig. 5/7 qualitative claims:
+    - NRS: endpoint <= SPF <= brTPF <= TPF,
+    - NTB: SPF < brTPF <= TPF on star loads,
+    - server load: endpoint >= SPF >= brTPF,
+    - SPF == brTPF request count on paths (worst case, Sec 6.1)."""
+    for load in ["1-star", "2-stars", "3-stars"]:
+        for q in loads[load]:
+            st = {i: e.run(q)[1] for i, e in engines.items()}
+            assert int(st["endpoint"].nrs) <= int(st["spf"].nrs)
+            assert int(st["spf"].nrs) <= int(st["brtpf"].nrs)
+            assert int(st["brtpf"].nrs) <= int(st["tpf"].nrs)
+            assert int(st["spf"].ntb) <= int(st["brtpf"].ntb)
+            assert int(st["brtpf"].ntb) <= int(st["tpf"].ntb)
+            assert int(st["endpoint"].server_ops) >= int(st["spf"].server_ops)
+            assert int(st["spf"].server_ops) >= int(st["brtpf"].server_ops)
+    for q in loads["paths"]:
+        st = {i: e.run(q)[1] for i, e in engines.items()}
+        # SPF degenerates to brTPF on pure path queries
+        assert int(st["spf"].nrs) == int(st["brtpf"].nrs)
+        assert int(st["spf"].ntb) == int(st["brtpf"].ntb)
+
+
+def test_overflow_retry_grows_capacity(watdiv_small):
+    g, store = watdiv_small
+    qs = generate_query_load(g, store, "2-stars", QueryLoadConfig(n_queries=2))
+    eng = QueryEngine(store, EngineConfig(interface="spf", cap=4))
+    for q in qs:
+        tbl, stats = eng.run(q)
+        truth = eval_bgp_bruteforce(g.s, g.p, g.o, q)
+        got = table_to_solution_set(results_as_numpy(tbl))
+        assert got == truth  # retried up to a fitting capacity

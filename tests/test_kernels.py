@@ -1,0 +1,87 @@
+"""Pallas kernels vs jnp oracles: shape/dtype sweeps in interpret mode."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.sorted_probe import sorted_probe_pallas
+
+
+@pytest.mark.parametrize("n,q,dt", [
+    (1000, 77, np.int32), (5000, 256, np.int64), (131, 513, np.int32),
+    (2048, 2048, np.int64), (1, 1, np.int32), (10, 4096, np.int64),
+])
+def test_sorted_probe_sweep(n, q, dt, rng):
+    keys = np.sort(rng.integers(0, max(n * 3, 10), n)).astype(dt)
+    queries = rng.integers(-5, max(n * 3, 10) + 5, q).astype(dt)
+    r1, c1 = sorted_probe_pallas(jnp.asarray(keys), jnp.asarray(queries),
+                                 interpret=True)
+    r2, c2 = ref.sorted_probe_ref(jnp.asarray(keys), jnp.asarray(queries))
+    np.testing.assert_array_equal(np.asarray(r1), np.asarray(r2))
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+
+
+@given(st.data())
+@settings(max_examples=20, deadline=None)
+def test_sorted_probe_property(data):
+    n = data.draw(st.integers(1, 300))
+    q = data.draw(st.integers(1, 100))
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    keys = np.sort(rng.integers(0, 100, n)).astype(np.int64)
+    queries = rng.integers(-10, 110, q).astype(np.int64)
+    r1, c1 = sorted_probe_pallas(jnp.asarray(keys), jnp.asarray(queries),
+                                 q_tile=64, k_tile=128, interpret=True)
+    np.testing.assert_array_equal(
+        np.asarray(r1), np.searchsorted(keys, queries, "left"))
+    np.testing.assert_array_equal(
+        np.asarray(c1), np.isin(queries, keys))
+
+
+@pytest.mark.parametrize("shape,causal,dt", [
+    ((1, 2, 2, 128, 128, 64), True, jnp.float32),
+    ((2, 4, 2, 256, 256, 64), True, jnp.float32),  # GQA group=2
+    ((1, 8, 1, 100, 100, 32), False, jnp.float32),  # MQA, ragged seq
+    ((1, 2, 1, 64, 192, 128), False, jnp.bfloat16),  # cross len + bf16
+    ((1, 4, 4, 1, 300, 64), False, jnp.float32),  # decode shape
+    ((1, 2, 2, 33, 65, 16), True, jnp.float32),  # non-aligned everything
+])
+def test_flash_attention_sweep(shape, causal, dt, rng):
+    b, hq, hkv, sq, sk, d = shape
+    q = jnp.asarray(rng.normal(size=(b, hq, sq, d)), dt)
+    k = jnp.asarray(rng.normal(size=(b, hkv, sk, d)), dt)
+    v = jnp.asarray(rng.normal(size=(b, hkv, sk, d)), dt)
+    o1 = flash_attention_pallas(q, k, v, causal=causal, block_q=64,
+                                block_k=64, interpret=True)
+    o2 = ref.attention_ref(q, k, v, causal=causal)
+    err = np.max(np.abs(np.asarray(o1, np.float32)
+                        - np.asarray(o2, np.float32)))
+    tol = 3e-2 if dt == jnp.bfloat16 else 2e-5
+    assert err < tol, err
+
+
+def test_flash_attention_matches_block_sizes(rng):
+    """Block size must not change the result (pure tiling parameter)."""
+    q = jnp.asarray(rng.normal(size=(1, 4, 130, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 2, 130, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 2, 130, 64)), jnp.float32)
+    outs = [flash_attention_pallas(q, k, v, causal=True, block_q=bq,
+                                   block_k=bk, interpret=True)
+            for bq, bk in [(32, 32), (64, 128), (128, 64)]]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_embedding_bag_modes(rng):
+    table = jnp.asarray(rng.normal(size=(50, 8)), jnp.float32)
+    ids = jnp.asarray(rng.integers(0, 50, (4, 6)), jnp.int32)
+    s = ref.embedding_bag_ref(table, ids, "sum")
+    m = ref.embedding_bag_ref(table, ids, "mean")
+    np.testing.assert_allclose(np.asarray(s) / 6.0, np.asarray(m), rtol=1e-6)
+    want = np.stack([np.asarray(table)[np.asarray(ids)[i]].sum(0)
+                     for i in range(4)])
+    np.testing.assert_allclose(np.asarray(s), want, rtol=1e-5)

@@ -1,0 +1,73 @@
+"""Star decomposition (Def. 7): unit + property tests."""
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.patterns import (BGP, C, StarPattern, TriplePattern, V,
+                                 count_stars, star_decomposition)
+
+
+def test_listing_1_1_decomposition():
+    """The paper's running example decomposes into two 3-branch stars."""
+    # ?p1 nationality :German . ?p1 award ?aw . ?p1 birthDate ?bd1 .
+    # ?p2 nationality :Norwegian . ?p2 award ?aw . ?p2 birthDate ?bd2 .
+    p1, p2, aw, bd1, bd2 = 0, 1, 2, 3, 4
+    NAT, AWARD, BIRTH, GER, NOR = 10, 11, 12, 13, 14
+    q = BGP((
+        TriplePattern(V(p1), C(NAT), C(GER)),
+        TriplePattern(V(p1), C(AWARD), V(aw)),
+        TriplePattern(V(p1), C(BIRTH), V(bd1)),
+        TriplePattern(V(p2), C(NAT), C(NOR)),
+        TriplePattern(V(p2), C(AWARD), V(aw)),
+        TriplePattern(V(p2), C(BIRTH), V(bd2)),
+    ), n_vars=5)
+    stars = star_decomposition(q)
+    assert len(stars) == 2
+    assert all(len(s.branches) == 3 for s in stars)
+    assert stars[0].subject == V(p1) and stars[1].subject == V(p2)
+    assert count_stars(q) == 2
+
+
+def test_single_tp_star_is_trivial():
+    q = BGP((TriplePattern(V(0), C(1), V(1)),), n_vars=2)
+    stars = star_decomposition(q)
+    assert len(stars) == 1 and stars[0].is_trivial
+    assert count_stars(q) == 0  # footnote 8: trivial groups are not stars
+
+
+@st.composite
+def bgps(draw):
+    n_vars = draw(st.integers(1, 6))
+    n_tps = draw(st.integers(1, 10))
+    tps = []
+    for _ in range(n_tps):
+        s = V(draw(st.integers(0, n_vars - 1))) if draw(st.booleans()) \
+            else C(draw(st.integers(0, 30)))
+        p = C(draw(st.integers(0, 10)))
+        o = V(draw(st.integers(0, n_vars - 1))) if draw(st.booleans()) \
+            else C(draw(st.integers(0, 30)))
+        tps.append(TriplePattern(s, p, o))
+    return BGP(tuple(tps), n_vars)
+
+
+@given(bgps())
+@settings(max_examples=60, deadline=None)
+def test_decomposition_is_partition(bgp):
+    """Def. 7 clauses: m <= n; same subject within stars; exact partition."""
+    stars = star_decomposition(bgp)
+    assert len(stars) <= len(bgp.patterns)
+    rebuilt = []
+    for sp in stars:
+        subjects = {tp.s for tp in sp.triple_patterns}
+        assert len(subjects) == 1  # clause (ii)
+        rebuilt.extend(sp.triple_patterns)
+    # clauses (iii)+(iv): multiset equality up to dedup within subject groups
+    assert sorted(map(repr, rebuilt)) == sorted(map(repr, bgp.patterns))
+
+
+@given(bgps())
+@settings(max_examples=50, deadline=None)
+def test_distinct_subjects_one_star_each(bgp):
+    stars = star_decomposition(bgp)
+    assert len({s.subject for s in stars}) == len(stars)

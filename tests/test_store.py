@@ -1,0 +1,75 @@
+"""Triple-store invariants: index sort order, cardinalities, sharding."""
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.rdf.store import TripleStore, _subject_hash
+
+
+@st.composite
+def triple_sets(draw):
+    n = draw(st.integers(1, 200))
+    n_terms = draw(st.integers(5, 50))
+    n_preds = draw(st.integers(1, 6))
+    s = draw(st.lists(st.integers(0, n_terms - 1), min_size=n, max_size=n))
+    p = draw(st.lists(st.integers(0, n_preds - 1), min_size=n, max_size=n))
+    o = draw(st.lists(st.integers(0, n_terms - 1), min_size=n, max_size=n))
+    return (np.array(s), np.array(p), np.array(o), n_terms, n_preds)
+
+
+@given(triple_sets())
+@settings(max_examples=25, deadline=None)
+def test_indexes_sorted_and_consistent(data):
+    s, p, o, n_terms, n_preds = data
+    store = TripleStore.build(s, p, o, n_terms=n_terms, n_predicates=n_preds)
+    assert np.all(np.diff(store.h_key_ps) >= 0)
+    assert np.all(np.diff(store.h_key_po) >= 0)
+    # dedup: n_triples equals distinct triple count
+    uniq = len({(a, b, c) for a, b, c in zip(s, p, o)})
+    assert store.n_triples == uniq
+    # both orders contain the same multiset of triples
+    p1 = store.h_key_ps // store.n_terms
+    p2 = store.h_key_po // store.n_terms
+    assert np.bincount(p1, minlength=n_preds).tolist() == \
+        np.bincount(p2, minlength=n_preds).tolist()
+
+
+@given(triple_sets())
+@settings(max_examples=25, deadline=None)
+def test_cardinality_matches_bruteforce(data):
+    s, p, o, n_terms, n_preds = data
+    store = TripleStore.build(s, p, o, n_terms=n_terms, n_predicates=n_preds)
+    triples = {(a, b, c) for a, b, c in zip(s.tolist(), p.tolist(), o.tolist())}
+    rng = np.random.default_rng(0)
+    for _ in range(10):
+        pp = int(rng.integers(0, n_preds))
+        ss = int(rng.integers(0, n_terms))
+        oo = int(rng.integers(0, n_terms))
+        assert store.tp_cardinality(pp) == sum(t[1] == pp for t in triples)
+        assert store.tp_cardinality(pp, s=ss) == sum(
+            t[0] == ss and t[1] == pp for t in triples)
+        assert store.tp_cardinality(pp, o=oo) == sum(
+            t[1] == pp and t[2] == oo for t in triples)
+        assert store.tp_cardinality(pp, s=ss, o=oo) == int(
+            (ss, pp, oo) in triples)
+
+
+@given(triple_sets(), st.integers(2, 8))
+@settings(max_examples=15, deadline=None)
+def test_subject_sharding_partitions(data, n_shards):
+    s, p, o, n_terms, n_preds = data
+    store = TripleStore.build(s, p, o, n_terms=n_terms, n_predicates=n_preds)
+    shards = store.shard_by_subject(n_shards)
+    # every real triple lands on exactly the shard its subject hashes to
+    total_real = 0
+    for i, sh in enumerate(shards):
+        pred = sh.h_key_ps // sh.n_terms
+        real = pred < n_preds  # padding uses predicate id n_preds
+        subs = sh.h_s_pso[real].astype(np.int64)
+        assert np.all(_subject_hash(subs) % n_shards == i)
+        total_real += int(real.sum())
+    assert total_real == store.n_triples
+    # shards are equal-length (padded)
+    lens = {sh.n_triples for sh in shards}
+    assert len(lens) == 1

@@ -1,0 +1,49 @@
+"""End-to-end behaviour tests: the paper's headline claims on a small
+WatDiv instance, exercised through the public API."""
+
+import numpy as np
+
+from repro.benchlib import load_throughput, modeled_query_seconds
+from repro.core import EngineConfig, QueryEngine
+from repro.rdf import generate_query_load
+from repro.rdf.queries import QueryLoadConfig
+
+
+def test_union_load_end_to_end(watdiv_small):
+    """Run the union load through all four interfaces; every query answers
+    (>= 1 result, as the generator guarantees) and SPF's aggregate network
+    cost is strictly below brTPF's and TPF's (the paper's Fig. 7)."""
+    g, store = watdiv_small
+    queries = generate_query_load(g, store, "union",
+                                  QueryLoadConfig(n_queries=4))
+    agg = {}
+    for iface in ["tpf", "brtpf", "spf", "endpoint"]:
+        eng = QueryEngine(store, EngineConfig(interface=iface))
+        nrs = ntb = 0
+        for q in queries:
+            tbl, stats = eng.run(q)
+            assert int(stats.n_results) >= 1
+            nrs += int(stats.nrs)
+            ntb += int(stats.ntb)
+        agg[iface] = (nrs, ntb)
+    assert agg["spf"][0] < agg["brtpf"][0] < agg["tpf"][0]
+    assert agg["spf"][1] < agg["brtpf"][1] < agg["tpf"][1]
+    assert agg["endpoint"][0] <= agg["spf"][0]
+
+
+def test_modeled_throughput_ordering(watdiv_small):
+    """Fig. 5: under concurrency, modeled SPF throughput beats brTPF/TPF on
+    star loads (and the endpoint degrades fastest with client count)."""
+    g, store = watdiv_small
+    queries = generate_query_load(g, store, "2-stars",
+                                  QueryLoadConfig(n_queries=3))
+    tp = {iface: load_throughput(store, queries, iface, n_clients=64)
+          for iface in ["tpf", "brtpf", "spf"]}
+    assert tp["spf"] > tp["brtpf"] > tp["tpf"]
+    # endpoint: best at 1 client, relative advantage shrinks under load
+    ep1 = load_throughput(store, queries, "endpoint", n_clients=1)
+    spf1 = load_throughput(store, queries, "spf", n_clients=1)
+    ep64 = load_throughput(store, queries, "endpoint", n_clients=64)
+    spf64 = load_throughput(store, queries, "spf", n_clients=64)
+    assert ep1 > spf1
+    assert (ep64 / spf64) < (ep1 / spf1)

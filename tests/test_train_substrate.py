@@ -1,0 +1,136 @@
+"""Optimizer / trainer / checkpoint / compression substrate tests."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train.checkpoint import CheckpointManager
+from repro.train.compression import (compressed_psum, init_error_feedback,
+                                     make_compressed_grad_allreduce)
+from repro.train.optimizer import (OptimizerConfig, apply_updates,
+                                   init_opt_state, lr_schedule)
+from repro.train.trainer import TrainerConfig, init_state, make_train_step
+
+
+def _quadratic_loss(params, batch, cfg):
+    del batch, cfg
+    return jnp.sum((params["w"] - 3.0) ** 2) + jnp.sum((params["b"] + 1.0) ** 2)
+
+
+def test_adamw_converges_quadratic():
+    params = {"w": jnp.zeros((4, 4)), "b": jnp.zeros((4,))}
+    cfg = OptimizerConfig(lr=0.1, warmup_steps=0, total_steps=1000,
+                          weight_decay=0.0)
+    state = init_opt_state(params, cfg)
+    for _ in range(300):
+        g = jax.grad(lambda p: _quadratic_loss(p, None, None))(params)
+        params, state = apply_updates(params, g, state, cfg)
+    np.testing.assert_allclose(np.asarray(params["w"]), 3.0, atol=0.05)
+    np.testing.assert_allclose(np.asarray(params["b"]), -1.0, atol=0.05)
+
+
+def test_int8_moments_track_float32():
+    params = {"w": jnp.zeros((64,))}
+    g = jax.random.normal(jax.random.PRNGKey(0), (64,))
+    cfg_f = OptimizerConfig(lr=1e-2, warmup_steps=0, weight_decay=0.0)
+    cfg_q = OptimizerConfig(lr=1e-2, warmup_steps=0, weight_decay=0.0,
+                            moment_dtype="int8")
+    sf = init_opt_state(params, cfg_f)
+    sq = init_opt_state(params, cfg_q)
+    pf, pq = params, params
+    for i in range(20):
+        gg = g * (0.9 ** i)
+        pf, sf = apply_updates(pf, {"w": gg}, sf, cfg_f)
+        pq, sq = apply_updates(pq, {"w": gg}, sq, cfg_q)
+    err = float(jnp.max(jnp.abs(pf["w"] - pq["w"])))
+    scale = float(jnp.max(jnp.abs(pf["w"]))) + 1e-9
+    assert err / scale < 0.15, (err, scale)
+    assert sq["m"]["w"]["q"].dtype == jnp.int8
+
+
+def test_lr_schedule_warmup_cosine():
+    cfg = OptimizerConfig(lr=1.0, warmup_steps=10, total_steps=100)
+    assert float(lr_schedule(jnp.asarray(0), cfg)) == 0.0
+    assert float(lr_schedule(jnp.asarray(10), cfg)) == pytest.approx(1.0)
+    assert float(lr_schedule(jnp.asarray(100), cfg)) == pytest.approx(0.1)
+
+
+def test_microbatch_accumulation_matches_full_batch():
+    def loss_fn(params, batch, cfg):
+        del cfg
+        pred = batch["x"] @ params["w"]
+        return jnp.mean((pred - batch["y"]) ** 2)
+
+    rng = np.random.default_rng(0)
+    batch = {"x": jnp.asarray(rng.normal(size=(8, 4)), jnp.float32),
+             "y": jnp.asarray(rng.normal(size=(8,)), jnp.float32)}
+    params = {"w": jnp.asarray(rng.normal(size=(4,)), jnp.float32)}
+    opt = OptimizerConfig(lr=1e-2, warmup_steps=0, weight_decay=0.0)
+    outs = []
+    for mb in (1, 2, 4):
+        step = make_train_step(loss_fn, None, TrainerConfig(microbatches=mb,
+                                                            opt=opt),
+                               donate=False)
+        st = {"params": params, "opt": init_opt_state(params, opt)}
+        new_state, metrics = step(st, batch)
+        outs.append(np.asarray(new_state["params"]["w"]))
+    np.testing.assert_allclose(outs[0], outs[1], rtol=1e-5)
+    np.testing.assert_allclose(outs[0], outs[2], rtol=1e-5)
+
+
+def test_checkpoint_roundtrip_and_retention(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_n=2)
+    state = {"params": {"w": jnp.arange(6.0).reshape(2, 3)},
+             "opt": {"step": jnp.asarray(7)}}
+    for s in (1, 2, 3):
+        mgr.save(s, state, blocking=True)
+    assert mgr.all_steps() == [2, 3]  # keep_n retention
+    template = jax.tree.map(lambda x: jnp.zeros_like(x), state)
+    restored, step = mgr.restore(template)
+    assert step == 3
+    np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
+                                  np.asarray(state["params"]["w"]))
+
+
+def test_checkpoint_async_and_crash_safety(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_n=3)
+    state = {"w": jnp.ones((128, 128))}
+    mgr.save(1, state, blocking=False)
+    mgr.wait()
+    # a stale tmp dir (simulated crash) must not break subsequent saves
+    os.makedirs(os.path.join(str(tmp_path), "step_0000000002.tmp"),
+                exist_ok=True)
+    mgr.save(2, state, blocking=True)
+    assert mgr.latest_step() == 2
+    restored, _ = mgr.restore({"w": jnp.zeros((128, 128))})
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.ones((128, 128)))
+
+
+def test_checkpoint_missing_leaf_raises(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, {"a": jnp.ones(3)}, blocking=True)
+    with pytest.raises(KeyError):
+        mgr.restore({"b": jnp.zeros(3)})
+
+
+def test_compressed_psum_error_feedback():
+    """On a 1-device mesh the collective is identity: the quantised value
+    plus carried error must reconstruct the gradient over steps."""
+    mesh = jax.make_mesh((1,), ("data",))
+    allreduce = make_compressed_grad_allreduce(mesh, "data")
+    g = {"w": jnp.asarray(np.random.default_rng(0).normal(size=(256,)),
+                          jnp.float32)}
+    err = init_error_feedback(g)
+    acc_true = np.zeros(256)
+    acc_comp = np.zeros(256)
+    for _ in range(30):
+        out, err = allreduce(g, err)
+        acc_true += np.asarray(g["w"])
+        acc_comp += np.asarray(out["w"])
+    # error feedback keeps the accumulated bias bounded by one quant step
+    q_step = float(jnp.max(jnp.abs(g["w"]))) / 127.0
+    assert np.max(np.abs(acc_true - acc_comp)) < 2 * q_step * 30 ** 0.5 + q_step
