@@ -14,7 +14,7 @@ Figures covered:
   fig6_server_load    server CPU proxy vs clients, union load
   fig7_network        NRS + NTB per interface per load (64 clients)
   fig8_latency        QET / QRT per load (64 clients)
-  kernels             sorted_probe / flash_attention microbench
+  kernels             sorted_probe / run_probe / flash_attention microbench
 """
 
 from __future__ import annotations
@@ -132,9 +132,14 @@ def fig8_latency() -> None:
 # ----------------------------------------------------------------- kernels
 
 def kernels() -> None:
+    import jax
     import jax.numpy as jnp
 
-    from repro.kernels import ref
+    from repro.kernels import ops, ref
+
+    backend = jax.default_backend()
+    # label with the dispatch layer's actual decision (honors ops.FORCE)
+    dispatched = "pallas" if ops._use_pallas() else "jnp-oracle"
 
     rng = np.random.default_rng(0)
     keys = np.sort(rng.integers(0, 3_000_000, 1_000_000)).astype(np.int64)
@@ -148,7 +153,24 @@ def kernels() -> None:
         r, c = ref.sorted_probe_ref(kj, qj)
         r.block_until_ready()
     emit("kernels/sorted_probe_ref_1Mx4k", 1e5 * (time.perf_counter() - t0),
-         "backend=cpu-jnp-oracle")
+         f"backend={backend}-jnp-oracle")
+
+    # run_probe: the engine's hot bind-join membership probe — 4k rows,
+    # each probing a window of a 1M-entry sorted column.  Timed through
+    # the dispatch layer so BENCH_*.json tracks the active backend's
+    # trajectory (ref today on CPU, the fused Pallas kernel on TPU).
+    lo64 = rng.integers(0, 1_000_000, 4096)
+    hi64 = np.minimum(1_000_000, lo64 + rng.integers(0, 100_000, 4096))
+    loj, hij = jnp.asarray(lo64), jnp.asarray(hi64)
+    run_probe_jit = jax.jit(ops.run_probe)
+    pos, hit = run_probe_jit(kj, loj, hij, qj)
+    pos.block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(10):
+        pos, hit = run_probe_jit(kj, loj, hij, qj)
+        pos.block_until_ready()
+    emit("kernels/run_probe_1Mx4k", 1e5 * (time.perf_counter() - t0),
+         f"backend={backend}-{dispatched}")
 
     q = jnp.asarray(rng.normal(size=(1, 4, 256, 64)), jnp.float32)
     k = jnp.asarray(rng.normal(size=(1, 2, 256, 64)), jnp.float32)
@@ -160,7 +182,7 @@ def kernels() -> None:
         o = ref.attention_ref(q, k, v)
         o.block_until_ready()
     emit("kernels/attention_ref_b1h4s256", 1e5 * (time.perf_counter() - t0),
-         "backend=cpu-jnp-oracle")
+         f"backend={backend}-jnp-oracle")
 
 
 FIGS = [fig4_loadstats, fig5_throughput, fig5f_timeouts, fig6_server_load,
@@ -168,11 +190,23 @@ FIGS = [fig4_loadstats, fig5_throughput, fig5f_timeouts, fig6_server_load,
 
 
 def main() -> None:
-    g, store = bench_graph()
-    print(f"# WatDiv bench instance: {store.n_triples} triples, "
-          f"{store.n_predicates} predicates")
+    """Run all figures, or only those named on the CLI, e.g.
+
+        python -m benchmarks.run kernels fig7_network
+    """
+    by_name = {f.__name__: f for f in FIGS}
+    selected = sys.argv[1:]
+    unknown = [n for n in selected if n not in by_name]
+    if unknown:
+        raise SystemExit(f"unknown figure(s) {unknown}; "
+                         f"choose from {sorted(by_name)}")
+    figs = [by_name[n] for n in selected] if selected else FIGS
+    if any(f is not kernels for f in figs):  # only kernels skips the graph
+        g, store = bench_graph()
+        print(f"# WatDiv bench instance: {store.n_triples} triples, "
+              f"{store.n_predicates} predicates")
     print("name,us_per_call,derived")
-    for fig in FIGS:
+    for fig in figs:
         fig()
 
 

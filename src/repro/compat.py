@@ -1,0 +1,39 @@
+"""jax version compatibility shims (single home — import from here).
+
+The container tracks jax 0.4.x while the code targets the current public
+API; two spellings differ:
+
+- ``shard_map``: public ``jax.shard_map`` (>= 0.6, ``check_vma`` kwarg) vs
+  ``jax.experimental.shard_map.shard_map`` (0.4/0.5, ``check_rep`` kwarg).
+  Replication checking is disabled either way: the engine's lane outputs
+  are deliberately device-varying along the lane axes.
+- ``axis_size``: ``jax.lax.axis_size`` (>= 0.6) vs ``psum(1, axis)`` —
+  both give the named-axis extent inside a mapped context (the psum of a
+  literal 1 constant-folds to the static size).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    def shard_map(f: Callable, mesh: Any, in_specs: Any,
+                  out_specs: Any) -> Callable:
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+else:
+    from jax.experimental.shard_map import shard_map as _exp_shard_map
+
+    def shard_map(f: Callable, mesh: Any, in_specs: Any,
+                  out_specs: Any) -> Callable:
+        return _exp_shard_map(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_rep=False)
+
+
+def axis_size(axis: str):
+    """Extent of a named mapped axis, inside shard_map/vmap."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis)
+    return jax.lax.psum(1, axis)

@@ -1,4 +1,4 @@
-"""Static-shape solution-mapping tables and vectorised join primitives.
+"""Static-shape solution-mapping tables and ragged expansion.
 
 JAX needs static shapes, so a set of solution mappings (the paper's Omega /
 intermediate results) is a fixed-capacity table:
@@ -9,25 +9,24 @@ intermediate results) is a fixed-capacity table:
     overflow bool                capacity was exceeded somewhere upstream —
                                  the analogue of the paper's 10-min timeout.
 
-The two primitives everything else is built from:
+The search primitives the tables are joined with (``eqrange``,
+``run_probe`` / ``run_contains``) live in the backend-dispatched kernel
+layer ``repro.kernels.ops`` — Pallas on TPU, jnp oracles elsewhere.  This
+module keeps only the table machinery itself:
 
-- ``eqrange``: vectorised equal-range binary search of composite keys into a
-  sorted key column (one ``searchsorted`` pair).
 - ``expand``: given per-row runs ``[lo_i, hi_i)``, enumerate (row, element)
   pairs into a fresh table of capacity ``cap`` via cumsum + searchsorted —
   the standard prefix-sum trick for ragged expansion under static shapes.
-
-These are exactly the operations the SPF server's star evaluation and the
-client's bind joins decompose into; the Pallas ``sorted_probe`` kernel is a
-fused fast path for ``eqrange`` on VMEM-tiled runs.
+  (Its internal ``searchsorted`` over the cumulative-degree vector is table
+  bookkeeping, not an index probe — it does not route through the kernel
+  layer.)
+- ``compact`` / ``set_column``: table maintenance.
 """
 
 from __future__ import annotations
 
-import math
 from typing import NamedTuple
 
-import jax
 import jax.numpy as jnp
 
 
@@ -57,59 +56,6 @@ def unit_table(cap: int, n_vars: int) -> BindingTable:
     rows = jnp.full((cap, n_vars), UNBOUND, dtype=jnp.int32)
     valid = jnp.zeros((cap,), dtype=bool).at[0].set(True)
     return BindingTable(rows, valid, jnp.asarray(False))
-
-
-def empty_table(cap: int, n_vars: int) -> BindingTable:
-    rows = jnp.full((cap, n_vars), UNBOUND, dtype=jnp.int32)
-    return BindingTable(rows, jnp.zeros((cap,), bool), jnp.asarray(False))
-
-
-# --------------------------------------------------------------------------
-# search primitives
-# --------------------------------------------------------------------------
-
-def eqrange(sorted_keys: jnp.ndarray, query_keys: jnp.ndarray
-            ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Per-query equal range ``[lo, hi)`` in a globally sorted key array."""
-    lo = jnp.searchsorted(sorted_keys, query_keys, side="left")
-    hi = jnp.searchsorted(sorted_keys, query_keys, side="right")
-    return lo, hi
-
-
-def searchsorted_in_runs(values: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray,
-                         targets: jnp.ndarray, side: str = "left") -> jnp.ndarray:
-    """Binary search of ``targets[i]`` within ``values[lo[i]:hi[i]]`` (each run
-    individually sorted).  Returns absolute insertion positions.
-
-    Pure bisection with a fixed iteration count (static shapes); this is the
-    jnp oracle for the Pallas ``sorted_probe`` kernel.
-    """
-    n = values.shape[0]
-    steps = max(1, math.ceil(math.log2(max(n, 2))) + 1)
-
-    def body(_, state):
-        lo_, hi_ = state
-        mid = (lo_ + hi_) >> 1
-        v = values[jnp.clip(mid, 0, n - 1)]
-        if side == "left":
-            go_right = v < targets
-        else:
-            go_right = v <= targets
-        lo_ = jnp.where(go_right & (lo_ < hi_), mid + 1, lo_)
-        hi_ = jnp.where((~go_right) & (lo_ < hi_), mid, hi_)
-        return lo_, hi_
-
-    lo_f, _ = jax.lax.fori_loop(0, steps, body, (lo, hi))
-    return lo_f
-
-
-def run_contains(values: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray,
-                 targets: jnp.ndarray) -> jnp.ndarray:
-    """Membership of ``targets[i]`` in the sorted run ``values[lo[i]:hi[i]]``."""
-    pos = searchsorted_in_runs(values, lo, hi, targets, side="left")
-    n = values.shape[0]
-    at = values[jnp.clip(pos, 0, n - 1)]
-    return (pos < hi) & (at == targets)
 
 
 # --------------------------------------------------------------------------

@@ -20,6 +20,13 @@ larger: this module makes the paper's NTB/NRS claims *measurable in HLO*
 
 The multi-pod mesh adds a ``pod`` axis that replicates the store (the
 paper's availability argument) and splits the client population.
+
+``eval_unit`` runs here inside ``shard_map`` + ``vmap`` (one trace per
+shard, vmapped over query lanes), so every probe primitive it dispatches
+through ``repro.kernels.ops`` must be shard_map/vmap-compatible: the
+Pallas kernels batch by grid extension and the jnp oracles are pure
+element-wise/scan code, so the same engine code lowers under both
+``ops.FORCE`` settings (see ``DistributedEngine.lower_step``).
 """
 
 from __future__ import annotations
@@ -33,6 +40,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
+
+from repro.compat import shard_map as _shard_map
 
 from repro.core.bindings import BindingTable, compact, unit_table
 from repro.core.engine import EngineConfig, QueryPlan, plan_query
@@ -77,17 +86,19 @@ def _subject_shard_jnp(s: jnp.ndarray, n_shards: int) -> jnp.ndarray:
 
 
 def _lane_eval(plans: tuple, n_vars: int, cfg: DistConfig, radix: int,
-               interface: str, dev: StoreArrays, const_vec: jnp.ndarray
+               interface: str, n_shards: int, dev: StoreArrays,
+               const_vec: jnp.ndarray
                ) -> tuple[jnp.ndarray, jnp.ndarray, DistStats]:
     """Evaluate one query lane against the local shard, gathering along
     ``data`` after every unit.  Runs *inside* shard_map.
 
     ``dev`` is the local shard's index arrays; ``const_vec`` the lane's
-    constants.  Returns (rows, valid, stats); rows/valid are the lane's final
-    table (replicated along ``data``).
+    constants; ``n_shards`` the static ``data``-axis extent (shapes depend
+    on it, so it is threaded in from the mesh rather than read off the
+    axis environment).  Returns (rows, valid, stats); rows/valid are the
+    lane's final table (replicated along ``data``).
     """
     axis = cfg.data_axis
-    n_shards = jax.lax.axis_size(axis)
     table = unit_table(cfg.cap, max(n_vars, 1))
     rounds = jnp.int64(0)
     g_rows = jnp.int64(0)
@@ -223,7 +234,7 @@ class DistributedEngine:
 
         def lane_fn(dev, const_vec):
             return _lane_eval(plan.units, plan.n_vars, dcfg, self.store.radix,
-                              plan.interface, dev, const_vec)
+                              plan.interface, self._n_data, dev, const_vec)
 
         def step(stacked: StoreArrays, const_batch: jnp.ndarray):
             # const_batch: [batch, n_consts]
@@ -234,12 +245,11 @@ class DistributedEngine:
                 return rows, valid, stats
 
             out_lane_spec = const_spec
-            return jax.shard_map(
-                shard_fn, mesh=mesh,
-                in_specs=(store_spec, const_spec),
-                out_specs=(out_lane_spec, out_lane_spec,
-                           DistStats(*[out_lane_spec] * 6)),
-                check_vma=False,
+            return _shard_map(
+                shard_fn, mesh,
+                (store_spec, const_spec),
+                (out_lane_spec, out_lane_spec,
+                 DistStats(*[out_lane_spec] * 6)),
             )(stacked, const_batch)
 
         return jax.jit(step), per_lane

@@ -48,7 +48,7 @@ class EngineConfig:
     page_size: int = 50  # LDF page size (paper: 50)
     omega: int = 30  # max bindings per request (paper: 30)
     cap: int = 4096  # binding-table capacity (the timeout analogue)
-    max_cap: int = 1 << 20  # overflow retry ceiling (doubling); then give up
+    max_cap: int = 1 << 20  # overflow retry ceiling (4x growth); then give up
     # wire-format constants for NTB (bytes): pattern/bindings serialisation
     request_base_bytes: int = 300  # HTTP request overhead
     page_header_bytes: int = 200  # per-page metadata/controls (Def. 4 M', C')
@@ -217,11 +217,14 @@ class QueryEngine:
         return plan_query(self.store, bgp, self.cfg)
 
     def run(self, bgp: BGP) -> tuple[BindingTable, QueryStats]:
-        """Run one query; on capacity overflow retry with doubled tables.
+        """Run one query; on capacity overflow retry with 4x-larger tables
+        (up to ``max_cap``).
 
         Overflow is the static-shape analogue of the paper's query timeout;
         retry-with-larger-capacity is how a production deployment would
         absorb the occasional fat intermediate result instead of failing.
+        The 4x factor trades a coarser capacity ladder (fewer jit cache
+        entries per signature) against some over-allocation on retry.
         """
         plan = self.plan(bgp)
         const_vec = jnp.asarray(np.asarray(plan.consts, dtype=np.int64))

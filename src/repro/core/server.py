@@ -20,12 +20,21 @@ Branch cases (derived at plan time from the bound-variable set):
     scan_oconst       subject free,  object const          -> expand subjects (POS run)
     scan_ovar_bound   subject free,  object var bound      -> expand subjects (POS eqrange)
     scan_ovar_free    subject free,  object var free       -> expand pred run (PSO)
+
+Each case is one small evaluator in ``BRANCH_EVALUATORS``; ``eval_unit``
+just walks the plan and dispatches.  Every probe/membership primitive the
+evaluators touch routes through the backend-dispatched kernel layer
+``repro.kernels.ops`` (Pallas on TPU, jnp oracles elsewhere, ``ops.FORCE``
+override) — this module contains no searchsorted/bisection of its own.
+The evaluators are traced inside jit here, and inside shard_map+vmap by
+``core/distributed.py``; the dispatched primitives are safe under both.
 """
 
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass
+from typing import Callable, NamedTuple
 
 import jax.numpy as jnp
 
@@ -33,13 +42,10 @@ from repro.core.bindings import (
     BindingTable,
     Expansion,
     compact,
-    empty_table,
-    eqrange,
     expand,
-    run_contains,
-    searchsorted_in_runs,
 )
-from repro.core.patterns import StarPattern, Term
+from repro.core.patterns import StarPattern
+from repro.kernels import ops as kops
 from repro.rdf.store import StoreArrays, TripleStore
 
 
@@ -131,23 +137,124 @@ def plan_unit(store: TripleStore, star: StarPattern, bound: frozenset[int],
 
 
 # --------------------------------------------------------------------------
-# traced evaluation
+# traced evaluation: one small evaluator per branch case
 # --------------------------------------------------------------------------
 
-def _subject_values(rows: jnp.ndarray, plan: BranchPlan,
-                    const_vec: jnp.ndarray) -> jnp.ndarray:
-    kind, idx = plan.subj_src
+class EvalCtx(NamedTuple):
+    """Static-per-unit evaluation context shared by the branch evaluators."""
+
+    dev: StoreArrays
+    radix: int
+    const_vec: jnp.ndarray
+    logn: int  # ceil(log2 n): the cost model's binary-search factor
+
+
+# evaluator signature: (ctx, branch, table) -> (table, ops_delta)
+BranchEvaluator = Callable[[EvalCtx, BranchPlan, BindingTable],
+                           tuple[BindingTable, jnp.ndarray]]
+
+
+def _term_values(rows: jnp.ndarray, src: tuple[str, int],
+                 const_vec: jnp.ndarray) -> jnp.ndarray:
+    kind, idx = src
     if kind == "const":
         return jnp.broadcast_to(const_vec[idx], (rows.shape[0],))
     return rows[:, idx].astype(jnp.int64)
 
 
-def _object_values(rows: jnp.ndarray, plan: BranchPlan,
-                   const_vec: jnp.ndarray) -> jnp.ndarray:
-    kind, idx = plan.obj_src
-    if kind == "const":
-        return jnp.broadcast_to(const_vec[idx], (rows.shape[0],))
-    return rows[:, idx].astype(jnp.int64)
+def _active(table: BindingTable) -> jnp.ndarray:
+    return jnp.sum(table.valid.astype(jnp.int64))
+
+
+def _probe_run(ctx: EvalCtx, b: BranchPlan, table: BindingTable
+               ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Locate each row's ``(p, s)`` run in PSO order (bound-subject cases)."""
+    s_vals = _term_values(table.rows, b.subj_src, ctx.const_vec)
+    key = ctx.const_vec[b.pred_ci] * ctx.radix + s_vals
+    return kops.eqrange(ctx.dev.key_ps_pso, key)
+
+
+def _expand_into(ctx: EvalCtx, b: BranchPlan, table: BindingTable,
+                 ex: Expansion, subj_from: jnp.ndarray | None,
+                 obj_from: jnp.ndarray | None
+                 ) -> tuple[BindingTable, jnp.ndarray]:
+    """Materialise an expansion into a fresh table, filling var columns
+    from the given store columns; returns (table, expansion ops)."""
+    new_rows = table.rows[ex.src_row]
+    if subj_from is not None and b.subj_src[0] == "var":
+        new_rows = new_rows.at[:, b.subj_src[1]].set(
+            subj_from[ex.flat_idx].astype(jnp.int32))
+    if obj_from is not None:
+        new_rows = new_rows.at[:, b.obj_src[1]].set(
+            obj_from[ex.flat_idx].astype(jnp.int32))
+    overflow = table.overflow | (ex.total > table.cap)
+    return (BindingTable(new_rows, ex.valid, overflow),
+            jnp.minimum(ex.total, table.cap))
+
+
+def probe_filter(ctx: EvalCtx, b: BranchPlan, table: BindingTable
+                 ) -> tuple[BindingTable, jnp.ndarray]:
+    """probe_oconst / probe_ovar_bound: subject and object both bound —
+    a pure bind-join membership filter over the (p, s) runs."""
+    active = _active(table)
+    lo, hi = _probe_run(ctx, b, table)
+    o_vals = _term_values(table.rows, b.obj_src, ctx.const_vec)
+    found = kops.run_contains(ctx.dev.o_pso, lo, hi, o_vals)
+    delta = active * (2 * ctx.logn) + active * ctx.logn
+    return compact(BindingTable(table.rows, table.valid & found,
+                                table.overflow)), delta
+
+
+def probe_ovar_free(ctx: EvalCtx, b: BranchPlan, table: BindingTable
+                    ) -> tuple[BindingTable, jnp.ndarray]:
+    """Subject bound, object free: expand objects within each (p, s) run."""
+    active = _active(table)
+    lo, hi = _probe_run(ctx, b, table)
+    ex = expand(lo, hi, table.valid, table.cap)
+    out, ex_ops = _expand_into(ctx, b, table, ex, None, ctx.dev.o_pso)
+    return out, active * (2 * ctx.logn) + ex_ops
+
+
+def scan_obound(ctx: EvalCtx, b: BranchPlan, table: BindingTable
+                ) -> tuple[BindingTable, jnp.ndarray]:
+    """scan_oconst / scan_ovar_bound: subject free, object bound — expand
+    subjects out of the (p, o) run in POS order."""
+    active = _active(table)
+    o_vals = _term_values(table.rows, b.obj_src, ctx.const_vec)
+    key = ctx.const_vec[b.pred_ci] * ctx.radix + o_vals
+    lo, hi = kops.eqrange(ctx.dev.key_po_pos, key)
+    ex = expand(lo, hi, table.valid, table.cap)
+    out, ex_ops = _expand_into(ctx, b, table, ex, ctx.dev.s_pos, None)
+    return out, active * (2 * ctx.logn) + ex_ops
+
+
+def scan_ovar_free(ctx: EvalCtx, b: BranchPlan, table: BindingTable
+                   ) -> tuple[BindingTable, jnp.ndarray]:
+    """Subject and object free: expand the whole predicate run (PSO order).
+
+    The run is delimited by the "left" ranks of ``p*R`` and ``(p+1)*R`` —
+    a single 2-query ``eqrange`` probe of the PSO key column.
+    """
+    active = _active(table)
+    p = ctx.const_vec[b.pred_ci]
+    bounds, _ = kops.eqrange(
+        ctx.dev.key_ps_pso, jnp.stack([p * ctx.radix, (p + 1) * ctx.radix]))
+    lo = jnp.broadcast_to(bounds[0], table.valid.shape)
+    hi = jnp.broadcast_to(bounds[1], table.valid.shape)
+    ex = expand(lo, hi, table.valid, table.cap)
+    out, ex_ops = _expand_into(ctx, b, table, ex, ctx.dev.s_pso,
+                               ctx.dev.o_pso)
+    return out, active * (2 * ctx.logn) + ex_ops
+
+
+BRANCH_EVALUATORS: dict[str, BranchEvaluator] = {
+    "probe_oconst": probe_filter,
+    "probe_ovar_bound": probe_filter,
+    "probe_ovar_free": probe_ovar_free,
+    "scan_oconst": scan_obound,
+    "scan_ovar_bound": scan_obound,
+    "scan_ovar_free": scan_ovar_free,
+}
 
 
 def eval_unit(dev: StoreArrays, radix: int, plan: UnitPlan,
@@ -160,65 +267,9 @@ def eval_unit(dev: StoreArrays, radix: int, plan: UnitPlan,
     """
     n = dev.key_ps_pso.shape[0]
     logn = max(1, int(math.ceil(math.log2(max(n, 2)))))
-    ops = jnp.int64(0)
-    cap = table.cap
-
+    ctx = EvalCtx(dev, radix, const_vec, logn)
+    ops_total = jnp.int64(0)
     for b in plan.branches:
-        rows, valid = table.rows, table.valid
-        p = const_vec[b.pred_ci]
-        active = jnp.sum(valid.astype(jnp.int64))
-
-        if b.case.startswith("probe"):
-            s_vals = _subject_values(rows, b, const_vec)
-            key = p * radix + s_vals
-            lo, hi = eqrange(dev.key_ps_pso, key)
-            ops = ops + active * (2 * logn)
-            if b.case == "probe_oconst" or b.case == "probe_ovar_bound":
-                o_vals = _object_values(rows, b, const_vec)
-                found = run_contains(dev.o_pso, lo, hi, o_vals)
-                ops = ops + active * logn
-                table = compact(BindingTable(rows, valid & found, table.overflow))
-            else:  # probe_ovar_free: expand objects within the (p, s) run
-                ex = expand(lo, hi, valid, cap)
-                new_rows = rows[ex.src_row]
-                o_col = b.obj_src[1]
-                new_rows = new_rows.at[:, o_col].set(
-                    dev.o_pso[ex.flat_idx].astype(jnp.int32))
-                overflow = table.overflow | (ex.total > cap)
-                ops = ops + jnp.minimum(ex.total, cap)
-                table = BindingTable(new_rows, ex.valid, overflow)
-
-        else:  # scan_* : subject free
-            if b.case == "scan_oconst" or b.case == "scan_ovar_bound":
-                o_vals = _object_values(rows, b, const_vec)
-                key = p * radix + o_vals
-                lo, hi = eqrange(dev.key_po_pos, key)
-                ops = ops + active * (2 * logn)
-                ex = expand(lo, hi, valid, cap)
-                new_rows = rows[ex.src_row]
-                subj_vals = dev.s_pos[ex.flat_idx].astype(jnp.int32)
-                if b.subj_src[0] == "var":
-                    new_rows = new_rows.at[:, b.subj_src[1]].set(subj_vals)
-                overflow = table.overflow | (ex.total > cap)
-                ops = ops + jnp.minimum(ex.total, cap)
-                table = BindingTable(new_rows, ex.valid, overflow)
-            else:  # scan_ovar_free: whole predicate run in PSO order
-                key_lo = p * radix
-                key_hi = (p + 1) * radix
-                lo0 = jnp.searchsorted(dev.key_ps_pso, key_lo, side="left")
-                hi0 = jnp.searchsorted(dev.key_ps_pso, key_hi, side="left")
-                lo = jnp.broadcast_to(lo0, rows.shape[:1])
-                hi = jnp.broadcast_to(hi0, rows.shape[:1])
-                ops = ops + active * (2 * logn)
-                ex = expand(lo, hi, valid, cap)
-                new_rows = rows[ex.src_row]
-                if b.subj_src[0] == "var":
-                    new_rows = new_rows.at[:, b.subj_src[1]].set(
-                        dev.s_pso[ex.flat_idx].astype(jnp.int32))
-                new_rows = new_rows.at[:, b.obj_src[1]].set(
-                    dev.o_pso[ex.flat_idx].astype(jnp.int32))
-                overflow = table.overflow | (ex.total > cap)
-                ops = ops + jnp.minimum(ex.total, cap)
-                table = BindingTable(new_rows, ex.valid, overflow)
-
-    return table, ops
+        table, delta = BRANCH_EVALUATORS[b.case](ctx, b, table)
+        ops_total = ops_total + delta
+    return table, ops_total

@@ -1,7 +1,17 @@
 """Pallas TPU kernels for the perf-critical compute layers.
 
-- sorted_probe      — SPF server star-join probe (VPU broadcast-compare)
+Layer map (bottom-up):
+
+- sorted_probe      — SPF equal-range probe into one sorted key column
+                      (VPU broadcast-compare; emits both rank sides)
+- run_probe         — fused membership + rank of targets within per-row
+                      sorted runs (window-masked compare-reduce; the
+                      bind-join membership test of Def. 5)
 - flash_attention   — fused attention for the LM architectures
-- ops               — jit'd dispatch wrappers (TPU: Pallas; CPU: jnp oracle)
-- ref               — pure-jnp oracles (kernel ground truth)
+- ref               — pure-jnp oracles (kernel ground truth AND the
+                      non-TPU execution path)
+- ops               — THE dispatch layer: every engine/benchmark call-site
+                      routes through ops.* (TPU: Pallas; elsewhere: ref;
+                      ``ops.FORCE`` overrides).  Nothing above this package
+                      picks a backend.
 """

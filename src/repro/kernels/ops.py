@@ -1,13 +1,42 @@
-"""Jit'd public wrappers over the Pallas kernels with jnp fallbacks.
+"""The backend-dispatched kernel layer: every hot primitive, one call-site.
 
-Dispatch policy: the Pallas kernels target TPU.  On the CPU backend we run
-them in ``interpret=True`` mode only inside the kernel test-suite; library
-call-sites go through these wrappers, which pick the Pallas path on TPU and
-the jnp oracle elsewhere (so smoke tests and CPU benches stay fast while
-the TPU lowering is exercised by the dry-run).
+This module is the single seam between the engine and the hardware.  The
+query engine (``core/server.py``), the distributed runtime
+(``core/distributed.py`` — the primitives are shard_map/vmap-traced there),
+the benchmarks, and the model stacks all route their perf-critical
+primitives through these wrappers; nothing above this layer mentions
+Pallas or picks a backend.
 
-Set ``repro.kernels.ops.FORCE`` to "pallas" / "ref" to override (tests use
-"pallas" + interpret to validate kernel bodies on CPU).
+Dispatch policy
+---------------
+The Pallas kernels target TPU.  Each wrapper picks the Pallas path when the
+default JAX backend is TPU and the pure-jnp oracle (``repro.kernels.ref``)
+elsewhere, so smoke tests and CPU benches stay fast while the TPU lowering
+is exercised by the dry-run.  On a non-TPU backend a forced Pallas path
+runs in ``interpret=True`` mode (kernel-body semantics, no Mosaic).
+
+Set ``repro.kernels.ops.FORCE`` to ``"pallas"`` / ``"ref"`` to override:
+
+- tests use ``FORCE="pallas"`` (+ interpret on CPU) to validate kernel
+  bodies and engine-level byte-parity against ``FORCE="ref"``;
+- benches use it to measure both paths on the same host.
+
+``FORCE`` is read at *trace* time: jitted engine functions bake the chosen
+path in, so flip it before building an engine (or clear the engine's jit
+cache), not mid-run.
+
+Join/probe primitives (the SPF server's hot path)
+-------------------------------------------------
+- ``eqrange``             — per-query equal range in a sorted key column;
+                            Pallas path: one fused ``sorted_probe`` pass
+                            emitting both rank sides.
+- ``run_probe``           — rank + membership of targets within per-row
+                            sorted runs; Pallas path: the fused
+                            ``run_probe`` window-masked compare-reduce
+                            kernel (replaces serial bisection).
+- ``run_contains``        — membership-only view of ``run_probe``.
+- ``searchsorted_in_runs`` — rank-only view of ``run_probe``.
+- ``sorted_probe``        — rank-left + membership in one sorted array.
 """
 
 from __future__ import annotations
@@ -17,6 +46,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.run_probe import run_probe_pallas
 from repro.kernels.sorted_probe import sorted_probe_pallas
 
 FORCE: str | None = None  # None | "pallas" | "ref"
@@ -27,6 +57,9 @@ def _use_pallas() -> bool:
         return True
     if FORCE == "ref":
         return False
+    if FORCE is not None:
+        raise ValueError(f"ops.FORCE must be None, 'pallas' or 'ref'; "
+                         f"got {FORCE!r}")
     return jax.default_backend() == "tpu"
 
 
@@ -35,13 +68,73 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+# --------------------------------------------------------------------------
+# join/probe primitives
+# --------------------------------------------------------------------------
+
 def sorted_probe(keys: jnp.ndarray, queries: jnp.ndarray
                  ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """(rank, contains) of each query in a sorted key array."""
     if _use_pallas():
-        return sorted_probe_pallas(keys, queries, interpret=_interpret())
+        rank_lo, _, contains = sorted_probe_pallas(keys, queries,
+                                                   interpret=_interpret())
+        return rank_lo, contains
     return ref.sorted_probe_ref(keys, queries)
 
+
+# Below this many queries the kernel's O(N) column stream cannot amortize
+# against O(Q log N) scalar searches (the query tile is 256 wide either
+# way); auto-dispatch on TPU uses the jnp path instead.  A hard
+# ``FORCE="pallas"`` still always takes the kernel — that's how the tests
+# exercise kernel bodies on tiny inputs.
+MIN_PALLAS_QUERIES = 64
+
+
+def eqrange(sorted_keys: jnp.ndarray, query_keys: jnp.ndarray
+            ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-query equal range ``[lo, hi)`` in a globally sorted key array.
+
+    Both backends return int32 positions (identical bit patterns), so
+    engine results are byte-stable across ``FORCE`` settings.  Small query
+    batches (e.g. the 2-element predicate-bound lookup of scan_ovar_free)
+    stay on the scalar jnp path under auto-dispatch — see
+    ``MIN_PALLAS_QUERIES``.
+    """
+    if _use_pallas() and (FORCE == "pallas"
+                          or query_keys.shape[0] >= MIN_PALLAS_QUERIES):
+        rank_lo, rank_hi, _ = sorted_probe_pallas(sorted_keys, query_keys,
+                                                  interpret=_interpret())
+        return rank_lo, rank_hi
+    return ref.eqrange_ref(sorted_keys, query_keys)
+
+
+def run_probe(values: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray,
+              targets: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(pos, contains) of ``targets[i]`` within the sorted run
+    ``values[lo[i]:hi[i]]``; ``pos`` is the absolute "left" insertion point.
+    """
+    if _use_pallas():
+        return run_probe_pallas(values, lo, hi, targets,
+                                interpret=_interpret())
+    return ref.run_probe_ref(values, lo, hi, targets)
+
+
+def run_contains(values: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray,
+                 targets: jnp.ndarray) -> jnp.ndarray:
+    """Membership of ``targets[i]`` in the sorted run ``values[lo[i]:hi[i]]``."""
+    return run_probe(values, lo, hi, targets)[1]
+
+
+def searchsorted_in_runs(values: jnp.ndarray, lo: jnp.ndarray,
+                         hi: jnp.ndarray, targets: jnp.ndarray) -> jnp.ndarray:
+    """Absolute "left" insertion position of ``targets[i]`` within the
+    sorted run ``values[lo[i]:hi[i]]``."""
+    return run_probe(values, lo, hi, targets)[0]
+
+
+# --------------------------------------------------------------------------
+# model-stack kernels
+# --------------------------------------------------------------------------
 
 def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
               causal: bool = True, scale: float | None = None) -> jnp.ndarray:

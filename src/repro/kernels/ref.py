@@ -1,7 +1,16 @@
-"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth).
+
+The join-primitive oracles (``eqrange_ref``, ``run_probe_ref``, ...) double
+as the engine's non-TPU execution path: ``repro.kernels.ops`` dispatches to
+them whenever the Pallas kernels don't apply.  They are shard_map/vmap-safe
+(pure jnp, fixed iteration counts, no data-dependent shapes).
+"""
 
 from __future__ import annotations
 
+import math
+
+import jax
 import jax.numpy as jnp
 
 
@@ -13,6 +22,53 @@ def sorted_probe_ref(keys: jnp.ndarray, queries: jnp.ndarray
     at = keys[jnp.clip(rank, 0, n - 1)]
     contains = (rank < n) & (at == queries)
     return rank, contains
+
+
+def eqrange_ref(sorted_keys: jnp.ndarray, query_keys: jnp.ndarray
+                ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-query equal range ``[lo, hi)`` in a globally sorted key array."""
+    lo = jnp.searchsorted(sorted_keys, query_keys, side="left")
+    hi = jnp.searchsorted(sorted_keys, query_keys, side="right")
+    return lo.astype(jnp.int32), hi.astype(jnp.int32)
+
+
+def searchsorted_in_runs_ref(values: jnp.ndarray, lo: jnp.ndarray,
+                             hi: jnp.ndarray, targets: jnp.ndarray,
+                             side: str = "left") -> jnp.ndarray:
+    """Binary search of ``targets[i]`` within ``values[lo[i]:hi[i]]`` (each run
+    individually sorted).  Returns absolute insertion positions.
+
+    Pure bisection with a fixed iteration count (static shapes); this is the
+    jnp oracle for the Pallas ``run_probe`` kernel's rank output.
+    """
+    n = values.shape[0]
+    steps = max(1, math.ceil(math.log2(max(n, 2))) + 1)
+
+    def body(_, state):
+        lo_, hi_ = state
+        mid = (lo_ + hi_) >> 1
+        v = values[jnp.clip(mid, 0, n - 1)]
+        if side == "left":
+            go_right = v < targets
+        else:
+            go_right = v <= targets
+        lo_ = jnp.where(go_right & (lo_ < hi_), mid + 1, lo_)
+        hi_ = jnp.where((~go_right) & (lo_ < hi_), mid, hi_)
+        return lo_, hi_
+
+    lo_f, _ = jax.lax.fori_loop(0, steps, body, (lo, hi))
+    return lo_f
+
+
+def run_probe_ref(values: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray,
+                  targets: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(pos, contains) of ``targets[i]`` within the sorted run
+    ``values[lo[i]:hi[i]]`` — the fused oracle for ``run_probe_pallas``."""
+    pos = searchsorted_in_runs_ref(values, lo, hi, targets, side="left")
+    n = values.shape[0]
+    at = values[jnp.clip(pos, 0, n - 1)]
+    contains = (pos < hi) & (at == targets)
+    return pos.astype(jnp.int32), contains
 
 
 def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,

@@ -1,0 +1,126 @@
+"""Pallas TPU kernel: fused membership + rank of targets within per-row runs.
+
+The second half of the SPF server's hot loop.  After ``eqrange`` locates a
+branch's ``(p, s)`` run ``values[lo_i:hi_i)`` for every binding row, the
+probe branches (Def. 5 bind-join, object bound) must test whether the row's
+object value occurs inside its run — one independent sorted-run lookup per
+row.  The seed implementation was a serial ``fori_loop`` bisection
+(``searchsorted_in_runs``): O(log n) *dependent* scalar steps, each a
+per-lane gather — the worst possible shape for the VPU.
+
+TPU adaptation: same tile/broadcast-compare-reduce scheme as
+``sorted_probe``, with a per-row window mask.  Stream ``values`` through
+VMEM in tiles; for every row r and value tile j compute on the VPU
+
+    in_run  = (lo_r <= k_abs) & (k_abs < hi_r)        k_abs = global index
+    pos(r)  = lo_r + sum_tiles sum(in_run & (tile < target_r))
+    hit(r)  = or_tiles  any(in_run & (tile == target_r))
+
+i.e. ``pos`` is the absolute "left" insertion position of ``target_r`` in
+its run and ``hit`` its membership — exactly what ``run_contains`` needs,
+in one fused pass with a coalesced HBM->VMEM stream and zero gathers.  The
+window mask makes value padding a non-issue: padded positions sit at
+``k_abs >= n >= hi_r`` and padded rows get the empty run ``[0, 0)``.
+
+Grid: (num_r_tiles, num_v_tiles); TPU grids iterate the last axis fastest
+and sequentially, so partial ranks accumulate in the output block across
+value-tile steps (init at j == 0).  ``broadcasted_iota`` is 2D — TPU
+rejects 1D iota.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_R_TILE = 256
+DEFAULT_V_TILE = 2048
+
+
+def _run_probe_kernel(values_ref, lo_ref, hi_ref, targets_ref,
+                      pos_ref, contains_ref):
+    j = pl.program_id(1)
+    values = values_ref[...]  # [V_TILE]
+    lo = lo_ref[...]  # [R_TILE] int32
+    hi = hi_ref[...]  # [R_TILE] int32
+    targets = targets_ref[...]  # [R_TILE]
+    r_tile = lo.shape[0]
+    v_tile = values.shape[0]
+
+    # absolute value index per (row, tile element): [R_TILE, V_TILE]
+    k_abs = (j * v_tile
+             + jax.lax.broadcasted_iota(jnp.int32, (r_tile, v_tile), 1))
+    in_run = (k_abs >= lo[:, None]) & (k_abs < hi[:, None])
+    lt = in_run & (values[None, :] < targets[:, None])
+    eq = in_run & (values[None, :] == targets[:, None])
+    partial_pos = jnp.sum(lt, axis=1, dtype=jnp.int32)
+    partial_contains = jnp.any(eq, axis=1)
+
+    @pl.when(j == 0)
+    def _init():
+        pos_ref[...] = lo + partial_pos
+        contains_ref[...] = partial_contains
+
+    @pl.when(j != 0)
+    def _accum():
+        pos_ref[...] = pos_ref[...] + partial_pos
+        contains_ref[...] = contains_ref[...] | partial_contains
+
+
+@functools.partial(jax.jit, static_argnames=("r_tile", "v_tile", "interpret"))
+def run_probe_pallas(values: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray,
+                     targets: jnp.ndarray,
+                     r_tile: int = DEFAULT_R_TILE,
+                     v_tile: int = DEFAULT_V_TILE,
+                     interpret: bool = False
+                     ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused per-row sorted-run probe.
+
+    Returns ``(pos, contains)`` with
+
+        pos[i]      = lo[i] + #{k in [lo[i], hi[i)) : values[k] < targets[i]}
+        contains[i] = targets[i] in values[lo[i]:hi[i]]
+
+    Each run ``values[lo_i:hi_i)`` must be individually sorted ascending
+    (the PSO/POS store layout guarantees this).  Empty runs
+    (``lo[i] == hi[i]``) yield ``pos == lo`` and ``contains == False``.
+    Value padding uses +max and row padding the empty run ``[0, 0)``; the
+    in-run window mask keeps both inert.
+    """
+    n = values.shape[0]
+    r = lo.shape[0]
+    maxval = jnp.iinfo(values.dtype).max
+    n_pad = -n % v_tile
+    r_pad = -r % r_tile
+    values_p = jnp.pad(values, (0, n_pad), constant_values=maxval)
+    lo_p = jnp.pad(lo.astype(jnp.int32), (0, r_pad))
+    hi_p = jnp.pad(hi.astype(jnp.int32), (0, r_pad))
+    dt = jnp.promote_types(values.dtype, targets.dtype)
+    targets_p = jnp.pad(targets.astype(dt), (0, r_pad))
+    values_p = values_p.astype(dt)
+
+    grid = (lo_p.shape[0] // r_tile, values_p.shape[0] // v_tile)
+    pos, contains = pl.pallas_call(
+        _run_probe_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((v_tile,), lambda i, j: (j,)),
+            pl.BlockSpec((r_tile,), lambda i, j: (i,)),
+            pl.BlockSpec((r_tile,), lambda i, j: (i,)),
+            pl.BlockSpec((r_tile,), lambda i, j: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((r_tile,), lambda i, j: (i,)),
+            pl.BlockSpec((r_tile,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((lo_p.shape[0],), jnp.int32),
+            jax.ShapeDtypeStruct((lo_p.shape[0],), jnp.bool_),
+        ],
+        interpret=interpret,
+    )(values_p, lo_p, hi_p, targets_p)
+    return pos[:r], contains[:r]

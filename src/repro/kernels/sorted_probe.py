@@ -10,7 +10,8 @@ binary search is hostile to the VPU (8x128 lanes, no per-lane branching),
 and per-lane gather from HBM is the slowest path on TPU.  Instead we
 stream the run through VMEM in tiles and compute, for every query key,
 
-    rank(q)     = sum_tiles  sum(tile_keys <  q)
+    rank_lo(q)  = sum_tiles  sum(tile_keys <  q)    (= searchsorted left)
+    rank_hi(q)  = sum_tiles  sum(tile_keys <= q)    (= searchsorted right)
     contains(q) = or_tiles   any(tile_keys == q)
 
 i.e. probe-by-broadcast-compare-reduce: a dense [Q_tile x K_tile] compare on
@@ -19,6 +20,11 @@ vector-registers beats the log-n scalar loop on TPU by orders of magnitude
 (the MXU is idle either way; the VPU does 8x128 compares/cycle), and it has
 a perfectly predictable, coalesced HBM->VMEM stream.  Complexity is
 O(N*Q / 1024) VPU ops versus O(Q log N) *serial* scalar ops.
+
+Emitting both rank sides from one kernel pass is what lets the engine's
+``eqrange`` (equal-range lookup, the per-branch run locator) lower to a
+single fused probe instead of two searchsorted calls — see
+``repro.kernels.ops.eqrange``.
 
 Grid: (num_q_tiles, num_k_tiles); TPU grids iterate the last axis fastest
 and sequentially, so the kernel accumulates partial ranks in the output
@@ -38,25 +44,30 @@ DEFAULT_Q_TILE = 256
 DEFAULT_K_TILE = 2048
 
 
-def _probe_kernel(keys_ref, queries_ref, rank_ref, contains_ref):
+def _probe_kernel(keys_ref, queries_ref, rank_lo_ref, rank_hi_ref,
+                  contains_ref):
     j = pl.program_id(1)
     keys = keys_ref[...]  # [K_TILE]
     qs = queries_ref[...]  # [Q_TILE]
 
     # dense compare: [Q_TILE, K_TILE] on the VPU
     lt = keys[None, :] < qs[:, None]
+    le = keys[None, :] <= qs[:, None]
     eq = keys[None, :] == qs[:, None]
-    partial_rank = jnp.sum(lt, axis=1, dtype=jnp.int32)
+    partial_lo = jnp.sum(lt, axis=1, dtype=jnp.int32)
+    partial_hi = jnp.sum(le, axis=1, dtype=jnp.int32)
     partial_contains = jnp.any(eq, axis=1)
 
     @pl.when(j == 0)
     def _init():
-        rank_ref[...] = partial_rank
+        rank_lo_ref[...] = partial_lo
+        rank_hi_ref[...] = partial_hi
         contains_ref[...] = partial_contains
 
     @pl.when(j != 0)
     def _accum():
-        rank_ref[...] = rank_ref[...] + partial_rank
+        rank_lo_ref[...] = rank_lo_ref[...] + partial_lo
+        rank_hi_ref[...] = rank_hi_ref[...] + partial_hi
         contains_ref[...] = contains_ref[...] | partial_contains
 
 
@@ -65,12 +76,23 @@ def sorted_probe_pallas(keys: jnp.ndarray, queries: jnp.ndarray,
                         q_tile: int = DEFAULT_Q_TILE,
                         k_tile: int = DEFAULT_K_TILE,
                         interpret: bool = False
-                        ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """rank[i] = #{k in keys : k < queries[i]};  contains[i] = queries[i] in keys.
+                        ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fused equal-range probe of ``queries`` into sorted ``keys``.
+
+    Returns ``(rank_lo, rank_hi, contains)`` with
+
+        rank_lo[i]  = #{k in keys : k <  queries[i]}   (searchsorted "left")
+        rank_hi[i]  = #{k in keys : k <= queries[i]}   (searchsorted "right")
+        contains[i] = queries[i] in keys
 
     ``keys`` must be sorted ascending.  Both arrays are padded to tile
-    multiples; key padding uses +max so it never counts as ``< q`` for real
-    queries... (max-padding counts as neither < nor == any real query).
+    multiples; key padding uses +max, which is invisible to any query
+    below the dtype max.  A query *equal* to the dtype max would see the
+    padding in the ``<=``/``==`` compares, so the wrapper corrects for it:
+    ``rank_hi`` is clamped to ``n`` (the true right-rank at the max query
+    is always ``n``) and ``contains`` is derived as ``rank_lo < rank_hi``
+    — exact for every query value, keeping byte-parity with the jnp
+    oracle unconditional.
     """
     n = keys.shape[0]
     q = queries.shape[0]
@@ -82,7 +104,7 @@ def sorted_probe_pallas(keys: jnp.ndarray, queries: jnp.ndarray,
     queries_p = jnp.pad(queries, (0, q_pad), constant_values=maxval)
 
     grid = (queries_p.shape[0] // q_tile, keys_p.shape[0] // k_tile)
-    rank, contains = pl.pallas_call(
+    rank_lo, rank_hi, contains = pl.pallas_call(
         _probe_kernel,
         grid=grid,
         in_specs=[
@@ -92,11 +114,16 @@ def sorted_probe_pallas(keys: jnp.ndarray, queries: jnp.ndarray,
         out_specs=[
             pl.BlockSpec((q_tile,), lambda i, j: (i,)),
             pl.BlockSpec((q_tile,), lambda i, j: (i,)),
+            pl.BlockSpec((q_tile,), lambda i, j: (i,)),
         ],
         out_shape=[
+            jax.ShapeDtypeStruct((queries_p.shape[0],), jnp.int32),
             jax.ShapeDtypeStruct((queries_p.shape[0],), jnp.int32),
             jax.ShapeDtypeStruct((queries_p.shape[0],), jnp.bool_),
         ],
         interpret=interpret,
     )(keys_p, queries_p)
-    return rank[:q], contains[:q]
+    rank_lo, rank_hi, contains = rank_lo[:q], rank_hi[:q], contains[:q]
+    rank_hi = jnp.minimum(rank_hi, n)
+    contains = contains & (rank_lo < rank_hi)
+    return rank_lo, rank_hi, contains

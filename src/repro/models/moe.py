@@ -27,6 +27,7 @@ from dataclasses import dataclass
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.models import layers as L
 
 
@@ -322,13 +323,12 @@ def moe_ffn_ep(x: jnp.ndarray, p: dict, cfg: MoEConfig, mesh
         # Cost: the forward all_to_alls are re-issued in backward (~1.5x
         # dispatch wire bytes) — the classic memory/traffic remat trade.
         shard_fn = jax.checkpoint(shard_fn)
-    out = jax.shard_map(
-        shard_fn, mesh=mesh,
-        in_specs=(lead, P(None, None),
-                  P("data", None, "model"), P("data", None, "model"),
-                  P("data", "model", None), shared_specs),
-        out_specs=(lead, P()),
-        check_vma=False,
+    out = compat.shard_map(
+        shard_fn, mesh,
+        (lead, P(None, None),
+         P("data", None, "model"), P("data", None, "model"),
+         P("data", "model", None), shared_specs),
+        (lead, P()),
     )(x.reshape(T, d), p["router"], p["wi"], p["wg"], p["wo"], shared)
     y, aux = out
     return y.reshape(b, s, d), aux

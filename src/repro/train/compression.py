@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 
 def _quantize(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
     scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
@@ -41,7 +43,7 @@ def compressed_psum(g: jnp.ndarray, err: jnp.ndarray, axis: str
     # error-feedback buffer absorbs the difference).
     s_mean = jax.lax.pmean(scale, axis)
     total = jax.lax.psum(q.astype(jnp.int32), axis)
-    n = jax.lax.axis_size(axis)
+    n = compat.axis_size(axis)
     return total.astype(jnp.float32) * s_mean / n, new_err
 
 
@@ -63,10 +65,9 @@ def make_compressed_grad_allreduce(mesh: Mesh, axis: str = "data"):
 
     def sharded(grads, errs):
         spec = jax.tree.map(lambda _: P(), grads)
-        return jax.shard_map(
-            allreduce, mesh=mesh,
-            in_specs=(spec, spec), out_specs=(spec, spec),
-            check_vma=False)(grads, errs)
+        return compat.shard_map(
+            allreduce, mesh,
+            (spec, spec), (spec, spec))(grads, errs)
 
     return sharded
 

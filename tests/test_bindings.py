@@ -1,13 +1,88 @@
-"""Property tests for the static-shape join primitives."""
+"""Tests for the static-shape join primitives.
+
+The probe/membership primitives live in the backend-dispatched kernel
+layer (``repro.kernels.ops``); the table machinery (``expand``) stays in
+``repro.core.bindings``.  Deterministic cases run everywhere; the
+property tests additionally run when hypothesis is installed.
+"""
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
-from repro.core.bindings import (eqrange, expand, run_contains,
-                                 searchsorted_in_runs)
+from _hyp import given, settings, st
 
+from repro.core.bindings import expand
+from repro.kernels.ops import eqrange, run_contains, searchsorted_in_runs
+
+
+# --------------------------------------------------------------------------
+# deterministic cases (always run, even without hypothesis)
+# --------------------------------------------------------------------------
+
+def test_eqrange_basic():
+    keys = jnp.asarray(np.array([1, 3, 3, 3, 7, 9], np.int64))
+    q = jnp.asarray(np.array([0, 1, 3, 5, 9, 10], np.int64))
+    lo, hi = eqrange(keys, q)
+    np.testing.assert_array_equal(np.asarray(lo), [0, 0, 1, 4, 5, 6])
+    np.testing.assert_array_equal(np.asarray(hi), [0, 1, 4, 4, 6, 6])
+
+
+def test_run_contains_basic():
+    vals = jnp.asarray(np.array([1, 2, 4, 4, 6, 9, 0, 5], np.int32))
+    lo = jnp.asarray(np.array([0, 0, 2, 5, 6, 3], np.int32))
+    hi = jnp.asarray(np.array([6, 6, 5, 5, 8, 3], np.int32))
+    t = jnp.asarray(np.array([4, 3, 6, 9, 5, 1], np.int32))
+    got = np.asarray(run_contains(vals, lo, hi, t))
+    #           4 in run, 3 not, 6 in [2:5)? vals[2:5]=[4,4,6] yes,
+    #           empty [5:5), 5 in [6:8)=[0,5] yes, empty [3:3)
+    np.testing.assert_array_equal(got, [True, False, True, False, True, False])
+
+
+def test_searchsorted_in_runs_basic():
+    vals = jnp.asarray(np.array([1, 2, 4, 4, 6, 9], np.int32))
+    lo = jnp.asarray(np.array([0, 2, 0, 4], np.int32))
+    hi = jnp.asarray(np.array([6, 5, 0, 6], np.int32))
+    t = jnp.asarray(np.array([4, 5, 3, 10], np.int32))
+    got = np.asarray(searchsorted_in_runs(vals, lo, hi, t))
+    want = [l + np.searchsorted(np.asarray(vals)[l:h], tv, "left")
+            for l, h, tv in zip(np.asarray(lo), np.asarray(hi), np.asarray(t))]
+    np.testing.assert_array_equal(got, want)
+
+
+def test_expand_basic():
+    lo = jnp.asarray(np.array([0, 4, 10], np.int64))
+    hi = jnp.asarray(np.array([2, 4, 13], np.int64))
+    valid = jnp.asarray(np.array([True, True, True]))
+    ex = expand(lo, hi, valid, cap=8)
+    assert int(ex.total) == 5
+    np.testing.assert_array_equal(np.asarray(ex.src_row)[:5], [0, 0, 2, 2, 2])
+    np.testing.assert_array_equal(np.asarray(ex.flat_idx)[:5],
+                                  [0, 1, 10, 11, 12])
+    assert int(np.asarray(ex.valid).sum()) == 5
+
+
+def test_expand_invalid_rows_contribute_nothing():
+    lo = jnp.asarray(np.array([0, 4], np.int64))
+    hi = jnp.asarray(np.array([3, 6], np.int64))
+    valid = jnp.asarray(np.array([False, True]))
+    ex = expand(lo, hi, valid, cap=4)
+    assert int(ex.total) == 2
+    np.testing.assert_array_equal(np.asarray(ex.src_row)[:2], [1, 1])
+    np.testing.assert_array_equal(np.asarray(ex.flat_idx)[:2], [4, 5])
+
+
+def test_expand_overflow_clamps_to_cap():
+    lo = jnp.asarray(np.array([0], np.int64))
+    hi = jnp.asarray(np.array([10], np.int64))
+    valid = jnp.asarray(np.array([True]))
+    ex = expand(lo, hi, valid, cap=4)
+    assert int(ex.total) == 10  # true total, unclamped
+    assert int(np.asarray(ex.valid).sum()) == 4  # output rows clamp to cap
+
+
+# --------------------------------------------------------------------------
+# property tests (hypothesis)
+# --------------------------------------------------------------------------
 
 @given(st.lists(st.integers(0, 100), min_size=1, max_size=100),
        st.lists(st.integers(-5, 105), min_size=1, max_size=50))

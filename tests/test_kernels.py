@@ -3,13 +3,16 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+from _hyp import given, settings, st
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.run_probe import run_probe_pallas
 from repro.kernels.sorted_probe import sorted_probe_pallas
 
+
+# --------------------------------------------------------------- sorted_probe
 
 @pytest.mark.parametrize("n,q,dt", [
     (1000, 77, np.int32), (5000, 256, np.int64), (131, 513, np.int32),
@@ -18,10 +21,15 @@ from repro.kernels.sorted_probe import sorted_probe_pallas
 def test_sorted_probe_sweep(n, q, dt, rng):
     keys = np.sort(rng.integers(0, max(n * 3, 10), n)).astype(dt)
     queries = rng.integers(-5, max(n * 3, 10) + 5, q).astype(dt)
-    r1, c1 = sorted_probe_pallas(jnp.asarray(keys), jnp.asarray(queries),
-                                 interpret=True)
+    r_lo, r_hi, c1 = sorted_probe_pallas(jnp.asarray(keys),
+                                         jnp.asarray(queries),
+                                         interpret=True)
+    np.testing.assert_array_equal(np.asarray(r_lo),
+                                  np.searchsorted(keys, queries, "left"))
+    np.testing.assert_array_equal(np.asarray(r_hi),
+                                  np.searchsorted(keys, queries, "right"))
     r2, c2 = ref.sorted_probe_ref(jnp.asarray(keys), jnp.asarray(queries))
-    np.testing.assert_array_equal(np.asarray(r1), np.asarray(r2))
+    np.testing.assert_array_equal(np.asarray(r_lo), np.asarray(r2))
     np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
 
 
@@ -33,13 +41,137 @@ def test_sorted_probe_property(data):
     rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
     keys = np.sort(rng.integers(0, 100, n)).astype(np.int64)
     queries = rng.integers(-10, 110, q).astype(np.int64)
-    r1, c1 = sorted_probe_pallas(jnp.asarray(keys), jnp.asarray(queries),
-                                 q_tile=64, k_tile=128, interpret=True)
+    r_lo, r_hi, c1 = sorted_probe_pallas(jnp.asarray(keys),
+                                         jnp.asarray(queries),
+                                         q_tile=64, k_tile=128,
+                                         interpret=True)
     np.testing.assert_array_equal(
-        np.asarray(r1), np.searchsorted(keys, queries, "left"))
+        np.asarray(r_lo), np.searchsorted(keys, queries, "left"))
+    np.testing.assert_array_equal(
+        np.asarray(r_hi), np.searchsorted(keys, queries, "right"))
     np.testing.assert_array_equal(
         np.asarray(c1), np.isin(queries, keys))
 
+
+@pytest.mark.parametrize("dt", [np.int32, np.int64])
+@pytest.mark.parametrize("max_in_keys", [False, True])
+def test_sorted_probe_dtype_max_query(dt, max_in_keys):
+    """A query equal to the dtype max must not see the +max key padding:
+    rank_hi stays <= n and contains reflects the real keys only."""
+    maxv = np.iinfo(dt).max
+    keys = np.array([1, 5, 9] + ([maxv] if max_in_keys else []), dt)
+    queries = np.array([maxv, 5, maxv - 1], dt)
+    r_lo, r_hi, c = sorted_probe_pallas(jnp.asarray(keys),
+                                        jnp.asarray(queries),
+                                        interpret=True)
+    np.testing.assert_array_equal(np.asarray(r_lo),
+                                  np.searchsorted(keys, queries, "left"))
+    np.testing.assert_array_equal(np.asarray(r_hi),
+                                  np.searchsorted(keys, queries, "right"))
+    np.testing.assert_array_equal(np.asarray(c), np.isin(queries, keys))
+
+
+# ----------------------------------------------------------------- run_probe
+
+def _run_probe_truth(vals, lo, hi, targets):
+    pos = np.array([l + np.searchsorted(vals[l:h], t, "left")
+                    for l, h, t in zip(lo, hi, targets)])
+    contains = np.array([t in vals[l:h].tolist()
+                         for l, h, t in zip(lo, hi, targets)])
+    return pos, contains
+
+
+def _check_run_probe(vals, lo, hi, targets, **tiles):
+    p1, c1 = run_probe_pallas(jnp.asarray(vals), jnp.asarray(lo),
+                              jnp.asarray(hi), jnp.asarray(targets),
+                              interpret=True, **tiles)
+    p2, c2 = ref.run_probe_ref(jnp.asarray(vals), jnp.asarray(lo),
+                               jnp.asarray(hi), jnp.asarray(targets))
+    want_p, want_c = _run_probe_truth(vals, lo, hi, targets)
+    np.testing.assert_array_equal(np.asarray(p1), want_p)
+    np.testing.assert_array_equal(np.asarray(c1), want_c)
+    np.testing.assert_array_equal(np.asarray(p2), want_p)
+    np.testing.assert_array_equal(np.asarray(c2), want_c)
+
+
+@pytest.mark.parametrize("n,r,dt", [
+    (1000, 77, np.int32), (5000, 300, np.int64), (131, 513, np.int32),
+    (2048, 256, np.int64), (1, 1, np.int32), (10, 4096, np.int64),
+])
+def test_run_probe_sweep(n, r, dt, rng):
+    # one globally sorted array => every window [lo, hi) is a sorted run
+    vals = np.sort(rng.integers(0, max(n * 3, 10), n)).astype(dt)
+    lo = rng.integers(0, n + 1, r)
+    hi = np.minimum(n, lo + rng.integers(0, n + 1, r))
+    targets = rng.integers(-5, max(n * 3, 10) + 5, r).astype(dt)
+    _check_run_probe(vals, lo, hi, targets)
+
+
+def test_run_probe_empty_runs(rng):
+    vals = np.sort(rng.integers(0, 50, 64)).astype(np.int32)
+    lo = np.array([0, 10, 64, 32], np.int64)
+    hi = lo.copy()  # all runs empty
+    targets = np.array([0, 25, 49, -1], np.int32)
+    p, c = run_probe_pallas(jnp.asarray(vals), jnp.asarray(lo),
+                            jnp.asarray(hi), jnp.asarray(targets),
+                            interpret=True)
+    np.testing.assert_array_equal(np.asarray(p), lo)  # pos degenerates to lo
+    assert not np.asarray(c).any()
+
+
+def test_run_probe_boundary_runs(rng):
+    """Runs touching index 0 and index n, and the full-array run."""
+    n = 300
+    vals = np.sort(rng.integers(0, 500, n)).astype(np.int64)
+    lo = np.array([0, 0, n - 7, 0, 17], np.int64)
+    hi = np.array([5, n, n, n, n], np.int64)
+    targets = np.array([vals[0], vals[-1], vals[-1], -10**9, vals[20]],
+                       np.int64)
+    _check_run_probe(vals, lo, hi, targets)
+
+
+def test_run_probe_padding_edges():
+    """Max-valued targets and non-tile-multiple shapes: the +max value
+    padding and the [0, 0) row padding must stay inert."""
+    maxv = np.iinfo(np.int32).max
+    vals = np.array([1, 5, 9, maxv - 1, maxv], np.int32)  # sorted, hits max
+    lo = np.array([0, 0, 3], np.int64)
+    hi = np.array([5, 5, 5], np.int64)
+    targets = np.array([maxv, maxv - 1, maxv], np.int32)
+    # small tiles force padding on both axes (5 % 4 != 0, 3 % 8 != 0)
+    _check_run_probe(vals, lo, hi, targets, r_tile=8, v_tile=4)
+
+
+def test_run_probe_tile_sizes_equivalent(rng):
+    """Tile sizes are pure tiling parameters — results must not change."""
+    n, r = 500, 100
+    vals = np.sort(rng.integers(0, 1000, n)).astype(np.int64)
+    lo = rng.integers(0, n + 1, r)
+    hi = np.minimum(n, lo + rng.integers(0, 200, r))
+    targets = rng.integers(0, 1000, r).astype(np.int64)
+    outs = [run_probe_pallas(jnp.asarray(vals), jnp.asarray(lo),
+                             jnp.asarray(hi), jnp.asarray(targets),
+                             r_tile=rt, v_tile=vt, interpret=True)
+            for rt, vt in [(32, 64), (128, 256), (256, 2048)]]
+    for p, c in outs[1:]:
+        np.testing.assert_array_equal(np.asarray(outs[0][0]), np.asarray(p))
+        np.testing.assert_array_equal(np.asarray(outs[0][1]), np.asarray(c))
+
+
+@given(st.data())
+@settings(max_examples=20, deadline=None)
+def test_run_probe_property(data):
+    n = data.draw(st.integers(1, 200))
+    r = data.draw(st.integers(1, 80))
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31)))
+    vals = np.sort(rng.integers(0, 100, n)).astype(np.int64)
+    lo = rng.integers(0, n + 1, r)
+    hi = np.minimum(n, lo + rng.integers(0, n + 1, r))
+    targets = rng.integers(-10, 110, r).astype(np.int64)
+    _check_run_probe(vals, lo, hi, targets, r_tile=32, v_tile=64)
+
+
+# ------------------------------------------------------------ flash_attention
 
 @pytest.mark.parametrize("shape,causal,dt", [
     ((1, 2, 2, 128, 128, 64), True, jnp.float32),

@@ -1,0 +1,86 @@
+"""The dispatch layer's contract: backend choice must be invisible.
+
+With ``repro.kernels.ops.FORCE`` set to "pallas" (interpret mode on CPU)
+and "ref", the engine must return byte-identical binding tables and
+QueryStats for the same query load on all four interfaces, and the
+distributed engine must lower under both.  ``FORCE`` is read at trace
+time, so each setting gets a fresh engine (fresh jit cache).
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import EngineConfig, QueryEngine
+from repro.core.distributed import DistConfig, DistributedEngine
+from repro.core.engine import plan_query
+from repro.kernels import ops as kops
+from repro.rdf import generate_query_load
+from repro.rdf.queries import QueryLoadConfig
+
+INTERFACES = ["tpf", "brtpf", "spf", "endpoint"]
+
+
+@pytest.fixture(scope="module")
+def parity_load(watdiv_small):
+    g, store = watdiv_small
+    return (generate_query_load(g, store, "2-stars",
+                                QueryLoadConfig(n_queries=2))
+            + generate_query_load(g, store, "paths",
+                                  QueryLoadConfig(n_queries=1)))
+
+
+def _run_all(store, queries, force):
+    """Run the load under one FORCE setting; return raw bytes + stats."""
+    out = []
+    old = kops.FORCE
+    kops.FORCE = force
+    try:
+        for iface in INTERFACES:
+            eng = QueryEngine(store, EngineConfig(interface=iface, cap=2048))
+            for q in queries:
+                tbl, stats = eng.run(q)
+                out.append((
+                    iface,
+                    np.asarray(tbl.rows).tobytes(),
+                    np.asarray(tbl.valid).tobytes(),
+                    tuple(int(x) for x in stats),
+                ))
+    finally:
+        kops.FORCE = old
+    return out
+
+
+def test_force_pallas_vs_ref_byte_identical(watdiv_small, parity_load):
+    _, store = watdiv_small
+    ref_out = _run_all(store, parity_load, "ref")
+    pallas_out = _run_all(store, parity_load, "pallas")
+    assert len(ref_out) == len(pallas_out) == len(INTERFACES) * len(parity_load)
+    for r, p in zip(ref_out, pallas_out):
+        assert r == p, f"backend divergence on interface {r[0]}"
+
+
+def test_distributed_lowers_under_both_backends(watdiv_small, parity_load):
+    _, store = watdiv_small
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    cfg = EngineConfig(interface="spf")
+    plan = plan_query(store, parity_load[0], cfg)
+    old = kops.FORCE
+    try:
+        for force in ["ref", "pallas"]:
+            kops.FORCE = force
+            eng = DistributedEngine(store, mesh, cfg,
+                                    DistConfig(cap=512, shard_cap=256))
+            lowered = eng.lower_step(plan, 1)
+            assert "all-gather" in lowered.as_text() or \
+                   "all_gather" in lowered.as_text()
+    finally:
+        kops.FORCE = old
+
+
+def test_dispatch_default_is_ref_off_tpu():
+    """On a non-TPU backend the wrappers must pick the jnp oracle path."""
+    if jax.default_backend() == "tpu":
+        pytest.skip("running on TPU; default path is pallas by design")
+    assert kops.FORCE is None
+    assert not kops._use_pallas()

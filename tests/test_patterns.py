@@ -1,8 +1,7 @@
 """Star decomposition (Def. 7): unit + property tests."""
 
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hyp import given, settings, st
 
 from repro.core.patterns import (BGP, C, StarPattern, TriplePattern, V,
                                  count_stars, star_decomposition)

@@ -1,8 +1,7 @@
 """Triple-store invariants: index sort order, cardinalities, sharding."""
 
 import numpy as np
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hyp import given, settings, st
 
 from repro.rdf.store import TripleStore, _subject_hash
 
