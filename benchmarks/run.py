@@ -8,17 +8,23 @@ Prints ``name,us_per_call,derived`` CSV rows:
   model in repro.benchlib (see its docstring for the constants).
 
 Figures covered:
-  fig4_loadstats      query-load statistics
-  fig5_throughput     throughput vs concurrent clients, per load
-  fig5f_timeouts      overflow/timeout analogue count, union load
-  fig6_server_load    server CPU proxy vs clients, union load
-  fig7_network        NRS + NTB per interface per load (64 clients)
-  fig8_latency        QET / QRT per load (64 clients)
-  kernels             sorted_probe / run_probe / flash_attention microbench
+  fig4_loadstats        query-load statistics
+  fig5_throughput       throughput vs concurrent clients, per load
+  fig5f_timeouts        overflow/timeout analogue count, union load
+  fig6_server_load      server CPU proxy vs clients, union load
+  fig7_network          NRS + NTB per interface per load (64 clients)
+  fig8_latency          QET / QRT per load (64 clients)
+  fig_sched_throughput  scheduler vs serial serving: measured wall time,
+                        fragment-cache hit rate and batch occupancy per
+                        load at 16/64/128 simulated clients; also writes
+                        the BENCH_sched.json artifact (CI uploads it)
+  kernels               sorted_probe / run_probe / flash_attention microbench
 """
 
 from __future__ import annotations
 
+import json
+import os
 import sys
 import time
 
@@ -31,8 +37,8 @@ from repro.core import count_stars  # noqa: E402
 from repro.core.patterns import star_decomposition  # noqa: E402
 
 from benchmarks.common import (CLIENTS, INTERFACES, LOADS,  # noqa: E402
-                               bench_graph, bench_load, engine, load_run,
-                               timed_run)
+                               SCHED_CLIENTS, bench_graph, bench_load,
+                               engine, load_run, sched_vs_serial, timed_run)
 
 
 def emit(name: str, us_per_call: float, derived: str) -> None:
@@ -129,6 +135,46 @@ def fig8_latency() -> None:
                  f"qrt_ms={1e3 * np.mean(qrts):.1f}")
 
 
+# ------------------------------------------------- scheduler vs serial
+
+def fig_sched_throughput() -> None:
+    """Measured (not modeled) serving comparison: the scheduler's batched,
+    cache-aware path against the serial ``run``-per-request loop, on the
+    same interleaved multi-client request streams.  Emits CSV rows and the
+    ``BENCH_sched.json`` artifact with one record per (load, clients).
+
+    Environment knobs (CI smoke uses the defaults):
+      BENCH_SCHED_LOADS    comma list, default all five loads
+      BENCH_SCHED_CLIENTS  comma list, default "16,64,128"
+    """
+    loads = tuple(
+        s for s in os.environ.get("BENCH_SCHED_LOADS", ",".join(LOADS)).split(",")
+        if s)
+    clients = tuple(
+        int(c) for c in os.environ.get(
+            "BENCH_SCHED_CLIENTS", ",".join(map(str, SCHED_CLIENTS))).split(","))
+    records = []
+    for load in loads:
+        for c in clients:
+            r = sched_vs_serial(load, c)
+            per_q = r.pop("stats")
+            mean_s = np.mean([modeled_query_seconds(s, c, occupancy=max(
+                r["occupancy"], 1.0)) for s in per_q])
+            r["modeled_queries_per_min"] = c * 60.0 / mean_s
+            records.append(r)
+            emit(f"fig_sched_throughput/{load}/clients{c}",
+                 1e6 * r["sched_s"] / max(r["requests"], 1),
+                 f"serial_s={r['serial_s']:.3f};sched_s={r['sched_s']:.3f};"
+                 f"speedup={r['speedup']:.2f};hit_rate={r['hit_rate']:.3f};"
+                 f"occupancy={r['occupancy']:.2f};"
+                 f"identical={int(r['byte_identical'])}")
+    out = os.environ.get("BENCH_SCHED_JSON", "BENCH_sched.json")
+    with open(out, "w") as f:
+        json.dump({"figure": "fig_sched_throughput", "records": records}, f,
+                  indent=2)
+    print(f"# wrote {out} ({len(records)} records)", file=sys.stderr)
+
+
 # ----------------------------------------------------------------- kernels
 
 def kernels() -> None:
@@ -186,7 +232,7 @@ def kernels() -> None:
 
 
 FIGS = [fig4_loadstats, fig5_throughput, fig5f_timeouts, fig6_server_load,
-        fig7_network, fig8_latency, kernels]
+        fig7_network, fig8_latency, fig_sched_throughput, kernels]
 
 
 def main() -> None:

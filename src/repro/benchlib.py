@@ -5,12 +5,25 @@ interfaces would measure noise.  Instead the engines report *exact* counts
 (NRS, NTB, server/client work units), and this module converts them into
 modeled latency/throughput with explicit, paper-plausible constants:
 
-    QET(C) = client_time + NRS x RTT + NTB / BW + server_time x max(1, C/cores)
+    QET(C) = client_time + NRS x RTT + NTB / BW
+             + server_time x served_frac x max(1, C / (cores x occupancy))
 
 i.e. requests pay a round-trip, bytes pay wire time, and the shared server
 saturates beyond ``cores`` concurrent clients (the paper's server had 16
 vCPUs; its endpoint crashed at 128 clients — here saturation shows up as
 linear degradation instead of a crash).
+
+Scheduler-awareness (PR 2): the serving path no longer executes one query
+at a time.  ``served_frac = (nrs - nrs_saved) / nrs`` scales *server*
+work by the fraction of requests that actually reached the origin — a
+cache-served request still pays its round trip and its response bytes
+(the cache sits in front of the server, not inside the client), but costs
+the server nothing.  ``occupancy`` is the *measured* mean batch width of
+the scheduler's dispatched steps (``SchedMetrics.occupancy``) — a server
+evaluating a vmapped wave of K queries absorbs K clients per saturation
+slot.  With the defaults (``occupancy=1`` and serial-path stats, whose
+saved fields are zero) the model reduces exactly to the pre-scheduler
+formula.
 
 The constants are configuration, not measurement — every claim the
 benchmarks make (orderings, ratios) is robust to any RTT/BW in LAN/WAN
@@ -33,11 +46,21 @@ class CostModel:
 
 
 def modeled_query_seconds(stats, n_clients: int = 1,
-                          cm: CostModel = CostModel()) -> float:
-    server = int(stats.server_ops) * cm.op_s
+                          cm: CostModel = CostModel(),
+                          occupancy: float = 1.0) -> float:
+    """Modeled QET for one query's stats under ``n_clients`` concurrency.
+
+    Cache savings recorded in ``stats`` (scheduler path) relieve the
+    server term; ``occupancy`` (measured batch width) amortises server
+    saturation.  Serial-path stats reproduce the original model.
+    """
+    nrs = int(stats.nrs)
+    nrs_eff = nrs - int(getattr(stats, "nrs_saved", 0))
+    served_frac = nrs_eff / nrs if nrs else 1.0
+    server = int(stats.server_ops) * cm.op_s * served_frac
     client = int(stats.client_ops) * cm.op_s
-    wire = int(stats.nrs) * cm.rtt_s + int(stats.ntb) / cm.bw_bytes_s
-    contention = max(1.0, n_clients / cm.server_cores)
+    wire = nrs * cm.rtt_s + int(stats.ntb) / cm.bw_bytes_s
+    contention = max(1.0, n_clients / (cm.server_cores * max(occupancy, 1.0)))
     return client + wire + server * contention
 
 
@@ -45,7 +68,9 @@ def load_throughput(store, queries, interface: str, n_clients: int,
                     cm: CostModel = CostModel(),
                     cfg: EngineConfig | None = None) -> float:
     """Modeled queries/minute for ``n_clients`` concurrent clients, each
-    executing the load one query at a time (the paper's setup)."""
+    executing the load one query at a time (the paper's setup, serial
+    serving path — the scheduler-aware counterpart is
+    ``scheduled_load_throughput``)."""
     cfg = cfg or EngineConfig(interface=interface)
     if cfg.interface != interface:
         cfg = EngineConfig(interface=interface, page_size=cfg.page_size,
@@ -57,6 +82,30 @@ def load_throughput(store, queries, interface: str, n_clients: int,
         total_s += modeled_query_seconds(stats, n_clients, cm)
     mean_s = total_s / max(len(queries), 1)
     return n_clients * 60.0 / mean_s
+
+
+def scheduled_load_throughput(store, queries, interface: str, n_clients: int,
+                              cm: CostModel = CostModel(),
+                              cfg: EngineConfig | None = None,
+                              scheduler=None):
+    """Modeled queries/minute with the scheduler serving the load.
+
+    Serves the full interleaved ``n_clients x queries`` arrival stream
+    through a ``QueryScheduler`` and feeds the *measured* batch occupancy
+    and per-request cache savings into the cost model.  Returns
+    ``(queries_per_min, hit_rate, occupancy)``.
+    """
+    from repro.core.scheduler import QueryScheduler, interleave_clients
+
+    cfg = cfg or EngineConfig(interface=interface)
+    sched = scheduler or QueryScheduler(store, cfg)
+    served = sched.serve(interleave_clients(list(queries), n_clients))
+    occ = max(sched.metrics.occupancy, 1.0)
+    total_s = sum(modeled_query_seconds(st, n_clients, cm, occupancy=occ)
+                  for _, st in served)
+    mean_s = total_s / max(len(served), 1)
+    return (n_clients * 60.0 / mean_s, sched.cache.stats.hit_rate,
+            sched.metrics.occupancy)
 
 
 def run_load(store, queries, interface: str,

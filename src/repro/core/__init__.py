@@ -5,6 +5,10 @@
 - :mod:`repro.core.server`        — seeded star / triple-pattern evaluation (Def. 5)
 - :mod:`repro.core.engine`        — the four interfaces (TPF / brTPF / SPF / endpoint)
   with the paper's NRS / NTB / load accounting
+- :mod:`repro.core.scheduler`     — concurrent query scheduler: mixed loads as
+  signature-bucketed, cache-aware vmapped waves
+- :mod:`repro.core.fragcache`     — LRU star-fragment cache over canonicalized
+  seeded unit requests
 - :mod:`repro.core.distributed`   — shard_map multi-device runtime (subject-hash
   sharded store; collectives are the "network")
 - :mod:`repro.core.oracle`        — brute-force ground truth (tests)
@@ -27,10 +31,18 @@ from repro.core.engine import (
     QueryStats,
     results_as_numpy,
 )
+from repro.core.fragcache import FragmentCache
+from repro.core.scheduler import (
+    QueryScheduler,
+    SchedulerConfig,
+    interleave_clients,
+)
 
 __all__ = [
     "BGP", "C", "StarPattern", "Term", "TriplePattern", "V",
     "count_stars", "star_decomposition",
     "INTERFACES", "EngineConfig", "QueryEngine", "QueryStats",
     "results_as_numpy",
+    "FragmentCache", "QueryScheduler", "SchedulerConfig",
+    "interleave_clients",
 ]

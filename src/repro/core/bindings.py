@@ -17,9 +17,10 @@ module keeps only the table machinery itself:
 - ``expand``: given per-row runs ``[lo_i, hi_i)``, enumerate (row, element)
   pairs into a fresh table of capacity ``cap`` via cumsum + searchsorted —
   the standard prefix-sum trick for ragged expansion under static shapes.
-  (Its internal ``searchsorted`` over the cumulative-degree vector is table
-  bookkeeping, not an index probe — it does not route through the kernel
-  layer.)
+  Its internal ``searchsorted`` over the cumulative-degree vector routes
+  through ``kops.searchsorted`` like every other rank primitive, so the
+  Pallas column-stream probe covers it on TPU at large capacities
+  (ROADMAP follow-up from the dispatch-layer refactor).
 - ``compact`` / ``set_column``: table maintenance.
 """
 
@@ -28,6 +29,8 @@ from __future__ import annotations
 from typing import NamedTuple
 
 import jax.numpy as jnp
+
+from repro.kernels import ops as kops
 
 
 UNBOUND = jnp.int32(-1)
@@ -82,9 +85,7 @@ def expand(lo: jnp.ndarray, hi: jnp.ndarray, row_valid: jnp.ndarray,
     total = cum[-1]
     starts = cum - deg
     j = jnp.arange(cap, dtype=jnp.int64)
-    # method="sort": the default scan lowering triggers pathological XLA
-    # constant folding on the (constant) arange at large capacities
-    src = jnp.searchsorted(cum, j, side="right", method="sort")
+    src = kops.searchsorted(cum, j, side="right")
     src_c = jnp.clip(src, 0, lo.shape[0] - 1)
     r = j - starts[src_c]
     flat = lo[src_c].astype(jnp.int64) + r

@@ -27,12 +27,17 @@ through ``repro.kernels.ops`` must be shard_map/vmap-compatible: the
 Pallas kernels batch by grid extension and the jnp oracles are pure
 element-wise/scan code, so the same engine code lowers under both
 ``ops.FORCE`` settings (see ``DistributedEngine.lower_step``).
+
+The batching scaffold itself is the module-level ``make_batch_step``
+factory: ``mesh=None`` yields the single-host ``jit(vmap(...))`` step the
+concurrent scheduler (``core/scheduler.py``) dispatches its buckets
+through; with a mesh it yields the ``shard_map`` step used here.  One
+lane evaluator, two lowerings.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass, replace
-from functools import partial
 from typing import NamedTuple
 
 import jax
@@ -75,14 +80,53 @@ class DistConfig:
     owner_masking: bool = False
 
 
-def _subject_shard_jnp(s: jnp.ndarray, n_shards: int) -> jnp.ndarray:
-    """splitmix64 finaliser, must match rdf.store._subject_hash."""
-    x = s.astype(jnp.uint64)
-    x = (x ^ (x >> jnp.uint64(30))) * jnp.uint64(0xBF58476D1CE4E5B9)
-    x = (x ^ (x >> jnp.uint64(27))) * jnp.uint64(0x94D049BB133111EB)
-    x = x ^ (x >> jnp.uint64(31))
-    return ((x & jnp.uint64(0x7FFFFFFFFFFFFFFF)).astype(jnp.int64)
-            % n_shards).astype(jnp.int32)
+def make_batch_step(lane_fn, out_proto=None, *, mesh: Mesh | None = None,
+                    data_axis: str = "data",
+                    lane_axes: tuple[str, ...] = ("model",)):
+    """Lift a per-lane evaluator into one jitted batch step (the shared
+    step factory behind both engines).
+
+    ``lane_fn(dev: StoreArrays, *lane_args) -> pytree`` evaluates a single
+    query lane against one store replica/shard.  The returned step takes
+    ``(store_arrays, *batched_lane_args)`` with a leading batch axis on
+    every lane arg:
+
+    - ``mesh=None`` — single host: ``jit(vmap(lane_fn))`` with the store
+      broadcast.  This is the scheduler's bucket step
+      (``core/scheduler.py``): plan-homogeneity is the scheduler's internal
+      bucketing detail, and batching is plain ``vmap``.
+    - ``mesh`` given — the distributed step: ``shard_map`` with the store
+      sharded along ``data_axis`` and lanes along ``lane_axes``, the same
+      ``vmap`` inside each shard.  ``out_proto`` must mirror the lane
+      output pytree structure (leaf values are ignored) so the factory can
+      derive ``shard_map`` out_specs.
+
+    Either way the lane evaluator is written once and lowers under both —
+    the collective schedule (or its absence) is the only difference.
+    """
+    if mesh is None:
+        def step(dev: StoreArrays, *lane_args):
+            in_axes = (None,) + (0,) * len(lane_args)
+            return jax.vmap(lane_fn, in_axes=in_axes)(dev, *lane_args)
+
+        return jax.jit(step)
+
+    if out_proto is None:
+        raise ValueError("mesh-mapped steps need out_proto for out_specs")
+    store_spec = StoreArrays(*[P(data_axis) for _ in range(6)])
+    lane_spec = P(lane_axes if len(lane_axes) > 1 else lane_axes[0])
+    out_specs = jax.tree_util.tree_map(lambda _: lane_spec, out_proto)
+
+    def step(stacked: StoreArrays, *lane_batches):
+        def shard_fn(dev: StoreArrays, *lanes_local):
+            dev = StoreArrays(*[a[0] for a in dev])  # drop shard axis
+            return jax.vmap(lambda *la: lane_fn(dev, *la))(*lanes_local)
+
+        in_specs = (store_spec,) + (lane_spec,) * len(lane_batches)
+        return _shard_map(shard_fn, mesh, in_specs, out_specs)(
+            stacked, *lane_batches)
+
+    return jax.jit(step)
 
 
 def _lane_eval(plans: tuple, n_vars: int, cfg: DistConfig, radix: int,
@@ -106,21 +150,13 @@ def _lane_eval(plans: tuple, n_vars: int, cfg: DistConfig, radix: int,
     server_ops = jnp.int64(0)
 
     my_shard = jax.lax.axis_index(axis)
+    # owner masking now lives inside the dispatched probe (eval_unit routes
+    # bound-subject branches through kops.eqrange_owned): non-owned rows get
+    # empty runs, so no per-unit hash-and-mask pass over the table here.
+    owner = (my_shard, n_shards) if cfg.owner_masking else None
     for up in plans:
         # --- server side: local (collective-free) unit evaluation ---------
-        valid_in = table.valid
-        first = up.branches[0]
-        if cfg.owner_masking and first.case.startswith("probe"):
-            # bound subject: only the owning shard can match each row
-            if first.subj_src[0] == "var":
-                subj = table.rows[:, first.subj_src[1]].astype(jnp.int64)
-            else:
-                subj = jnp.broadcast_to(const_vec[first.subj_src[1]],
-                                        table.valid.shape)
-            owner = _subject_shard_jnp(subj, n_shards)
-            valid_in = table.valid & (owner == my_shard)
-        local = BindingTable(table.rows, valid_in, table.overflow)
-        local, ops = eval_unit(dev, radix, up, const_vec, local)
+        local, ops = eval_unit(dev, radix, up, const_vec, table, owner=owner)
         # keep at most shard_cap local rows (page buffer)
         local = compact(local)
         keep = jnp.arange(cfg.cap) < cfg.shard_cap
@@ -202,8 +238,10 @@ class DistributedEngine:
         sig = plans[0].signature
         for p in plans[1:]:
             if p.signature != sig:
-                raise ValueError("batch must be plan-homogeneous; group queries"
-                                 " by signature first (see group_by_signature)")
+                raise ValueError(
+                    "plan_batch requires a plan-homogeneous batch; "
+                    "run_batch buckets mixed batches by signature itself "
+                    "(as does the single-host scheduler, core/scheduler.py)")
         consts = np.stack([np.asarray(p.consts, np.int64) for p in plans])
         return plans[0], consts
 
@@ -214,51 +252,76 @@ class DistributedEngine:
             groups.setdefault(sig, []).append(q)
         return groups
 
-    # -------------------------------------------------------------- execution
-    def make_step(self, plan: QueryPlan, batch: int):
-        """Build the jitted shard_map step for ``batch`` query lanes."""
+    def _lane_slots(self) -> tuple[tuple[str, ...], int]:
+        """Lane mesh axes and the total lane-slot count they provide."""
         dcfg = self.dcfg
-        mesh = self.mesh
         lane_axes = (dcfg.pod_axis, dcfg.model_axis) if dcfg.pod_axis \
             else (dcfg.model_axis,)
-        n_lane_slots = 1
+        slots = 1
         for a in lane_axes:
-            n_lane_slots *= mesh.shape[a]
+            slots *= self.mesh.shape[a]
+        return lane_axes, slots
+
+    # -------------------------------------------------------------- execution
+    def make_step(self, plan: QueryPlan, batch: int):
+        """Build the jitted shard_map step for ``batch`` query lanes
+        (the mesh instantiation of the shared ``make_batch_step`` factory)."""
+        dcfg = self.dcfg
+        lane_axes, n_lane_slots = self._lane_slots()
         if batch % n_lane_slots:
             raise ValueError(f"batch {batch} not divisible by lane slots "
                              f"{n_lane_slots}")
         per_lane = batch // n_lane_slots
 
-        store_spec = StoreArrays(*[P(dcfg.data_axis) for _ in range(6)])
-        const_spec = P(lane_axes if len(lane_axes) > 1 else lane_axes[0])
-
         def lane_fn(dev, const_vec):
             return _lane_eval(plan.units, plan.n_vars, dcfg, self.store.radix,
                               plan.interface, self._n_data, dev, const_vec)
 
-        def step(stacked: StoreArrays, const_batch: jnp.ndarray):
-            # const_batch: [batch, n_consts]
-            def shard_fn(dev: StoreArrays, consts_local: jnp.ndarray):
-                dev = StoreArrays(*[a[0] for a in dev])  # drop shard axis
-                rows, valid, stats = jax.vmap(
-                    lambda cv: lane_fn(dev, cv))(consts_local)
-                return rows, valid, stats
-
-            out_lane_spec = const_spec
-            return _shard_map(
-                shard_fn, mesh,
-                (store_spec, const_spec),
-                (out_lane_spec, out_lane_spec,
-                 DistStats(*[out_lane_spec] * 6)),
-            )(stacked, const_batch)
-
-        return jax.jit(step), per_lane
+        step = make_batch_step(
+            lane_fn, out_proto=(0, 0, DistStats(*[0] * 6)), mesh=self.mesh,
+            data_axis=dcfg.data_axis, lane_axes=lane_axes)
+        return step, per_lane
 
     def run_batch(self, queries: list[BGP]):
-        plan, consts = self.plan_batch(queries)
-        step, _ = self._get_step(plan, consts.shape[0])
-        rows, valid, stats = step(self._stacked, jnp.asarray(consts))
-        return rows, valid, stats
+        """Evaluate a batch of queries, one lane each.
+
+        Plan-homogeneous batches run as a single step and return stacked
+        ``(rows, valid, stats)`` arrays (the paper's concurrent-client
+        configuration).  Mixed batches are bucketed by plan signature
+        internally — each bucket padded to a lane-slot multiple with
+        duplicate lanes and run as its own step — and return per-query
+        *lists* in input order (entries of different signatures have
+        different widths, so there is no single stacked array to return).
+        """
+        groups: dict[tuple, list[int]] = {}
+        plans = [plan_query(self.store, q, self.cfg) for q in queries]
+        for i, p in enumerate(plans):
+            groups.setdefault(p.signature, []).append(i)
+        if len(groups) == 1:
+            consts = np.stack([np.asarray(p.consts, np.int64) for p in plans])
+            step, _ = self._get_step(plans[0], consts.shape[0])
+            rows, valid, stats = step(self._stacked, jnp.asarray(consts))
+            return rows, valid, stats
+
+        out: dict[int, tuple] = {}
+        _, slots = self._lane_slots()
+        for idxs in groups.values():
+            plan = plans[idxs[0]]
+            consts = np.stack([np.asarray(plans[i].consts, np.int64)
+                               for i in idxs])
+            # pad the bucket to a lane-slot multiple with duplicate lanes
+            pad = -len(idxs) % slots
+            if pad:
+                consts = np.concatenate(
+                    [consts, np.repeat(consts[:1], pad, axis=0)])
+            step, _ = self._get_step(plan, consts.shape[0])
+            rows, valid, stats = step(self._stacked, jnp.asarray(consts))
+            for lane, i in enumerate(idxs):
+                out[i] = (rows[lane], valid[lane],
+                          jax.tree_util.tree_map(lambda a: a[lane], stats))
+        ordered = [out[i] for i in range(len(queries))]
+        return ([r for r, _, _ in ordered], [v for _, v, _ in ordered],
+                [s for _, _, s in ordered])
 
     def _get_step(self, plan: QueryPlan, batch: int):
         key = (plan.signature, batch)
@@ -289,8 +352,7 @@ class DistributedEngine:
             s_pos=jax.ShapeDtypeStruct((D, shard_len), jnp.int32, sharding=ds),
             o_pos=jax.ShapeDtypeStruct((D, shard_len), jnp.int32, sharding=ds),
         )
-        lane_axes = ((self.dcfg.pod_axis, self.dcfg.model_axis)
-                     if self.dcfg.pod_axis else (self.dcfg.model_axis,))
+        lane_axes, _ = self._lane_slots()
         const_spec = jax.ShapeDtypeStruct(
             (batch, n_consts), jnp.int64,
             sharding=NamedSharding(

@@ -1,0 +1,147 @@
+"""LRU star-fragment cache: seeded unit requests as reusable responses.
+
+brTPF's bindings-restricted requests were motivated in part by their
+cacheability, and SPF inherits the property at star granularity: a seeded
+unit evaluation is a pure function of
+
+    (canonical unit structure, constant values, Omega block, capacity)
+
+— exactly ``server.unit_request_key``.  This module caches the *response*
+of such a request in a replayable delta form, so a repeated star/bind
+request — same query from another simulated client, a shared star across
+different queries, a re-issued block — is served without touching the
+store at all.  The scheduler (``core/scheduler.py``) consults the cache
+between unit steps and folds the exact savings into ``QueryStats``
+(``cache_hits`` / ``cache_misses`` / ``nrs_saved`` / ``ntb_saved``).
+
+Replay correctness
+------------------
+An entry stores, for the ``n_out`` valid output rows of the unit: the
+source row index into the input's valid prefix (provenance, tracked by the
+scheduler through an extra table column), the values written into the
+unit's write columns, the true ops count and the overflow delta.  The
+valid region of a unit's output is a pure function of the valid region of
+its input (invalid-row garbage never influences a valid output row — see
+``bindings.expand``), so replaying a delta reproduces the computed valid
+rows byte-for-byte.  The replayed table's *invalid* region is refilled
+with the UNBOUND sentinel rather than the compute path's garbage; nothing
+downstream reads it.
+
+Entries are only recorded from lanes whose input overflow flag is clear,
+so ``entry.overflow`` is exactly the unit's own overflow contribution and
+ORs correctly into any seed.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import NamedTuple
+
+import numpy as np
+
+
+class FragmentEntry(NamedTuple):
+    """Replayable response of one seeded unit request."""
+
+    src_row: np.ndarray  # int32[n_out] index into the input valid prefix
+    written: np.ndarray  # int32[n_out, n_write] values for the write cols
+    overflow: bool  # the unit's own overflow contribution
+    ops: int  # server work units the evaluation cost
+
+    @property
+    def n_out(self) -> int:
+        return int(self.src_row.shape[0])
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.src_row.nbytes + self.written.nbytes)
+
+
+@dataclass
+class CacheStats:
+    hits: int = 0  # lookups served from a stored entry
+    shared_hits: int = 0  # requests collapsed onto an identical in-flight one
+    misses: int = 0
+    insertions: int = 0
+    evictions: int = 0
+    bytes_stored: int = 0
+
+    @property
+    def total_hits(self) -> int:
+        return self.hits + self.shared_hits
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.total_hits + self.misses
+        return self.total_hits / total if total else 0.0
+
+
+@dataclass
+class FragmentCache:
+    """LRU map from canonical unit requests to replayable fragment deltas.
+
+    ``capacity`` bounds the entry count; ``max_entry_rows`` skips caching
+    pathologically fat fragments (a single huge expansion would evict the
+    whole working set for one unlikely-to-repeat key).
+    """
+
+    capacity: int = 4096
+    max_entry_rows: int = 1 << 20
+    _entries: OrderedDict = field(default_factory=OrderedDict, repr=False)
+    stats: CacheStats = field(default_factory=CacheStats)
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def get(self, key: tuple) -> FragmentEntry | None:
+        entry = self._entries.get(key)
+        if entry is None:
+            self.stats.misses += 1
+            return None
+        self._entries.move_to_end(key)
+        self.stats.hits += 1
+        return entry
+
+    def note_shared_hit(self, n: int = 1) -> None:
+        """Account requests served by collapsing onto an identical in-flight
+        request (the concurrent analogue of a cache hit: the response is
+        computed once and fanned out, the server sees one request)."""
+        self.stats.shared_hits += n
+
+    def put(self, key: tuple, entry: FragmentEntry) -> None:
+        if entry.n_out > self.max_entry_rows or key in self._entries:
+            return
+        self._entries[key] = entry
+        self.stats.insertions += 1
+        self.stats.bytes_stored += entry.nbytes
+        while len(self._entries) > self.capacity:
+            _, old = self._entries.popitem(last=False)
+            self.stats.evictions += 1
+            self.stats.bytes_stored -= old.nbytes
+
+    def clear(self) -> None:
+        """Drop entries and counters (fresh measurement epoch)."""
+        self._entries.clear()
+        self.stats = CacheStats()
+
+
+def replay(entry: FragmentEntry, in_rows_valid: np.ndarray, cap: int,
+           n_vars: int, write_cols: tuple[int, ...]
+           ) -> tuple[np.ndarray, np.ndarray]:
+    """Materialise a cached fragment onto a seed's valid prefix.
+
+    ``in_rows_valid`` is the input table's valid prefix ``[n_in, n_vars]``;
+    returns the full-capacity ``(rows, valid)`` pair for the next unit step
+    (invalid region UNBOUND-filled — see module docstring).
+    """
+    rows = np.full((cap, n_vars), -1, dtype=np.int32)
+    n_out = entry.n_out
+    if n_out:
+        out = in_rows_valid[entry.src_row]
+        if write_cols:
+            out[:, list(write_cols)] = entry.written
+        rows[:n_out] = out
+    valid = np.zeros((cap,), dtype=bool)
+    valid[:n_out] = True
+    return rows, valid

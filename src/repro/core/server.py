@@ -37,6 +37,7 @@ from dataclasses import dataclass
 from typing import Callable, NamedTuple
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.bindings import (
     BindingTable,
@@ -147,6 +148,11 @@ class EvalCtx(NamedTuple):
     radix: int
     const_vec: jnp.ndarray
     logn: int  # ceil(log2 n): the cost model's binary-search factor
+    # distributed owner masking: (my_shard, n_shards) on a subject-hash
+    # sharded store, None on a single-host store.  When set, bound-subject
+    # probes dispatch through ``kops.eqrange_owned`` — non-owned rows get
+    # empty runs inside the probe instead of a separate mask pass.
+    owner: tuple[jnp.ndarray, int] | None = None
 
 
 # evaluator signature: (ctx, branch, table) -> (table, ops_delta)
@@ -167,11 +173,27 @@ def _active(table: BindingTable) -> jnp.ndarray:
 
 
 def _probe_run(ctx: EvalCtx, b: BranchPlan, table: BindingTable
-               ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Locate each row's ``(p, s)`` run in PSO order (bound-subject cases)."""
+               ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray | None]:
+    """Locate each row's ``(p, s)`` run in PSO order (bound-subject cases).
+
+    Returns ``(lo, hi, owned)``; ``owned`` is None on a single-host store
+    and the per-row ownership mask under distributed owner masking (where
+    non-owned rows already carry an empty run)."""
     s_vals = _term_values(table.rows, b.subj_src, ctx.const_vec)
     key = ctx.const_vec[b.pred_ci] * ctx.radix + s_vals
-    return kops.eqrange(ctx.dev.key_ps_pso, key)
+    if ctx.owner is None:
+        lo, hi = kops.eqrange(ctx.dev.key_ps_pso, key)
+        return lo, hi, None
+    my_shard, n_shards = ctx.owner
+    return kops.eqrange_owned(ctx.dev.key_ps_pso, key, s_vals,
+                              my_shard, n_shards)
+
+
+def _probe_active(table: BindingTable, owned: jnp.ndarray | None
+                  ) -> jnp.ndarray:
+    """Rows the local store actually probes (owner-masked when sharded)."""
+    valid = table.valid if owned is None else table.valid & owned
+    return jnp.sum(valid.astype(jnp.int64))
 
 
 def _expand_into(ctx: EvalCtx, b: BranchPlan, table: BindingTable,
@@ -195,9 +217,11 @@ def _expand_into(ctx: EvalCtx, b: BranchPlan, table: BindingTable,
 def probe_filter(ctx: EvalCtx, b: BranchPlan, table: BindingTable
                  ) -> tuple[BindingTable, jnp.ndarray]:
     """probe_oconst / probe_ovar_bound: subject and object both bound —
-    a pure bind-join membership filter over the (p, s) runs."""
-    active = _active(table)
-    lo, hi = _probe_run(ctx, b, table)
+    a pure bind-join membership filter over the (p, s) runs.  Under owner
+    masking non-owned rows carry empty runs, so membership is False for
+    them with no extra mask pass."""
+    lo, hi, owned = _probe_run(ctx, b, table)
+    active = _probe_active(table, owned)
     o_vals = _term_values(table.rows, b.obj_src, ctx.const_vec)
     found = kops.run_contains(ctx.dev.o_pso, lo, hi, o_vals)
     delta = active * (2 * ctx.logn) + active * ctx.logn
@@ -207,9 +231,10 @@ def probe_filter(ctx: EvalCtx, b: BranchPlan, table: BindingTable
 
 def probe_ovar_free(ctx: EvalCtx, b: BranchPlan, table: BindingTable
                     ) -> tuple[BindingTable, jnp.ndarray]:
-    """Subject bound, object free: expand objects within each (p, s) run."""
-    active = _active(table)
-    lo, hi = _probe_run(ctx, b, table)
+    """Subject bound, object free: expand objects within each (p, s) run.
+    Non-owned rows (empty runs) contribute zero expansion degree."""
+    lo, hi, owned = _probe_run(ctx, b, table)
+    active = _probe_active(table, owned)
     ex = expand(lo, hi, table.valid, table.cap)
     out, ex_ops = _expand_into(ctx, b, table, ex, None, ctx.dev.o_pso)
     return out, active * (2 * ctx.logn) + ex_ops
@@ -247,6 +272,85 @@ def scan_ovar_free(ctx: EvalCtx, b: BranchPlan, table: BindingTable
     return out, active * (2 * ctx.logn) + ex_ops
 
 
+# --------------------------------------------------------------------------
+# unit-level request canonicalization (host-side; the fragment-cache key)
+# --------------------------------------------------------------------------
+
+class UnitIO(NamedTuple):
+    """What one unit request reads and writes, in canonical form.
+
+    This is the brTPF/SPF request canonicalization: a seeded unit request
+    is fully determined by the unit's *structure* (case sequence with
+    variables renamed to read/write slots), the constants it mentions, and
+    the Omega block restricted to the variables the unit actually reads —
+    bindings-restricted semantics make everything else carried payload.
+    Two units from different queries that canonicalize identically are the
+    same server request, which is what makes star fragments cacheable
+    across queries and clients (``core/fragcache.py``).
+    """
+
+    canon_sig: tuple  # branch structure with vars renamed to r/w slots
+    read_cols: tuple[int, ...]  # table columns the unit reads (bound before)
+    write_cols: tuple[int, ...]  # table columns the unit binds
+    const_idx: tuple[int, ...]  # positions in const_vec the unit mentions
+
+
+def unit_io(plan: UnitPlan) -> UnitIO:
+    """Derive a unit's canonical I/O signature from its branch plan.
+
+    Variables are renamed to ``("r", i)`` / ``("w", i)`` slots in first-use
+    order; a variable bound *within* the unit (a scan'd subject, a free
+    object) is a write, and later mentions of it inside the same unit refer
+    to the write slot — only externally-bound variables become reads, i.e.
+    the relevant bindings of the Omega block.
+    """
+    reads: list[int] = []
+    writes: list[int] = []
+    consts: list[int] = []
+    written: set[int] = set()
+
+    def slot(var: int, is_write: bool) -> tuple[str, int]:
+        if is_write and var not in written:
+            written.add(var)
+            writes.append(var)
+        if var in written:
+            return ("w", writes.index(var))
+        if var not in reads:
+            reads.append(var)
+        return ("r", reads.index(var))
+
+    sig = []
+    for b in plan.branches:
+        consts.append(b.pred_ci)
+        s_kind, s_idx = b.subj_src
+        if s_kind == "const":
+            consts.append(s_idx)
+            s_tag: tuple = ("c",)
+        else:  # scan cases bind the subject; probe cases read it
+            s_tag = slot(s_idx, is_write=b.case.startswith("scan"))
+        o_kind, o_idx = b.obj_src
+        if o_kind == "const":
+            consts.append(o_idx)
+            o_tag: tuple = ("c",)
+        else:
+            o_tag = slot(o_idx, is_write=b.case.endswith("ovar_free"))
+        sig.append((b.case, s_tag, o_tag))
+    return UnitIO(tuple(sig), tuple(reads), tuple(writes), tuple(consts))
+
+
+def unit_request_key(io: UnitIO, const_vals: tuple[int, ...],
+                     omega_block: np.ndarray, cap: int) -> tuple:
+    """Canonical hashable key for one seeded unit request.
+
+    ``const_vals`` are the unit's constants in branch order;
+    ``omega_block`` the valid rows restricted to ``io.read_cols`` (int32,
+    C-contiguous).  ``cap`` is part of the key because overflow clamping
+    and the ops account depend on the table capacity.
+    """
+    block = np.ascontiguousarray(omega_block, dtype=np.int32)
+    return (io.canon_sig, const_vals, cap, block.shape[0], block.tobytes())
+
+
 BRANCH_EVALUATORS: dict[str, BranchEvaluator] = {
     "probe_oconst": probe_filter,
     "probe_ovar_bound": probe_filter,
@@ -258,16 +362,24 @@ BRANCH_EVALUATORS: dict[str, BranchEvaluator] = {
 
 
 def eval_unit(dev: StoreArrays, radix: int, plan: UnitPlan,
-              const_vec: jnp.ndarray, table: BindingTable
+              const_vec: jnp.ndarray, table: BindingTable,
+              owner: tuple[jnp.ndarray, int] | None = None
               ) -> tuple[BindingTable, jnp.ndarray]:
     """Evaluate one unit seeded with ``table``; returns (table, ops).
 
     ``ops`` counts probe/expansion work (device scalar) — the server/client
     load accounting uses it.  Log-factors of binary searches are folded in.
+
+    ``owner`` is the distributed runtime's ``(my_shard, n_shards)``: on a
+    subject-hash sharded store only bound-subject (probe-first) units are
+    owner-maskable — a scan-first unit expands subjects out of the local
+    shard, which owns them by construction.
     """
     n = dev.key_ps_pso.shape[0]
     logn = max(1, int(math.ceil(math.log2(max(n, 2)))))
-    ctx = EvalCtx(dev, radix, const_vec, logn)
+    if owner is not None and not plan.branches[0].case.startswith("probe"):
+        owner = None
+    ctx = EvalCtx(dev, radix, const_vec, logn, owner)
     ops_total = jnp.int64(0)
     for b in plan.branches:
         table, delta = BRANCH_EVALUATORS[b.case](ctx, b, table)

@@ -37,6 +37,13 @@ Join/probe primitives (the SPF server's hot path)
 - ``run_contains``        — membership-only view of ``run_probe``.
 - ``searchsorted_in_runs`` — rank-only view of ``run_probe``.
 - ``sorted_probe``        — rank-left + membership in one sorted array.
+- ``searchsorted``        — one-sided rank in one sorted array (the ragged
+                            expansion's cumulative-degree bookkeeping in
+                            ``core/bindings.py`` routes through this).
+- ``eqrange_owned``       — ``eqrange`` fused with subject-ownership
+                            masking (the distributed runtime's
+                            ``owner_masking``): non-owned rows get an
+                            empty run instead of a separate mask pass.
 """
 
 from __future__ import annotations
@@ -106,6 +113,50 @@ def eqrange(sorted_keys: jnp.ndarray, query_keys: jnp.ndarray
                                                   interpret=_interpret())
         return rank_lo, rank_hi
     return ref.eqrange_ref(sorted_keys, query_keys)
+
+
+def searchsorted(sorted_keys: jnp.ndarray, queries: jnp.ndarray,
+                 side: str = "left") -> jnp.ndarray:
+    """One-sided rank of ``queries`` in a sorted array (int32 positions).
+
+    This is the dispatch seam for every plain ``searchsorted`` above the
+    kernel layer — notably the cumulative-degree search inside
+    ``bindings.expand`` (ROADMAP open item).  The Pallas path reuses the
+    fused ``sorted_probe`` column stream; small batches stay on the scalar
+    jnp path under auto-dispatch (``MIN_PALLAS_QUERIES``), same policy as
+    ``eqrange``.
+    """
+    if side not in ("left", "right"):
+        raise ValueError(f"side must be 'left' or 'right', got {side!r}")
+    if _use_pallas() and (FORCE == "pallas"
+                          or queries.shape[0] >= MIN_PALLAS_QUERIES):
+        rank_lo, rank_hi, _ = sorted_probe_pallas(sorted_keys, queries,
+                                                  interpret=_interpret())
+        return rank_lo if side == "left" else rank_hi
+    return ref.rank_ref(sorted_keys, queries, side=side)
+
+
+def eqrange_owned(sorted_keys: jnp.ndarray, query_keys: jnp.ndarray,
+                  subjects: jnp.ndarray, my_shard: jnp.ndarray,
+                  n_shards: int
+                  ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """``eqrange`` with subject-ownership masking folded into the probe.
+
+    On a subject-hash-sharded store, a bound-subject row can only match on
+    the shard its subject hashes to.  Rows whose subject is not owned by
+    ``my_shard`` get an *empty* run ``[lo, lo)`` — downstream filters and
+    ragged expansions then skip them with no separate mask pass over the
+    binding table (this replaces the per-unit hash-and-mask the
+    distributed lane evaluator used to do outside the kernel layer).
+
+    Returns ``(lo, hi, owned)``; ``owned`` is exposed so cost accounting
+    can count only the rows the local shard actually probed.  The Pallas
+    path masks around the fused probe kernel; pushing the hash into the
+    kernel body itself is a hardware follow-up (see ROADMAP).
+    """
+    owned = ref.subject_shard_ref(subjects, n_shards) == my_shard
+    lo, hi = eqrange(sorted_keys, query_keys)
+    return lo, jnp.where(owned, hi, lo), owned
 
 
 def run_probe(values: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray,

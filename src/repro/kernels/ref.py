@@ -32,6 +32,33 @@ def eqrange_ref(sorted_keys: jnp.ndarray, query_keys: jnp.ndarray
     return lo.astype(jnp.int32), hi.astype(jnp.int32)
 
 
+def rank_ref(sorted_keys: jnp.ndarray, queries: jnp.ndarray,
+             side: str = "left") -> jnp.ndarray:
+    """One-sided rank (``searchsorted``) of ``queries`` in a sorted array.
+
+    ``method="sort"``: the default scan lowering triggers pathological XLA
+    constant folding when ``queries`` is a compile-time constant (e.g. the
+    arange of ``bindings.expand``'s ragged-expansion bookkeeping, this
+    oracle's main caller).
+    """
+    return jnp.searchsorted(sorted_keys, queries, side=side,
+                            method="sort").astype(jnp.int32)
+
+
+def subject_shard_ref(subjects: jnp.ndarray, n_shards: int) -> jnp.ndarray:
+    """Owning shard of each subject id: splitmix64 finaliser mod ``n_shards``.
+
+    Must match ``rdf.store._subject_hash`` — the host-side partitioner the
+    distributed store was built with.
+    """
+    x = subjects.astype(jnp.uint64)
+    x = (x ^ (x >> jnp.uint64(30))) * jnp.uint64(0xBF58476D1CE4E5B9)
+    x = (x ^ (x >> jnp.uint64(27))) * jnp.uint64(0x94D049BB133111EB)
+    x = x ^ (x >> jnp.uint64(31))
+    return ((x & jnp.uint64(0x7FFFFFFFFFFFFFFF)).astype(jnp.int64)
+            % n_shards).astype(jnp.int32)
+
+
 def searchsorted_in_runs_ref(values: jnp.ndarray, lo: jnp.ndarray,
                              hi: jnp.ndarray, targets: jnp.ndarray,
                              side: str = "left") -> jnp.ndarray:

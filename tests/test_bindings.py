@@ -80,6 +80,31 @@ def test_expand_overflow_clamps_to_cap():
     assert int(np.asarray(ex.valid).sum()) == 4  # output rows clamp to cap
 
 
+def test_expand_searchsorted_backend_parity():
+    """expand's cumulative-degree search routes through the kernel layer
+    (kops.searchsorted); both backends must produce byte-identical
+    expansions (ROADMAP follow-up from the dispatch-layer refactor)."""
+    from repro.kernels import ops as kops
+
+    rng = np.random.default_rng(7)
+    lo64 = rng.integers(0, 50, 40)
+    hi64 = lo64 + rng.integers(0, 6, 40)
+    valid_np = rng.random(40) > 0.3
+    lo = jnp.asarray(lo64)
+    hi = jnp.asarray(hi64)
+    valid = jnp.asarray(valid_np)
+    out = {}
+    old = kops.FORCE
+    try:
+        for force in ["ref", "pallas"]:
+            kops.FORCE = force
+            ex = expand(lo, hi, valid, cap=128)
+            out[force] = tuple(np.asarray(x).tobytes() for x in ex)
+    finally:
+        kops.FORCE = old
+    assert out["ref"] == out["pallas"]
+
+
 # --------------------------------------------------------------------------
 # property tests (hypothesis)
 # --------------------------------------------------------------------------

@@ -1,0 +1,173 @@
+"""Scheduler/serial equivalence + fragment-cache behaviour.
+
+The contract under test: the concurrent scheduler returns byte-identical
+valid result rows and identical gross QueryStats to looping
+``QueryEngine.run`` — across all four interfaces, all WatDiv loads, cache
+on and off, with no-op padding lanes in every wave and overflow-retried
+queries inside buckets — while additionally reporting exact cache savings.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    EngineConfig,
+    QueryEngine,
+    QueryScheduler,
+    SchedulerConfig,
+    interleave_clients,
+    results_as_numpy,
+)
+from repro.rdf import generate_query_load
+from repro.rdf.queries import QueryLoadConfig
+
+LOADS = ["1-star", "2-stars", "3-stars", "paths", "union"]
+INTERFACES = ["tpf", "brtpf", "spf", "endpoint"]
+
+
+@pytest.fixture(scope="module")
+def all_queries(watdiv_small):
+    g, store = watdiv_small
+    qs = []
+    for load in LOADS:
+        qs += generate_query_load(g, store, load,
+                                  QueryLoadConfig(n_queries=2))
+    return qs
+
+
+@pytest.fixture(scope="module")
+def serial_results(watdiv_small, all_queries):
+    _, store = watdiv_small
+    out = {}
+    for iface in INTERFACES:
+        eng = QueryEngine(store, EngineConfig(interface=iface, cap=2048))
+        out[iface] = [eng.run(q) for q in all_queries]
+    return out
+
+
+def _assert_equivalent(serial, tables, stats, ctx):
+    for i, (s_tbl, s_stats) in enumerate(serial):
+        a = results_as_numpy(s_tbl)
+        b = results_as_numpy(tables[i])
+        assert a.dtype == b.dtype and a.shape == b.shape, (ctx, i)
+        assert np.array_equal(a, b), (ctx, i)
+        # gross stats fields (nrs..overflow) must match the serial engine
+        assert tuple(int(x) for x in s_stats)[:6] \
+            == tuple(int(x) for x in stats[i])[:6], (ctx, i)
+
+
+@pytest.mark.parametrize("interface", INTERFACES)
+def test_scheduler_byte_identical_to_serial(watdiv_small, all_queries,
+                                            serial_results, interface):
+    """All loads through one scheduler, cache off and on: identical valid
+    rows and gross stats.  lanes=4 forces multi-wave buckets plus padding
+    lanes in the final (and any underfull) wave of each bucket."""
+    _, store = watdiv_small
+    cfg = EngineConfig(interface=interface, cap=2048)
+    for use_cache in (False, True):
+        sched = QueryScheduler(store, cfg,
+                               SchedulerConfig(lanes=4, use_cache=use_cache))
+        tables, stats = sched.run_queries(all_queries)
+        _assert_equivalent(serial_results[interface], tables, stats,
+                           (interface, use_cache))
+        if not use_cache:
+            assert sched.cache.stats.total_hits == 0
+            assert all(int(s.cache_hits) == 0 and int(s.nrs_saved) == 0
+                       for s in stats)
+
+
+def test_padding_lanes_are_noops(watdiv_small, serial_results, all_queries):
+    """Three copies of one query with collapsing off form a 3-job bucket,
+    which a power-of-two wave pads to 4 lanes; the padded no-op lane must
+    not contribute results or change the active lanes' bytes."""
+    _, store = watdiv_small
+    qs = [all_queries[0]] * 3
+    cfg = EngineConfig(interface="spf", cap=2048)
+    sched = QueryScheduler(store, cfg,
+                           SchedulerConfig(lanes=8, collapse_duplicates=False))
+    tables, stats = sched.run_queries(qs)
+    _assert_equivalent([serial_results["spf"][0]] * 3, tables, stats,
+                       "padding")
+    m = sched.metrics
+    assert m.jobs == 3  # collapsing disabled: one lane per request
+    assert m.lane_steps > m.active_lane_steps  # padding actually happened
+    assert m.pad_fraction > 0
+
+
+def test_overflow_retry_inside_bucket(watdiv_small):
+    """Queries that overflow the starting capacity are retried at 4x inside
+    the scheduler (re-bucketed at the larger cap) and still match the
+    serial engine's retry ladder byte-for-byte."""
+    g, store = watdiv_small
+    qs = generate_query_load(g, store, "2-stars", QueryLoadConfig(n_queries=3))
+    cfg = EngineConfig(interface="spf", cap=4)
+    eng = QueryEngine(store, cfg)
+    serial = [eng.run(q) for q in qs]
+    for use_cache in (False, True):
+        sched = QueryScheduler(store, cfg,
+                               SchedulerConfig(lanes=4, use_cache=use_cache))
+        tables, stats = sched.run_queries(qs)
+        _assert_equivalent(serial, tables, stats, ("overflow", use_cache))
+        assert sched.metrics.retries > 0
+
+
+def test_cross_client_requests_hit_the_cache(watdiv_small):
+    """N simulated clients issuing the same load: duplicates collapse onto
+    shared executions, the cache reports the hits, and the per-request
+    stats carry exact NRS/NTB savings while gross fields stay identical."""
+    g, store = watdiv_small
+    qs = generate_query_load(g, store, "2-stars", QueryLoadConfig(n_queries=2))
+    n_clients = 4
+    cfg = EngineConfig(interface="spf", cap=2048)
+    sched = QueryScheduler(store, cfg, SchedulerConfig(lanes=8))
+    served = sched.serve(interleave_clients(qs, n_clients))
+    assert len(served) == len(qs) * n_clients
+    eng = QueryEngine(store, cfg)
+    for i, (tbl, stats) in enumerate(served):
+        ref_tbl, ref_stats = eng.run(qs[i // n_clients])
+        assert np.array_equal(results_as_numpy(tbl),
+                              results_as_numpy(ref_tbl)), i
+        assert tuple(int(x) for x in stats)[:6] \
+            == tuple(int(x) for x in ref_stats)[:6], i
+    assert sched.cache.stats.hit_rate > 0
+    # every duplicate request is fully cache-served
+    dup_stats = [st for i, (_, st) in enumerate(served) if i % n_clients]
+    assert all(int(s.nrs_saved) == int(s.nrs) for s in dup_stats)
+    assert all(int(s.ntb_saved) == int(s.ntb) for s in dup_stats)
+    assert all(int(s.cache_misses) == 0 for s in dup_stats)
+    # primaries computed their units against the store
+    primaries = [st for i, (_, st) in enumerate(served) if i % n_clients == 0]
+    assert all(int(s.cache_misses) > 0 for s in primaries)
+
+
+def test_engine_run_load_delegates_to_scheduler(watdiv_small, all_queries,
+                                                serial_results):
+    """The public load path goes through the scheduler and stays equivalent
+    to looping ``run`` (with cache fields now populated)."""
+    _, store = watdiv_small
+    eng = QueryEngine(store, EngineConfig(interface="spf", cap=2048))
+    qs = all_queries[:4]
+    tables, stats = eng.run_load(qs)
+    _assert_equivalent(serial_results["spf"][:4], tables, stats, "run_load")
+
+
+def test_mixed_signature_distributed_batch(watdiv_small):
+    """run_batch no longer refuses plan-heterogeneous batches: it buckets
+    by signature internally (1x1 mesh keeps this in-process)."""
+    import jax
+
+    from repro.core.distributed import DistConfig, DistributedEngine
+
+    g, store = watdiv_small
+    qs = (generate_query_load(g, store, "2-stars", QueryLoadConfig(n_queries=2))
+          + generate_query_load(g, store, "paths", QueryLoadConfig(n_queries=1)))
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    eng = DistributedEngine(store, mesh, EngineConfig(interface="spf"),
+                            DistConfig(cap=2048, shard_cap=512))
+    rows, valid, stats = eng.run_batch(qs)
+    assert len(rows) == len(qs)
+    serial = QueryEngine(store, EngineConfig(interface="spf", cap=2048))
+    for i, q in enumerate(qs):
+        ref = results_as_numpy(serial.run(q)[0])
+        got = np.asarray(rows[i])[np.asarray(valid[i])]
+        assert set(map(tuple, got)) == set(map(tuple, ref)), i
