@@ -126,3 +126,66 @@ def sched_vs_serial(load: str, n_clients: int, interface: str = "spf",
         "byte_identical": bool(identical),
         "stats": [st for _, st in sched_out],
     }
+
+
+def sched_mesh_vs_vmap(load: str, n_clients: int, interface: str = "spf",
+                       lanes: int = 16):
+    """Serve one interleaved multi-client stream through both wave
+    lowerings: single-host vmap waves and mesh-spanning shard_map waves
+    (``fig_dist_sched``'s measurement).
+
+    Request collapsing is disabled on both paths so every client request
+    occupies a lane — that is the configuration under which wave width
+    reaches the mesh's lane-slot count and the per-wave mesh-vs-vmap pick
+    actually engages (with collapsing on, duplicate requests fold onto
+    one lane and buckets stay narrow).  Compile cost is paid by a warm
+    pass on each path; the fragment cache and metrics are reset before
+    the measured pass.  Returns a record with wall seconds for both
+    paths, the mesh-wave fraction, cache hit rate, occupancy and the
+    byte-identity flag between the two paths' results (the acceptance
+    invariant: mesh routing changes placement, never bytes).
+    """
+    import jax
+    import numpy as np
+
+    from repro.core import results_as_numpy
+    from repro.core.scheduler import SchedMetrics
+
+    qs = bench_load(load)
+    _, store = bench_graph()
+    stream = interleave_clients(list(qs), n_clients)
+    cfg = EngineConfig(interface=interface)
+    n_dev = len(jax.devices())
+    mesh = jax.make_mesh((n_dev,), ("model",))
+    lanes = max(lanes, n_dev)
+
+    out, wall, sched_of = {}, {}, {}
+    for name, m in (("vmap", None), ("mesh", mesh)):
+        sched = QueryScheduler(
+            store, cfg,
+            SchedulerConfig(lanes=lanes, collapse_duplicates=False), mesh=m)
+        sched.serve(stream)  # warm compile of this lowering's unit steps
+        sched.cache.clear()
+        sched.metrics = SchedMetrics()
+        t0 = time.perf_counter()
+        out[name] = sched.serve(stream)
+        wall[name] = time.perf_counter() - t0
+        sched_of[name] = sched
+
+    identical = all(
+        np.array_equal(results_as_numpy(a), results_as_numpy(b))
+        and tuple(int(x) for x in sa)[:6] == tuple(int(x) for x in sb)[:6]
+        for (a, sa), (b, sb) in zip(out["vmap"], out["mesh"]))
+    m = sched_of["mesh"].metrics
+    return {
+        "load": load, "interface": interface, "clients": n_clients,
+        "requests": len(stream), "n_devices": n_dev, "lanes": lanes,
+        "vmap_s": wall["vmap"], "mesh_s": wall["mesh"],
+        "mesh_vs_vmap": wall["vmap"] / wall["mesh"] if wall["mesh"]
+        else float("inf"),
+        "mesh_wave_fraction": m.mesh_steps / m.steps if m.steps else 0.0,
+        "hit_rate": sched_of["mesh"].cache.stats.hit_rate,
+        "occupancy": m.occupancy,
+        "byte_identical": bool(identical),
+        "stats": [st for _, st in out["mesh"]],
+    }

@@ -18,6 +18,9 @@ Figures covered:
                         fragment-cache hit rate and batch occupancy per
                         load at 16/64/128 simulated clients; also writes
                         the BENCH_sched.json artifact (CI uploads it)
+  fig_dist_sched        mesh-spanning scheduler waves vs single-host vmap
+                        waves on the same streams (run with 8 forced host
+                        devices in CI); writes BENCH_dist_sched.json
   kernels               sorted_probe / run_probe / flash_attention microbench
 """
 
@@ -38,7 +41,8 @@ from repro.core.patterns import star_decomposition  # noqa: E402
 
 from benchmarks.common import (CLIENTS, INTERFACES, LOADS,  # noqa: E402
                                SCHED_CLIENTS, bench_graph, bench_load,
-                               engine, load_run, sched_vs_serial, timed_run)
+                               engine, load_run, sched_mesh_vs_vmap,
+                               sched_vs_serial, timed_run)
 
 
 def emit(name: str, us_per_call: float, derived: str) -> None:
@@ -175,6 +179,54 @@ def fig_sched_throughput() -> None:
     print(f"# wrote {out} ({len(records)} records)", file=sys.stderr)
 
 
+# ------------------------------------------------- distributed scheduler
+
+def fig_dist_sched() -> None:
+    """Mesh-spanning scheduler waves vs single-host vmap waves on the same
+    interleaved multi-client streams.  Emits CSV rows and the
+    ``BENCH_dist_sched.json`` artifact with one record per
+    (load, clients); run under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (or on a real
+    pod) so waves actually span devices — on one device the mesh lowering
+    still runs and the record documents the shard_map overhead floor.
+
+    Environment knobs (the CI matrix job uses the defaults):
+      BENCH_DIST_LOADS    comma list, default "2-stars,union"
+      BENCH_DIST_CLIENTS  comma list, default "16,64"
+      BENCH_DIST_JSON     output path, default BENCH_dist_sched.json
+    """
+    import jax
+
+    loads = tuple(
+        s for s in os.environ.get("BENCH_DIST_LOADS", "2-stars,union").split(",")
+        if s)
+    clients = tuple(
+        int(c) for c in os.environ.get("BENCH_DIST_CLIENTS", "16,64").split(","))
+    records = []
+    for load in loads:
+        for c in clients:
+            r = sched_mesh_vs_vmap(load, c)
+            per_q = r.pop("stats")
+            mean_s = np.mean([modeled_query_seconds(s, c, occupancy=max(
+                r["occupancy"], 1.0)) for s in per_q])
+            r["modeled_queries_per_min"] = c * 60.0 / mean_s
+            records.append(r)
+            emit(f"fig_dist_sched/{load}/clients{c}",
+                 1e6 * r["mesh_s"] / max(r["requests"], 1),
+                 f"devices={r['n_devices']};vmap_s={r['vmap_s']:.3f};"
+                 f"mesh_s={r['mesh_s']:.3f};"
+                 f"mesh_wave_frac={r['mesh_wave_fraction']:.2f};"
+                 f"hit_rate={r['hit_rate']:.3f};"
+                 f"occupancy={r['occupancy']:.2f};"
+                 f"identical={int(r['byte_identical'])}")
+    out = os.environ.get("BENCH_DIST_JSON", "BENCH_dist_sched.json")
+    with open(out, "w") as f:
+        json.dump({"figure": "fig_dist_sched",
+                   "n_devices": len(jax.devices()), "records": records}, f,
+                  indent=2)
+    print(f"# wrote {out} ({len(records)} records)", file=sys.stderr)
+
+
 # ----------------------------------------------------------------- kernels
 
 def kernels() -> None:
@@ -232,7 +284,8 @@ def kernels() -> None:
 
 
 FIGS = [fig4_loadstats, fig5_throughput, fig5f_timeouts, fig6_server_load,
-        fig7_network, fig8_latency, fig_sched_throughput, kernels]
+        fig7_network, fig8_latency, fig_sched_throughput, fig_dist_sched,
+        kernels]
 
 
 def main() -> None:

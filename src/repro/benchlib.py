@@ -87,18 +87,25 @@ def load_throughput(store, queries, interface: str, n_clients: int,
 def scheduled_load_throughput(store, queries, interface: str, n_clients: int,
                               cm: CostModel = CostModel(),
                               cfg: EngineConfig | None = None,
-                              scheduler=None):
+                              scheduler=None, mesh=None):
     """Modeled queries/minute with the scheduler serving the load.
 
     Serves the full interleaved ``n_clients x queries`` arrival stream
     through a ``QueryScheduler`` and feeds the *measured* batch occupancy
     and per-request cache savings into the cost model.  Returns
-    ``(queries_per_min, hit_rate, occupancy)``.
+    ``(queries_per_min, hit_rate, occupancy)``.  Pass a device ``mesh``
+    to route wide waves across mesh lanes (``fig_dist_sched``'s serving
+    configuration); the counts the model consumes are byte-identical
+    either way, so the mesh shows up through measured occupancy only.
     """
     from repro.core.scheduler import QueryScheduler, interleave_clients
 
+    if scheduler is not None and mesh is not None:
+        raise ValueError("pass either a prebuilt scheduler or a mesh, not "
+                         "both: the mesh only shapes a scheduler this "
+                         "function constructs itself")
     cfg = cfg or EngineConfig(interface=interface)
-    sched = scheduler or QueryScheduler(store, cfg)
+    sched = scheduler or QueryScheduler(store, cfg, mesh=mesh)
     served = sched.serve(interleave_clients(list(queries), n_clients))
     occ = max(sched.metrics.occupancy, 1.0)
     total_s = sum(modeled_query_seconds(st, n_clients, cm, occupancy=occ)

@@ -6,9 +6,11 @@
 - :mod:`repro.core.engine`        — the four interfaces (TPF / brTPF / SPF / endpoint)
   with the paper's NRS / NTB / load accounting
 - :mod:`repro.core.scheduler`     — concurrent query scheduler: mixed loads as
-  signature-bucketed, cache-aware vmapped waves
-- :mod:`repro.core.fragcache`     — LRU star-fragment cache over canonicalized
-  seeded unit requests
+  signature-bucketed, cache-aware waves (vmapped on one host, shard_map across
+  mesh lanes when wide enough)
+- :mod:`repro.core.fragcache`     — pod-shared star-fragment cache over
+  canonicalized seeded unit requests (frequency-aware admission,
+  negative-result side table, store-epoch invalidation)
 - :mod:`repro.core.distributed`   — shard_map multi-device runtime (subject-hash
   sharded store; collectives are the "network")
 - :mod:`repro.core.oracle`        — brute-force ground truth (tests)

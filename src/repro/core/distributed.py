@@ -50,6 +50,7 @@ from repro.compat import shard_map as _shard_map
 
 from repro.core.bindings import BindingTable, compact, unit_table
 from repro.core.engine import EngineConfig, QueryPlan, plan_query
+from repro.core.fragcache import FragmentCache
 from repro.core.patterns import BGP
 from repro.core.server import eval_unit
 from repro.rdf.store import StoreArrays, TripleStore
@@ -81,10 +82,10 @@ class DistConfig:
 
 
 def make_batch_step(lane_fn, out_proto=None, *, mesh: Mesh | None = None,
-                    data_axis: str = "data",
+                    data_axis: str | None = "data",
                     lane_axes: tuple[str, ...] = ("model",)):
     """Lift a per-lane evaluator into one jitted batch step (the shared
-    step factory behind both engines).
+    step factory behind both engines and the scheduler's mesh waves).
 
     ``lane_fn(dev: StoreArrays, *lane_args) -> pytree`` evaluates a single
     query lane against one store replica/shard.  The returned step takes
@@ -92,17 +93,25 @@ def make_batch_step(lane_fn, out_proto=None, *, mesh: Mesh | None = None,
     every lane arg:
 
     - ``mesh=None`` — single host: ``jit(vmap(lane_fn))`` with the store
-      broadcast.  This is the scheduler's bucket step
+      broadcast.  This is the scheduler's narrow-wave step
       (``core/scheduler.py``): plan-homogeneity is the scheduler's internal
       bucketing detail, and batching is plain ``vmap``.
-    - ``mesh`` given — the distributed step: ``shard_map`` with the store
-      sharded along ``data_axis`` and lanes along ``lane_axes``, the same
-      ``vmap`` inside each shard.  ``out_proto`` must mirror the lane
-      output pytree structure (leaf values are ignored) so the factory can
-      derive ``shard_map`` out_specs.
+    - ``mesh`` given, ``data_axis`` set — the sharded-store distributed
+      step: ``shard_map`` with the store sharded along ``data_axis``
+      (leading shard axis on every array) and lanes along ``lane_axes``,
+      the same ``vmap`` inside each shard.
+    - ``mesh`` given, ``data_axis=None`` — the replicated-store mesh step:
+      the store (no shard axis) is broadcast to every device and only the
+      lane batch splits along ``lane_axes``.  Lane results are then
+      byte-identical to the ``mesh=None`` lowering — this is how the
+      scheduler routes wide waves across mesh lanes without giving up its
+      serial-parity contract (a subject-hash shard would reorder rows).
 
-    Either way the lane evaluator is written once and lowers under both —
-    the collective schedule (or its absence) is the only difference.
+    In the mesh cases ``out_proto`` must mirror the lane output pytree
+    structure (leaf values are ignored) so the factory can derive
+    ``shard_map`` out_specs.  Either way the lane evaluator is written
+    once and lowers under all three — the collective schedule (or its
+    absence) is the only difference.
     """
     if mesh is None:
         def step(dev: StoreArrays, *lane_args):
@@ -113,13 +122,15 @@ def make_batch_step(lane_fn, out_proto=None, *, mesh: Mesh | None = None,
 
     if out_proto is None:
         raise ValueError("mesh-mapped steps need out_proto for out_specs")
-    store_spec = StoreArrays(*[P(data_axis) for _ in range(6)])
+    store_spec = StoreArrays(*[P(data_axis) if data_axis else P()
+                               for _ in range(6)])
     lane_spec = P(lane_axes if len(lane_axes) > 1 else lane_axes[0])
     out_specs = jax.tree_util.tree_map(lambda _: lane_spec, out_proto)
 
     def step(stacked: StoreArrays, *lane_batches):
         def shard_fn(dev: StoreArrays, *lanes_local):
-            dev = StoreArrays(*[a[0] for a in dev])  # drop shard axis
+            if data_axis:
+                dev = StoreArrays(*[a[0] for a in dev])  # drop shard axis
             return jax.vmap(lambda *la: lane_fn(dev, *la))(*lanes_local)
 
         in_specs = (store_spec,) + (lane_spec,) * len(lane_batches)
@@ -222,13 +233,25 @@ class DistributedEngine:
             self.dcfg = replace(self.dcfg, pod_axis=None)
         self._n_data = mesh.shape[self.dcfg.data_axis]
         self._stacked_cache: StoreArrays | None = None
+        self._stacked_epoch = store.epoch
         self._cache: dict = {}
+        # the pod's shared star-fragment cache: every scheduler this engine
+        # spawns (run_load) consults the same epoch-tagged host-side cache,
+        # so a fragment computed for one wave serves every later lane on
+        # the pod until the store epoch moves past it
+        self.pod_cache = FragmentCache()
 
     @property
     def _stacked(self) -> StoreArrays:
-        """Sharded-store arrays, built lazily (dry-run never materialises)."""
-        if self._stacked_cache is None:
+        """Sharded-store arrays, built lazily (dry-run never materialises)
+        and versioned by the store epoch: a ``bump_epoch`` after a store
+        mutation forces a re-shard, so the engine can never keep serving
+        pre-mutation arrays (and then poison the pod cache under the new
+        epoch)."""
+        if self._stacked_cache is None \
+                or self._stacked_epoch != self.store.epoch:
             self._stacked_cache = self.store.stacked_shard_arrays(self._n_data)
+            self._stacked_epoch = self.store.epoch
         return self._stacked_cache
 
     # -------------------------------------------------------------- planning
@@ -328,6 +351,31 @@ class DistributedEngine:
         if key not in self._cache:
             self._cache[key] = self.make_step(plan, batch)
         return self._cache[key]
+
+    def run_load(self, queries: list[BGP], scheduler=None):
+        """Serve a query list through a mesh-routed concurrent scheduler.
+
+        The distributed counterpart of ``QueryEngine.run_load``: requests
+        are bucketed by plan signature and stepped unit-by-unit, but wide
+        waves span this engine's mesh lanes (every mesh axis becomes lane
+        slots, store replicated — ``make_batch_step(mesh=...,
+        data_axis=None)``) while narrow waves fall back to the single-host
+        vmap step.  All waves share ``self.pod_cache``, so fragments
+        computed anywhere on the pod serve every later request.  Results
+        and gross stats are byte-identical to the serial ``QueryEngine.run``
+        path — mesh routing changes the lowering, not the computation.
+
+        Pass a ``QueryScheduler`` to reuse its metrics across calls; it
+        must have been built with ``cache=engine.pod_cache`` to keep the
+        pod-shared contract.
+        """
+        from repro.core.scheduler import QueryScheduler
+
+        # QueryScheduler raises its wave-width cap to the mesh's slot
+        # count itself, so the default config spans any pod width
+        sched = scheduler or QueryScheduler(
+            self.store, self.cfg, cache=self.pod_cache, mesh=self.mesh)
+        return sched.run_queries(queries)
 
     # ---------------------------------------------------------------- dry-run
     def lower_step(self, plan: QueryPlan, batch: int,

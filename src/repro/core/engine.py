@@ -28,15 +28,28 @@ analogue) retries at 4x capacity up to ``max_cap``.
 A query *load* (``run_load``) does not loop over ``run``: it delegates to
 the concurrent scheduler (``core/scheduler.py``), which buckets requests
 by plan signature, pads buckets to fixed-width waves, and dispatches them
-unit-by-unit through the shared vmapped batch step
-(``distributed.make_batch_step``) with an LRU star-fragment cache
-(``core/fragcache.py``) between unit steps.  The two paths return
-byte-identical valid result rows and identical gross ``QueryStats``; the
-scheduler additionally fills the cache fields (``cache_hits``,
-``cache_misses``, ``nrs_saved``, ``ntb_saved``) that ``run`` leaves zero.
-The scheduler seam is what turns the per-query cost simulator into a
-load-serving system: repeated star/bind requests across queries and
-simulated clients are served from the cache instead of the store.
+unit-by-unit through the shared batch-step factory
+(``distributed.make_batch_step``) with the star-fragment cache
+(``core/fragcache.py`` — frequency-aware admission, negative-result side
+table, store-epoch invalidation) between unit steps.  The two paths
+return byte-identical valid result rows and identical gross
+``QueryStats``; the scheduler additionally fills the cache fields
+(``cache_hits``, ``cache_misses``, ``nrs_saved``, ``ntb_saved``) that
+``run`` leaves zero.  The scheduler seam is what turns the per-query cost
+simulator into a load-serving system: repeated star/bind requests across
+queries and simulated clients are served from the cache instead of the
+store.
+
+The *distributed* load path (``DistributedEngine.run_load``) is the same
+scheduler handed a device mesh and the engine's pod-shared cache: waves
+wide enough to cover the mesh's lane slots dispatch through the
+replicated-store ``shard_map`` instantiation of the same step factory
+(one wave lane per device), narrow waves fall back to vmap, and every
+lane consults the one ``pod_cache`` whose entries are tagged with the
+store epoch (``TripleStore.bump_epoch`` invalidates them on mutation).
+Mesh routing changes device placement only — all-integer evaluation makes
+the lowering choice invisible in the bytes, which is exactly what the
+mesh-parametrized scheduler tests and the property suite pin.
 """
 
 from __future__ import annotations

@@ -1,10 +1,11 @@
-"""LRU star-fragment cache: seeded unit requests as reusable responses.
+"""Pod-shared star-fragment cache: seeded unit requests as reusable responses.
 
 brTPF's bindings-restricted requests were motivated in part by their
 cacheability, and SPF inherits the property at star granularity: a seeded
 unit evaluation is a pure function of
 
-    (canonical unit structure, constant values, Omega block, capacity)
+    (canonical unit structure, constant values, Omega block, capacity,
+     store epoch)
 
 — exactly ``server.unit_request_key``.  This module caches the *response*
 of such a request in a replayable delta form, so a repeated star/bind
@@ -13,6 +14,43 @@ different queries, a re-issued block — is served without touching the
 store at all.  The scheduler (``core/scheduler.py``) consults the cache
 between unit steps and folds the exact savings into ``QueryStats``
 (``cache_hits`` / ``cache_misses`` / ``nrs_saved`` / ``ntb_saved``).
+
+Sharing and invalidation
+------------------------
+One ``FragmentCache`` is designed to be shared — across scheduler
+instances, across the lanes of a mesh-routed wave, and across every
+scheduler a ``DistributedEngine`` spawns (its ``pod_cache``): the cache is
+host-side state consulted between device steps, so "pod-shared" costs
+nothing beyond passing the same object around.  Correctness under sharing
+rests on epochs: every entry is tagged with the **store epoch** it was
+computed against (``TripleStore.epoch``), and a lookup presents the
+current epoch.  A store mutation bumps the epoch
+(``TripleStore.bump_epoch``), after which stale entries are invalidated
+*lazily* — dropped the moment a lookup touches them (counted in
+``stats.stale_evictions``) — with no full flush and no effect on entries
+recorded at the new epoch.  The epoch is also folded into the request key
+itself, so cross-epoch collisions cannot alias even if a caller skips the
+lookup-time check.
+
+Admission
+---------
+Size-capped LRU alone lets a one-shot scan (a long-tail load's unique
+fragments) wash the hot working set out of the cache.  The default
+``policy="freq"`` adds TinyLFU-style admission on top of LRU *eviction*:
+the cache keeps a compact frequency sketch of every key it has been asked
+for, and at capacity a new entry is admitted only if its observed request
+frequency is at least the LRU victim's — otherwise the insertion is
+rejected (``stats.admission_rejects``) and the resident entry survives.
+The sketch ages by periodic halving so stale popularity decays.
+``policy="lru"`` restores the PR 2 behaviour exactly.
+
+Empty fragments get a dedicated side table: a negative result is a
+zero-row delta, so caching it in the main map would spend a whole entry
+slot (and admission pressure) on ~0 bytes of payload.  ``put`` routes
+``n_out == 0`` entries into the negative table (own capacity, always
+admitted, LRU-bounded); hits there are real hits — counted in
+``stats.hits`` *and* ``stats.neg_hits`` — and replay to the empty table
+for free.
 
 Replay correctness
 ------------------
@@ -48,6 +86,7 @@ class FragmentEntry(NamedTuple):
     written: np.ndarray  # int32[n_out, n_write] values for the write cols
     overflow: bool  # the unit's own overflow contribution
     ops: int  # server work units the evaluation cost
+    epoch: int = 0  # store epoch the fragment was computed against
 
     @property
     def n_out(self) -> int:
@@ -58,13 +97,23 @@ class FragmentEntry(NamedTuple):
         return int(self.src_row.nbytes + self.written.nbytes)
 
 
+# shared zero-row arrays for negative-table reconstruction (replay only
+# reads shapes/values of the valid prefix, which is empty here)
+_EMPTY_SRC = np.zeros((0,), np.int32)
+_EMPTY_WRITTEN = np.zeros((0, 0), np.int32)
+
+
 @dataclass
 class CacheStats:
-    hits: int = 0  # lookups served from a stored entry
+    hits: int = 0  # lookups served from a stored entry (incl. negative)
+    neg_hits: int = 0  # the subset of hits served by the negative table
     shared_hits: int = 0  # requests collapsed onto an identical in-flight one
     misses: int = 0
     insertions: int = 0
+    neg_insertions: int = 0
     evictions: int = 0
+    stale_evictions: int = 0  # entries dropped because their epoch lapsed
+    admission_rejects: int = 0  # freq policy kept the victim, refused the new
     bytes_stored: int = 0
 
     @property
@@ -79,29 +128,128 @@ class CacheStats:
 
 @dataclass
 class FragmentCache:
-    """LRU map from canonical unit requests to replayable fragment deltas.
+    """Shared map from canonical unit requests to replayable fragment deltas.
 
-    ``capacity`` bounds the entry count; ``max_entry_rows`` skips caching
-    pathologically fat fragments (a single huge expansion would evict the
-    whole working set for one unlikely-to-repeat key).
+    ``capacity`` bounds the main entry count; ``max_entry_rows`` skips
+    caching pathologically fat fragments (a single huge expansion would
+    evict the whole working set for one unlikely-to-repeat key).
+    ``neg_capacity`` bounds the negative side table.  ``policy`` selects
+    admission: ``"freq"`` (TinyLFU-style, the default) or ``"lru"``
+    (admit always, PR 2 behaviour).
     """
 
     capacity: int = 4096
     max_entry_rows: int = 1 << 20
+    neg_capacity: int = 16384
+    policy: str = "freq"  # "freq" | "lru"
     _entries: OrderedDict = field(default_factory=OrderedDict, repr=False)
+    _neg: OrderedDict = field(default_factory=OrderedDict, repr=False)
+    _freq: dict = field(default_factory=dict, repr=False)
+    _swept_epoch: int = field(default=0, repr=False)
     stats: CacheStats = field(default_factory=CacheStats)
+
+    def __post_init__(self):
+        if self.policy not in ("freq", "lru"):
+            raise ValueError(f"unknown admission policy {self.policy!r}")
 
     def __len__(self) -> int:
         return len(self._entries)
 
-    def get(self, key: tuple) -> FragmentEntry | None:
+    @property
+    def n_negative(self) -> int:
+        return len(self._neg)
+
+    # ------------------------------------------------------- frequency sketch
+    def _touch(self, key: tuple) -> int:
+        """Record one request for ``key``; returns its updated frequency.
+
+        The sketch counts by ``hash(key)``, not the key itself: request
+        keys embed the Omega block's bytes (KBs at large caps), and a
+        long-tail scan of one-shot keys would otherwise park thousands of
+        fat tuples in the sketch — the very workload admission exists to
+        survive.  Hash collisions merely inflate an approximate count
+        (same trade a count-min sketch makes).  The sketch is bounded at
+        8x capacity; overflowing it halves every count and drops zeros
+        (TinyLFU aging), so popularity estimates decay instead of
+        accumulating forever.
+        """
+        h = hash(key)
+        f = self._freq.get(h, 0) + 1
+        self._freq[h] = f
+        if len(self._freq) > 8 * self.capacity:
+            self._freq = {k: v // 2 for k, v in self._freq.items() if v >= 2}
+        return f
+
+    # ---------------------------------------------------------------- lookups
+    def get(self, key: tuple, epoch: int = 0) -> FragmentEntry | None:
+        """Look up a canonical request at the current store ``epoch``.
+
+        An entry recorded under an older epoch is stale: it is dropped on
+        touch (lazy invalidation — no flush) and the lookup misses.
+        """
+        if self.policy == "freq":  # plain LRU never consults the sketch
+            self._touch(key)
         entry = self._entries.get(key)
-        if entry is None:
-            self.stats.misses += 1
-            return None
-        self._entries.move_to_end(key)
-        self.stats.hits += 1
-        return entry
+        if entry is not None:
+            if entry.epoch != epoch:
+                del self._entries[key]
+                self.stats.stale_evictions += 1
+                self.stats.bytes_stored -= entry.nbytes
+                self.stats.misses += 1
+                return None
+            self._entries.move_to_end(key)
+            self.stats.hits += 1
+            return entry
+        neg = self._neg.get(key)
+        if neg is not None:
+            neg_overflow, neg_ops, neg_epoch = neg
+            if neg_epoch != epoch:
+                del self._neg[key]
+                self.stats.stale_evictions += 1
+                self.stats.misses += 1
+                return None
+            self._neg.move_to_end(key)
+            self.stats.hits += 1
+            self.stats.neg_hits += 1
+            return FragmentEntry(_EMPTY_SRC, _EMPTY_WRITTEN, neg_overflow,
+                                 neg_ops, neg_epoch)
+        self.stats.misses += 1
+        return None
+
+    def sync_epoch(self, epoch: int) -> int:
+        """Observe the store epoch; sweep stale entries on first sight of
+        a new one.  Returns the number of entries dropped.
+
+        The sweep state lives on the cache, not its callers, because the
+        pod-shared cache outlives any one scheduler: a scheduler created
+        *after* a bump must still trigger the reclamation of fragments
+        recorded before it existed.  Every drain calls this; it is a
+        no-op while the epoch is unchanged.
+        """
+        if epoch == self._swept_epoch:
+            return 0
+        self._swept_epoch = epoch
+        return self.invalidate_stale(epoch)
+
+    def invalidate_stale(self, epoch: int) -> int:
+        """Drop every entry not tagged with ``epoch``; returns the count.
+
+        The eager half of epoch invalidation (``sync_epoch`` calls this on
+        the first drain after a store-epoch change), reclaiming stale
+        fragments' memory at once.  Entries recorded at the current epoch,
+        the stats counters and the frequency sketch all survive — this is
+        not a flush.  (The lookup-time epoch check in ``get`` remains as
+        the lazy backstop for sharers that have not swept yet.)
+        """
+        stale = [k for k, e in self._entries.items() if e.epoch != epoch]
+        for k in stale:
+            self.stats.bytes_stored -= self._entries.pop(k).nbytes
+        stale_neg = [k for k, (_, _, ep) in self._neg.items() if ep != epoch]
+        for k in stale_neg:
+            del self._neg[k]
+        n = len(stale) + len(stale_neg)
+        self.stats.stale_evictions += n
+        return n
 
     def note_shared_hit(self, n: int = 1) -> None:
         """Account requests served by collapsing onto an identical in-flight
@@ -109,9 +257,32 @@ class FragmentCache:
         computed once and fanned out, the server sees one request)."""
         self.stats.shared_hits += n
 
-    def put(self, key: tuple, entry: FragmentEntry) -> None:
+    # -------------------------------------------------------------- insertion
+    def put(self, key: tuple, entry: FragmentEntry, epoch: int = 0) -> None:
+        if entry.epoch != epoch:
+            entry = entry._replace(epoch=epoch)
+        if entry.n_out == 0:
+            # negative result: zero-row delta, cached in the side table so
+            # it never competes with real fragments for capacity
+            if key in self._neg:
+                return
+            self._neg[key] = (entry.overflow, entry.ops, epoch)
+            self.stats.neg_insertions += 1
+            while len(self._neg) > self.neg_capacity:
+                self._neg.popitem(last=False)
+                self.stats.evictions += 1
+            return
         if entry.n_out > self.max_entry_rows or key in self._entries:
             return
+        if self.policy == "freq" and len(self._entries) >= self.capacity:
+            # TinyLFU admission: the newcomer must be at least as popular
+            # as the LRU victim it would displace, else keep the resident
+            victim_key = next(iter(self._entries))
+            new_f = self._freq.get(hash(key), 1)
+            victim_f = self._freq.get(hash(victim_key), 0)
+            if new_f < victim_f:
+                self.stats.admission_rejects += 1
+                return
         self._entries[key] = entry
         self.stats.insertions += 1
         self.stats.bytes_stored += entry.nbytes
@@ -121,8 +292,10 @@ class FragmentCache:
             self.stats.bytes_stored -= old.nbytes
 
     def clear(self) -> None:
-        """Drop entries and counters (fresh measurement epoch)."""
+        """Drop entries, sketch and counters (fresh measurement epoch)."""
         self._entries.clear()
+        self._neg.clear()
+        self._freq.clear()
         self.stats = CacheStats()
 
 

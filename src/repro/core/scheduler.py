@@ -16,18 +16,30 @@ clients and turns it into device-efficient work:
    padded with no-op lanes (empty seed table, zero constants), so the
    compiled step set stays small (one per width) without 16-wide padding
    of a single huge-capacity retry.
-3. **Dispatch** — a wave executes unit-by-unit through the shared vmapped
-   batch step (``distributed.make_batch_step`` with ``mesh=None``; the
-   distributed engine instantiates the same factory with its mesh).  Unit
-   steps are jit-cached by unit structure, so buckets with different query
-   signatures still share compilations of their common stars.
+3. **Dispatch** — a wave executes unit-by-unit through the shared batch
+   step factory (``distributed.make_batch_step``), and the factory is
+   instantiated *per wave*: a scheduler built with a device ``mesh``
+   routes waves wide enough to span the mesh's lane slots through the
+   replicated-store ``shard_map`` step (``mesh=..., data_axis=None`` —
+   one wave lane per device), while narrow waves (and every wave of a
+   mesh-less scheduler) take the single-host ``jit(vmap(...))`` step.
+   Both lowerings run the same per-lane evaluator on the full store, so
+   the choice is pure scheduling — results stay byte-identical either
+   way.  Unit steps are jit-cached by unit structure (and mesh), so
+   buckets with different query signatures still share compilations of
+   their common stars.
 4. **Cache** — between unit steps the scheduler canonicalizes every lane's
-   seeded request (``server.unit_request_key``) and consults the LRU
-   star-fragment cache (``core/fragcache.py``).  A wave whose active lanes
-   all hit skips the device step entirely and replays host-side; misses
-   are recorded as replayable deltas.  Exact per-query savings land in
-   ``QueryStats`` (``cache_hits``/``cache_misses``/``nrs_saved``/
-   ``ntb_saved``).
+   seeded request (``server.unit_request_key``, tagged with the store
+   epoch) and consults the pod-shared star-fragment cache
+   (``core/fragcache.py``): frequency-aware admission over LRU eviction,
+   with empty fragments in a negative side table.  A wave whose active
+   lanes all hit skips the device step entirely and replays host-side;
+   misses are recorded as replayable deltas.  Exact per-query savings
+   land in ``QueryStats`` (``cache_hits``/``cache_misses``/
+   ``nrs_saved``/``ntb_saved``).  One cache instance may be shared by
+   any number of schedulers (``DistributedEngine.pod_cache``); a store
+   mutation bumps ``TripleStore.epoch`` and stale fragments invalidate
+   lazily.
 
 Provenance: unit steps carry an extra int32 table column seeded with the
 row index, so the scheduler can read each output row's source row off the
@@ -46,11 +58,12 @@ from __future__ import annotations
 
 import math
 from collections import OrderedDict
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import Callable, Iterable, NamedTuple
 
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh
 
 from repro.core.bindings import BindingTable
 from repro.core.distributed import make_batch_step
@@ -101,6 +114,7 @@ class SchedMetrics:
     jobs: int = 0  # distinct executions after collapsing
     waves: int = 0
     steps: int = 0  # device unit-steps dispatched
+    mesh_steps: int = 0  # the subset routed through the mesh shard_map step
     steps_skipped: int = 0  # unit-steps fully served by the cache
     lane_steps: int = 0  # lanes x dispatched steps (incl. padding)
     active_lane_steps: int = 0  # non-padding lanes among those
@@ -134,18 +148,25 @@ def interleave_clients(queries: list[BGP], n_clients: int
 _STEP_CACHE: dict[tuple, Callable] = {}
 
 
-def _unit_step(up: UnitPlan, radix: int):
-    """Jitted vmapped one-unit step, cached by the unit's trace statics.
+def _unit_step(up: UnitPlan, radix: int, mesh: Mesh | None = None,
+               lane_axes: tuple[str, ...] = ()):
+    """Jitted one-unit step, cached by the unit's trace statics.
 
     The key holds everything ``eval_unit`` bakes into the trace (branch
     cases, const-vector indices, var columns) plus the dispatch-layer
-    FORCE setting read at trace time; array shapes (cap, n_vars, lanes)
-    retrace within one cached step naturally.  ``est_card`` is planning
-    metadata and deliberately excluded — same-shaped units from different
-    queries share one compilation.
+    FORCE setting read at trace time and the mesh the step lowers onto
+    (``None`` for the single-host vmap step); array shapes (cap, n_vars,
+    lanes) retrace within one cached step naturally.  ``est_card`` is
+    planning metadata and deliberately excluded — same-shaped units from
+    different queries share one compilation.
+
+    The mesh instantiation replicates the store (``data_axis=None``) and
+    splits the wave's lanes across ``lane_axes``, so a lane computes the
+    same integer arithmetic it would under vmap — byte-identical outputs,
+    different device placement.
     """
     key = (tuple((b.case, b.pred_ci, b.subj_src, b.obj_src)
-                 for b in up.branches), radix, kops.FORCE)
+                 for b in up.branches), radix, kops.FORCE, mesh, lane_axes)
     step = _STEP_CACHE.get(key)
     if step is None:
         def lane_fn(dev, const_vec, rows, valid, overflow):
@@ -157,7 +178,12 @@ def _unit_step(up: UnitPlan, radix: int):
             return (table.rows[:, :-1], table.valid, table.overflow,
                     table.rows[:, -1], ops)
 
-        step = make_batch_step(lane_fn)
+        if mesh is None:
+            step = make_batch_step(lane_fn)
+        else:
+            step = make_batch_step(lane_fn, out_proto=(0, 0, 0, 0, 0),
+                                   mesh=mesh, data_axis=None,
+                                   lane_axes=lane_axes)
         _STEP_CACHE[key] = step
     return step
 
@@ -227,17 +253,40 @@ class QueryScheduler:
     ``run_queries`` is the drop-in for ``QueryEngine.run_load``; ``submit``
     + ``drain`` expose the request-stream form for simulated-client loads.
     One scheduler owns one store + engine config; the fragment cache can be
-    shared across schedulers by passing it in.
+    shared across schedulers by passing it in (the pod-shared cache —
+    ``DistributedEngine.pod_cache`` does exactly this).
+
+    ``mesh`` opts waves into distributed dispatch: every mesh axis becomes
+    lane slots (store replicated per device), and ``_run_wave`` picks the
+    mesh ``shard_map`` step whenever the wave's power-of-two width covers
+    the slot count, falling back to the single-host vmap step for narrow
+    waves.  A 1-device mesh is valid and routes everything through the
+    shard_map lowering (how the tier-1 suite exercises the path on one
+    CPU device).
     """
 
     def __init__(self, store: TripleStore, cfg: EngineConfig,
                  scfg: SchedulerConfig | None = None,
-                 cache: FragmentCache | None = None):
+                 cache: FragmentCache | None = None,
+                 mesh: Mesh | None = None):
         self.store = store
         self.cfg = cfg
         self.scfg = scfg or SchedulerConfig()
         self.cache = cache if cache is not None else \
             FragmentCache(capacity=self.scfg.cache_entries)
+        self.mesh = mesh
+        if mesh is not None:
+            self._lane_axes = tuple(mesh.axis_names)
+            self._mesh_slots = math.prod(mesh.shape[a]
+                                         for a in self._lane_axes)
+            if self.scfg.lanes < self._mesh_slots:
+                # the wave-width cap must reach the slot count or wide
+                # waves could never span the mesh (mesh routing would be
+                # silently dead on pods wider than the default cap)
+                self.scfg = replace(self.scfg, lanes=self._mesh_slots)
+        else:
+            self._lane_axes = ()
+            self._mesh_slots = 0
         self.metrics = SchedMetrics()
         self._plan_memo: dict[BGP, QueryPlan] = {}
         self._cap_hints: dict[tuple, int] = {}
@@ -283,6 +332,13 @@ class QueryScheduler:
         requests, self._pending = self._pending, []
         results: dict[int, tuple[BindingTable, QueryStats]] = {}
 
+        # store mutated since the cache last swept: drop stale fragments
+        # now (keys are epoch-tagged, so they could never alias — this
+        # just reclaims their memory eagerly instead of waiting on LRU
+        # churn; the sweep state lives on the pod-shared cache so fresh
+        # schedulers still trigger it)
+        self.cache.sync_epoch(self.store.epoch)
+
         # bucket by (signature, cap); collapse identical in-flight queries
         buckets: OrderedDict[tuple, list[_Job]] = OrderedDict()
         job_of: dict[tuple, _Job] = {}
@@ -316,15 +372,30 @@ class QueryScheduler:
                   ) -> list[_Job]:
         """Run one padded wave of same-signature, same-cap jobs through the
         per-unit stepped batch path.  Completed jobs land in ``results``;
-        overflowed ones come back as 4x-cap retry jobs."""
+        overflowed ones come back as 4x-cap retry jobs.
+
+        Wide waves span the mesh: with a mesh attached and the wave width
+        covering the lane-slot count, unit steps dispatch through the
+        replicated-store shard_map step (one lane per device); otherwise
+        the single-host vmap step runs.  The pick is per wave, so one
+        bucket can mix both (e.g. a wide first pass and a 1-job overflow
+        retry)."""
         scfg = self.scfg
         plan, cap = jobs[0].plan, jobs[0].cap
         n_active = len(jobs)
         B = 1  # smallest power-of-two width that fits, capped at scfg.lanes
         while B < min(n_active, scfg.lanes):
             B *= 2
+        use_mesh = self.mesh is not None and B >= self._mesh_slots
+        if use_mesh and B % self._mesh_slots:
+            # non-power-of-two slot counts (e.g. a 6-device pod) would
+            # otherwise never divide a power-of-two width and mesh routing
+            # would silently die: round the wave up to the next slot
+            # multiple instead (the extra lanes are no-op padding)
+            B = -(-B // self._mesh_slots) * self._mesh_slots
         V = max(plan.n_vars, 1)
         active = range(n_active)
+        epoch = self.store.epoch
 
         consts = np.zeros((B, max(len(plan.consts), 1)), np.int64)
         for j, job in enumerate(jobs):
@@ -351,13 +422,13 @@ class QueryScheduler:
                 for j in active:
                     cvals = tuple(int(consts[j, i]) for i in io.const_idx)
                     block = rows[j, :n_in[j]][:, list(io.read_cols)]
-                    key = unit_request_key(io, cvals, block, cap)
+                    key = unit_request_key(io, cvals, block, cap, epoch)
                     keys[j] = key
                     if key in first_of:
                         status[j] = ("shared", first_of[key])
                         self.cache.note_shared_hit()
                         continue
-                    entry = self.cache.get(key)
+                    entry = self.cache.get(key, epoch)
                     if entry is None:
                         first_of[key] = j
                         status[j] = ("miss", None)
@@ -369,7 +440,12 @@ class QueryScheduler:
             need_step = any(s == "miss" for s, _ in status.values())
             ops_lane: dict[int, int] = {}
             if need_step:
-                step = _unit_step(up, self.store.radix)
+                if use_mesh:
+                    step = _unit_step(up, self.store.radix, self.mesh,
+                                      self._lane_axes)
+                    self.metrics.mesh_steps += 1
+                else:
+                    step = _unit_step(up, self.store.radix)
                 r_o, v_o, o_o, src_o, ops_o = step(
                     dev, consts_dev, jnp.asarray(rows), jnp.asarray(valid),
                     jnp.asarray(ovf))
@@ -395,8 +471,9 @@ class QueryScheduler:
                                 r_o[j, :n_out][:, list(io.write_cols)]),
                             overflow=bool(o_o[j]),
                             ops=int(ops_o[j]),
+                            epoch=epoch,
                         )
-                        self.cache.put(keys[j], entry)
+                        self.cache.put(keys[j], entry, epoch)
                 rows, valid, ovf = r_o, v_o, o_o
             else:
                 # every active lane hit: replay host-side, skip the device

@@ -339,16 +339,23 @@ def unit_io(plan: UnitPlan) -> UnitIO:
 
 
 def unit_request_key(io: UnitIO, const_vals: tuple[int, ...],
-                     omega_block: np.ndarray, cap: int) -> tuple:
+                     omega_block: np.ndarray, cap: int,
+                     epoch: int = 0) -> tuple:
     """Canonical hashable key for one seeded unit request.
 
     ``const_vals`` are the unit's constants in branch order;
     ``omega_block`` the valid rows restricted to ``io.read_cols`` (int32,
     C-contiguous).  ``cap`` is part of the key because overflow clamping
-    and the ops account depend on the table capacity.
+    and the ops account depend on the table capacity.  ``epoch`` is the
+    store epoch (``TripleStore.epoch``) the request is evaluated against:
+    folding it into the key guarantees responses computed before a store
+    mutation can never alias requests issued after it, even through a
+    pod-shared cache (``core/fragcache.py`` additionally drops stale
+    entries lazily on lookup).
     """
     block = np.ascontiguousarray(omega_block, dtype=np.int32)
-    return (io.canon_sig, const_vals, cap, block.shape[0], block.tobytes())
+    return (io.canon_sig, const_vals, cap, epoch, block.shape[0],
+            block.tobytes())
 
 
 BRANCH_EVALUATORS: dict[str, BranchEvaluator] = {

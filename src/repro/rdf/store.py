@@ -66,6 +66,12 @@ class TripleStore:
     h_s_pos: np.ndarray
     h_o_pos: np.ndarray
     h_pred_offsets: np.ndarray  # int64[n_predicates + 2] CSR (PSO==POS runs)
+    # mutation epoch: bumped by ``bump_epoch`` whenever the triple set
+    # changes, so epoch-tagged fragment-cache entries computed against the
+    # old contents invalidate lazily (core/fragcache.py) instead of being
+    # served stale.  The store is immutable today; this is the seam any
+    # future write path must go through.
+    epoch: int = 0
     # device copies (built lazily)
     _device: StoreArrays | None = field(default=None, repr=False)
 
@@ -134,6 +140,18 @@ class TripleStore:
     @property
     def radix(self) -> int:
         return self.n_terms
+
+    def bump_epoch(self) -> int:
+        """Advance the mutation epoch (call after any triple-set change).
+
+        Invalidates every epoch-tagged fragment cached against the old
+        contents — lazily, on next lookup — and drops the cached device
+        view so a mutated index would be re-uploaded.  Returns the new
+        epoch.
+        """
+        self.epoch += 1
+        self._device = None
+        return self.epoch
 
     # ------------------------------------------------- host planning helpers
     def pred_run(self, p: int) -> tuple[int, int]:

@@ -142,6 +142,154 @@ def test_partially_warm_cache_replays_after_device_step():
     assert np.array_equal(results_as_numpy(tables2[0]), ref)
 
 
+# --------------------------------------------------------------------------
+# admission policy, negative-result caching, epoch invalidation
+# --------------------------------------------------------------------------
+
+def test_freq_admission_keeps_hot_fragments():
+    """Under eviction pressure a one-shot scan must not displace entries
+    that are actually being hit: TinyLFU admission compares the
+    newcomer's request frequency against the LRU victim's."""
+    cache = FragmentCache(capacity=2)  # default policy="freq"
+    cache.put(("hot-a",), _entry())
+    cache.put(("hot-b",), _entry())
+    for _ in range(5):
+        assert cache.get(("hot-a",)) is not None
+        assert cache.get(("hot-b",)) is not None
+    for i in range(20):  # cold scan: 20 unique never-repeated keys
+        cache.put((f"cold-{i}",), _entry())
+    assert cache.get(("hot-a",)) is not None
+    assert cache.get(("hot-b",)) is not None
+    assert cache.stats.admission_rejects == 20
+    assert cache.stats.evictions == 0
+    # plain LRU admits everything: same scan evicts the hot set
+    lru = FragmentCache(capacity=2, policy="lru")
+    lru.put(("hot-a",), _entry())
+    for _ in range(5):
+        lru.get(("hot-a",))
+    for i in range(3):
+        lru.put((f"cold-{i}",), _entry())
+    assert lru.get(("hot-a",)) is None
+
+
+def test_freq_sketch_ages_by_halving():
+    """The frequency sketch is bounded: overflowing it halves every count
+    (stale popularity decays instead of pinning the cache forever)."""
+    cache = FragmentCache(capacity=1)
+    for _ in range(8):
+        cache.get(("old-hot",))
+    for i in range(8 * cache.capacity + 4):
+        cache.get((f"filler-{i}",))
+    assert cache._freq.get(hash(("old-hot",)), 0) < 8
+    assert len(cache._freq) <= 8 * cache.capacity + 1
+
+
+def test_negative_results_cached_in_side_table():
+    """Empty fragments land in the negative table: always admitted, no
+    main-capacity pressure, and a lookup is a real (counted) hit that
+    replays to the empty table."""
+    cache = FragmentCache(capacity=1)
+    empty = FragmentEntry(src_row=np.zeros((0,), np.int32),
+                          written=np.zeros((0, 2), np.int32),
+                          overflow=False, ops=7)
+    cache.put(("full",), _entry())
+    cache.put(("neg-1",), empty)
+    cache.put(("neg-2",), empty)
+    assert len(cache) == 1 and cache.n_negative == 2  # no main eviction
+    got = cache.get(("neg-1",))
+    assert got is not None and got.n_out == 0 and got.ops == 7
+    assert cache.stats.neg_hits == 1 and cache.stats.hits == 1
+    rows, valid = replay(got, np.zeros((3, 2), np.int32), cap=4, n_vars=2,
+                         write_cols=(1,))
+    assert valid.sum() == 0 and (rows == -1).all()
+    # the side table is LRU-bounded by neg_capacity
+    small = FragmentCache(capacity=4, neg_capacity=2)
+    for i in range(3):
+        small.put((f"n{i}",), empty)
+    assert small.n_negative == 2 and small.get(("n0",)) is None
+
+
+def test_epoch_bump_invalidates_exactly_stale_entries():
+    """Entries are epoch-tagged; a store-epoch bump invalidates the stale
+    ones (lazily on lookup, eagerly via invalidate_stale) while entries
+    recorded at the new epoch are untouched."""
+    cache = FragmentCache(capacity=8)
+    empty = FragmentEntry(src_row=np.zeros((0,), np.int32),
+                          written=np.zeros((0, 1), np.int32),
+                          overflow=False, ops=0)
+    cache.put(("old",), _entry(), epoch=0)
+    cache.put(("old-neg",), empty, epoch=0)
+    cache.put(("new",), _entry(), epoch=1)
+    # lazy: touching a stale entry at the new epoch drops it as a miss
+    assert cache.get(("old",), epoch=1) is None
+    assert cache.stats.stale_evictions == 1
+    assert cache.get(("new",), epoch=1) is not None
+    # eager: the sweep drops exactly the remaining stale entries
+    dropped = cache.invalidate_stale(epoch=1)
+    assert dropped == 1  # just ("old-neg",); ("new",) survives
+    assert cache.stats.stale_evictions == 2
+    assert cache.get(("new",), epoch=1) is not None
+    assert cache.get(("old-neg",), epoch=1) is None
+    assert cache.stats.bytes_stored == cache.get(("new",), epoch=1).nbytes
+
+
+def test_store_epoch_bump_invalidates_through_scheduler():
+    """End to end: a warm scheduler whose store bumps its epoch re-misses
+    every fragment (stale swept), recomputes identical results, and is
+    warm again at the new epoch."""
+    store = _tiny_store()
+    cfg = EngineConfig(interface="spf", cap=64)
+    q = BGP((TriplePattern(V(0), C(0), V(1)),
+             TriplePattern(V(0), C(1), C(4))), n_vars=2)
+    sched = QueryScheduler(store, cfg)
+    t1, _ = sched.run_queries([q])
+    _, warm = sched.run_queries([q])
+    assert int(warm[0].cache_hits) > 0 and int(warm[0].cache_misses) == 0
+    store.bump_epoch()
+    t3, cold = sched.run_queries([q])
+    assert int(cold[0].cache_misses) > 0 and int(cold[0].cache_hits) == 0
+    assert sched.cache.stats.stale_evictions > 0
+    assert np.array_equal(results_as_numpy(t1[0]), results_as_numpy(t3[0]))
+    _, rewarm = sched.run_queries([q])
+    assert int(rewarm[0].cache_hits) > 0
+
+
+def test_fresh_scheduler_on_shared_cache_sweeps_after_bump():
+    """The sweep state lives on the pod-shared cache, not the scheduler:
+    a scheduler created *after* the bump must still reclaim fragments an
+    earlier scheduler recorded (regression: per-scheduler epoch tracking
+    initialised at construction never saw the transition)."""
+    store = _tiny_store()
+    cfg = EngineConfig(interface="spf", cap=64)
+    q = BGP((TriplePattern(V(0), C(0), V(1)),
+             TriplePattern(V(0), C(1), C(4))), n_vars=2)
+    first = QueryScheduler(store, cfg)
+    first.run_queries([q])
+    assert len(first.cache) + first.cache.n_negative > 0
+    store.bump_epoch()
+    fresh = QueryScheduler(store, cfg, cache=first.cache)
+    _, stats = fresh.run_queries([q])
+    assert fresh.cache.stats.stale_evictions > 0
+    assert int(stats[0].cache_misses) > 0  # recomputed at the new epoch
+
+
+def test_negative_caching_through_scheduler():
+    """A query with an empty fragment is served from the negative table on
+    re-issue: hits and exact NRS/NTB savings are reported."""
+    store = _tiny_store()
+    cfg = EngineConfig(interface="spf", cap=64)
+    # predicate 0 never has object 5 -> empty star fragment
+    q = BGP((TriplePattern(V(0), C(0), C(5)),), n_vars=1)
+    sched = QueryScheduler(store, cfg)
+    _, first = sched.run_queries([q])
+    assert int(first[0].n_results) == 0
+    _, again = sched.run_queries([q])
+    assert int(again[0].cache_hits) > 0 and int(again[0].cache_misses) == 0
+    assert int(again[0].nrs_saved) == int(again[0].nrs) > 0
+    assert sched.cache.stats.neg_hits > 0
+    assert sched.cache.n_negative > 0 and len(sched.cache) == 0
+
+
 def test_key_differs_on_omega_and_cap():
     store = _tiny_store()
     cfg = EngineConfig(interface="spf")
@@ -155,3 +303,5 @@ def test_key_differs_on_omega_and_cap():
     assert unit_request_key(io, consts, empty, 128) != base
     assert unit_request_key(io, consts, np.zeros((2, 0), np.int32), 64) != base
     assert unit_request_key(io, (99,) + consts[1:], empty, 64) != base
+    # the store epoch is part of the request: cross-epoch keys never alias
+    assert unit_request_key(io, consts, empty, 64, epoch=1) != base

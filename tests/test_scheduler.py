@@ -5,8 +5,17 @@ valid result rows and identical gross QueryStats to looping
 ``QueryEngine.run`` — across all four interfaces, all WatDiv loads, cache
 on and off, with no-op padding lanes in every wave and overflow-retried
 queries inside buckets — while additionally reporting exact cache savings.
+
+The ``mesh``-named cases extend the same contract to mesh-routed waves
+(``QueryScheduler(mesh=...)``): they build a mesh over every visible
+device, so under the default 1-device tier-1 run they pin the shard_map
+lowering itself, and under the CI matrix job's
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` they pin true
+multi-device wave spanning (run ``pytest tests/test_scheduler.py -k
+mesh``).
 """
 
+import jax
 import numpy as np
 import pytest
 
@@ -23,6 +32,12 @@ from repro.rdf.queries import QueryLoadConfig
 
 LOADS = ["1-star", "2-stars", "3-stars", "paths", "union"]
 INTERFACES = ["tpf", "brtpf", "spf", "endpoint"]
+
+
+def _device_mesh():
+    """One lane slot per visible device (1 on bare tier-1, 8 in the CI
+    mesh matrix job)."""
+    return jax.make_mesh((len(jax.devices()),), ("model",))
 
 
 @pytest.fixture(scope="module")
@@ -149,6 +164,102 @@ def test_engine_run_load_delegates_to_scheduler(watdiv_small, all_queries,
     qs = all_queries[:4]
     tables, stats = eng.run_load(qs)
     _assert_equivalent(serial_results["spf"][:4], tables, stats, "run_load")
+
+
+# --------------------------------------------------------------------------
+# mesh-routed waves (run `-k mesh`; the CI matrix job forces 8 host devices)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("interface", INTERFACES)
+def test_mesh_waves_byte_identical_to_serial(watdiv_small, all_queries,
+                                             serial_results, interface):
+    """Mesh-routed scheduler waves: one request per device lane (collapsing
+    off, stream interleaved over as many clients as devices) so wave width
+    reaches the mesh's lane-slot count and the shard_map step engages —
+    valid rows and gross stats must stay byte-identical to the serial
+    path, cache off and on."""
+    _, store = watdiv_small
+    n_dev = len(jax.devices())
+    qs = all_queries[:4]  # 1-star + 2-stars samples
+    cfg = EngineConfig(interface=interface, cap=2048)
+    for use_cache in (False, True):
+        sched = QueryScheduler(
+            store, cfg,
+            SchedulerConfig(lanes=8, use_cache=use_cache,
+                            collapse_duplicates=False),
+            mesh=_device_mesh())
+        served = sched.serve(interleave_clients(qs, n_dev))
+        serial = [serial_results[interface][i // n_dev]
+                  for i in range(len(served))]
+        _assert_equivalent(serial, [t for t, _ in served],
+                           [s for _, s in served],
+                           ("mesh", interface, use_cache))
+        # full-width buckets: every dispatched step spanned the mesh
+        assert sched.metrics.mesh_steps > 0 or sched.metrics.steps == 0
+        if not use_cache:
+            assert sched.metrics.mesh_steps == sched.metrics.steps > 0
+
+
+def test_mesh_vmap_mixed_widths_and_retries(watdiv_small):
+    """One bucket wide enough for the mesh plus a 1-job bucket and a
+    low starting cap: the scheduler mixes mesh waves, vmap fallback waves
+    (on multi-device meshes) and in-bucket 4x retries — all byte-identical
+    to the serial retry ladder."""
+    g, store = watdiv_small
+    n_dev = len(jax.devices())
+    qs = generate_query_load(g, store, "2-stars", QueryLoadConfig(n_queries=2))
+    single = generate_query_load(g, store, "1-star", QueryLoadConfig(n_queries=1))
+    cfg = EngineConfig(interface="spf", cap=4)
+    eng = QueryEngine(store, cfg)
+    serial = {id(q): eng.run(q) for q in qs + single}
+    stream = [(c, q) for q in qs for c in range(n_dev)] \
+        + [(0, single[0])]
+    sched = QueryScheduler(
+        store, cfg, SchedulerConfig(lanes=8, collapse_duplicates=False),
+        mesh=_device_mesh())
+    served = sched.serve(stream)
+    for (c, q), (tbl, stats) in zip(stream, served):
+        ref_tbl, ref_stats = serial[id(q)]
+        assert np.array_equal(results_as_numpy(tbl),
+                              results_as_numpy(ref_tbl))
+        assert tuple(int(x) for x in stats)[:6] \
+            == tuple(int(x) for x in ref_stats)[:6]
+    m = sched.metrics
+    assert m.retries > 0 and m.mesh_steps > 0
+    if n_dev > 1:
+        # the 1-job bucket is narrower than the lane slots: vmap fallback
+        assert m.steps > m.mesh_steps
+
+
+def test_mesh_pod_shared_cache_and_run_load(watdiv_small):
+    """DistributedEngine.run_load routes the load through a mesh scheduler
+    sharing the engine's pod cache: results match serial, and a second
+    scheduler on the same pod cache is served from the first one's
+    fragments."""
+    from repro.core.distributed import DistConfig, DistributedEngine
+
+    g, store = watdiv_small
+    qs = generate_query_load(g, store, "2-stars", QueryLoadConfig(n_queries=2))
+    mesh = _device_mesh()
+    cfg = EngineConfig(interface="spf", cap=2048)
+    eng = DistributedEngine(store, jax.make_mesh((1, 1), ("data", "model")),
+                            cfg, DistConfig(cap=2048, shard_cap=512))
+    eng.mesh = mesh  # lane mesh for the scheduler path
+    tables, stats = eng.run_load(qs)
+    serial = QueryEngine(store, cfg)
+    for q, tbl, st in zip(qs, tables, stats):
+        ref_tbl, ref_stats = serial.run(q)
+        assert np.array_equal(results_as_numpy(tbl),
+                              results_as_numpy(ref_tbl))
+        assert tuple(int(x) for x in st)[:6] \
+            == tuple(int(x) for x in ref_stats)[:6]
+    assert eng.pod_cache.stats.insertions + eng.pod_cache.stats.neg_insertions > 0
+    # a fresh scheduler on the same pod cache: fully fragment-served
+    sched2 = QueryScheduler(store, cfg, cache=eng.pod_cache, mesh=mesh)
+    _, stats2 = sched2.run_queries(qs)
+    assert all(int(s.cache_misses) == 0 and int(s.cache_hits) > 0
+               for s in stats2)
+    assert all(int(s.nrs_saved) == int(s.nrs) for s in stats2)
 
 
 def test_mixed_signature_distributed_batch(watdiv_small):
