@@ -128,6 +128,70 @@ def sched_vs_serial(load: str, n_clients: int, interface: str = "spf",
     }
 
 
+def capacity_planner_vs_blind(load: str = "union", n_queries: int | None = None,
+                              interface: str = "spf", repeats: int = 2):
+    """Warm-run wall with the capacity planner on vs off (``fig_capacity``).
+
+    Planner off is the blind whole-query 4x retry ladder: every warm run
+    of an overflowing query re-climbs every rung, re-executing every unit
+    at every one of them.  Planner on sizes each unit from high-water
+    marks/degree bounds and resumes overflow at the failing unit, so a
+    warm run executes each unit exactly once at its observed rung.
+
+    Per the bench-scale protocol the measurement samples per-query warm
+    runs (``benchlib.warm_run_wall``) and extrapolates to the load — full
+    client streams are never replayed serially.  Returns one record per
+    query (walls, speedup, whether the query overflows the base capacity,
+    and the byte-identity flag the acceptance gate checks) plus the
+    extrapolated load walls.
+    """
+    import numpy as np
+
+    from repro.benchlib import warm_run_wall
+    from repro.core import results_as_numpy
+
+    qs = bench_load(load)[:n_queries]
+    _, store = bench_graph()
+    blind_cfg = EngineConfig(interface=interface, capacity_planner=False)
+    planned_cfg = EngineConfig(interface=interface)
+    _, blind_walls, blind_out = warm_run_wall(store, qs, cfg=blind_cfg,
+                                              repeats=repeats)
+    planned_eng, planned_walls, planned_out = warm_run_wall(
+        store, qs, cfg=planned_cfg, repeats=repeats)
+
+    records = []
+    for i, q in enumerate(qs):
+        (b_tbl, b_st), (p_tbl, p_st) = blind_out[i], planned_out[i]
+        identical = (np.array_equal(results_as_numpy(b_tbl),
+                                    results_as_numpy(p_tbl))
+                     and tuple(int(x) for x in b_st)[:6]
+                     == tuple(int(x) for x in p_st)[:6])
+        caps = planned_eng.planner.unit_caps(planned_eng.plan(q))
+        records.append({
+            "query": i,
+            "blind_s": blind_walls[i],
+            "planned_s": planned_walls[i],
+            "speedup": blind_walls[i] / planned_walls[i]
+            if planned_walls[i] else float("inf"),
+            "max_unit_cap": max(caps, default=planned_cfg.cap),
+            "overflows_base_cap": max(caps, default=0) > planned_cfg.cap,
+            "byte_identical": bool(identical),
+        })
+    ovf = [r for r in records if r["overflows_base_cap"]] or records
+    return {
+        "load": load, "interface": interface, "n_queries": len(qs),
+        "repeats": repeats,
+        "extrapolated_load_blind_s": float(np.mean(blind_walls) * len(qs)),
+        "extrapolated_load_planned_s": float(np.mean(planned_walls) * len(qs)),
+        # the acceptance gate ("a union-load overflow query no longer
+        # re-executes the ladder: >= 5x warm"): best single overflow query
+        "best_overflow_speedup": float(max(r["speedup"] for r in ovf)),
+        "mean_overflow_speedup": float(np.mean([r["speedup"] for r in ovf])),
+        "byte_identical": all(r["byte_identical"] for r in records),
+        "records": records,
+    }
+
+
 def sched_mesh_vs_vmap(load: str, n_clients: int, interface: str = "spf",
                        lanes: int = 16):
     """Serve one interleaved multi-client stream through both wave

@@ -18,6 +18,9 @@ Figures covered:
                         fragment-cache hit rate and batch occupancy per
                         load at 16/64/128 simulated clients; also writes
                         the BENCH_sched.json artifact (CI uploads it)
+  fig_capacity          warm-run wall with the capacity planner on vs off
+                        on the union load (blind 4x ladder baseline);
+                        writes BENCH_capacity.json (CI uploads it)
   fig_dist_sched        mesh-spanning scheduler waves vs single-host vmap
                         waves on the same streams (run with 8 forced host
                         devices in CI); writes BENCH_dist_sched.json
@@ -41,8 +44,8 @@ from repro.core.patterns import star_decomposition  # noqa: E402
 
 from benchmarks.common import (CLIENTS, INTERFACES, LOADS,  # noqa: E402
                                SCHED_CLIENTS, bench_graph, bench_load,
-                               engine, load_run, sched_mesh_vs_vmap,
-                               sched_vs_serial, timed_run)
+                               capacity_planner_vs_blind, engine, load_run,
+                               sched_mesh_vs_vmap, sched_vs_serial, timed_run)
 
 
 def emit(name: str, us_per_call: float, derived: str) -> None:
@@ -179,6 +182,49 @@ def fig_sched_throughput() -> None:
     print(f"# wrote {out} ({len(records)} records)", file=sys.stderr)
 
 
+# ------------------------------------------------- capacity planning
+
+def fig_capacity() -> None:
+    """Warm-run wall with the capacity planner on vs off on the union load
+    (the load whose non-selective queries overflow the base capacity and
+    re-climb the blind 4x ladder on every warm run).  Per-query warm
+    samples, extrapolated to the load — never a serial client-stream
+    replay.  Emits CSV rows and the ``BENCH_capacity.json`` artifact; the
+    acceptance gate reads ``best_overflow_speedup`` (>= 5x for at least
+    one overflow query — the fat-unit-dominated q1 tops out ~3x by
+    construction, see the per-query records) and ``byte_identical``.
+
+    Environment knobs (CI smoke restricts the query count):
+      BENCH_CAP_LOAD     load name, default "union"
+      BENCH_CAP_QUERIES  int, default all queries of the load
+      BENCH_CAP_REPEATS  warm repeats per query, default 2
+      BENCH_CAPACITY_JSON  output path, default BENCH_capacity.json
+    """
+    load = os.environ.get("BENCH_CAP_LOAD", "union")
+    n_q = os.environ.get("BENCH_CAP_QUERIES")
+    repeats = int(os.environ.get("BENCH_CAP_REPEATS", "2"))
+    rec = capacity_planner_vs_blind(load, int(n_q) if n_q else None,
+                                    repeats=repeats)
+    for r in rec["records"]:
+        emit(f"fig_capacity/{load}/q{r['query']}", 1e6 * r["planned_s"],
+             f"blind_s={r['blind_s']:.3f};planned_s={r['planned_s']:.3f};"
+             f"speedup={r['speedup']:.2f};"
+             f"max_unit_cap={r['max_unit_cap']};"
+             f"overflow={int(r['overflows_base_cap'])};"
+             f"identical={int(r['byte_identical'])}")
+    emit(f"fig_capacity/{load}/aggregate",
+         1e6 * rec["extrapolated_load_planned_s"],
+         f"load_blind_s={rec['extrapolated_load_blind_s']:.3f};"
+         f"load_planned_s={rec['extrapolated_load_planned_s']:.3f};"
+         f"best_overflow_speedup={rec['best_overflow_speedup']:.2f};"
+         f"mean_overflow_speedup={rec['mean_overflow_speedup']:.2f};"
+         f"identical={int(rec['byte_identical'])}")
+    out = os.environ.get("BENCH_CAPACITY_JSON", "BENCH_capacity.json")
+    with open(out, "w") as f:
+        json.dump({"figure": "fig_capacity", **rec}, f, indent=2)
+    print(f"# wrote {out} ({len(rec['records'])} records)", file=sys.stderr)
+
+
 # ------------------------------------------------- distributed scheduler
 
 def fig_dist_sched() -> None:
@@ -284,8 +330,8 @@ def kernels() -> None:
 
 
 FIGS = [fig4_loadstats, fig5_throughput, fig5f_timeouts, fig6_server_load,
-        fig7_network, fig8_latency, fig_sched_throughput, fig_dist_sched,
-        kernels]
+        fig7_network, fig8_latency, fig_sched_throughput, fig_capacity,
+        fig_dist_sched, kernels]
 
 
 def main() -> None:

@@ -125,3 +125,38 @@ def run_load(store, queries, interface: str,
         _, stats = eng.run(q)
         out.append(stats)
     return out
+
+
+def warm_run_wall(store, queries, interface: str = "spf",
+                  cfg: EngineConfig | None = None, repeats: int = 2):
+    """Measured *warm* per-query wall seconds through one engine.
+
+    The bench-scale measurement protocol for serial paths: each query is
+    warmed to steady state — two runs, because with the capacity planner
+    the first run observes the high-water marks and the *second* run is
+    the first to execute (and compile) at the observed rungs — then timed
+    over ``repeats`` warm runs.  Callers extrapolate to loads/client
+    streams from these samples — a full client stream must never be
+    replayed serially at bench scale (a blind-ladder union query costs
+    seconds per run).
+
+    Returns ``(engine, walls, outputs)`` with ``walls[i]`` the mean warm
+    seconds of ``queries[i]`` and ``outputs[i]`` its ``(table, stats)``
+    (for byte-identity checks between engine configurations).
+    """
+    import time
+
+    cfg = cfg or EngineConfig(interface=interface)
+    eng = QueryEngine(store, cfg)
+    walls, outputs = [], []
+    for q in queries:
+        for _ in range(2):  # steady state: HWMs observed, rungs compiled
+            out = eng.run(q)
+            out[0].rows.block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            out = eng.run(q)
+            out[0].rows.block_until_ready()
+        walls.append((time.perf_counter() - t0) / repeats)
+        outputs.append(out)
+    return eng, walls, outputs

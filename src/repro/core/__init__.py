@@ -5,6 +5,10 @@
 - :mod:`repro.core.server`        — seeded star / triple-pattern evaluation (Def. 5)
 - :mod:`repro.core.engine`        — the four interfaces (TPF / brTPF / SPF / endpoint)
   with the paper's NRS / NTB / load accounting
+- :mod:`repro.core.capacity`      — degree-based capacity planning: size the
+  overflow ladder from the data (oracle bounds + pod-shared high-water marks)
+- :mod:`repro.core.stepper`       — shared unit-stepped execution machinery
+  (resumable ladder steps, wave steps, on-device request fingerprints)
 - :mod:`repro.core.scheduler`     — concurrent query scheduler: mixed loads as
   signature-bucketed, cache-aware waves (vmapped on one host, shard_map across
   mesh lanes when wide enough)
@@ -26,6 +30,7 @@ from repro.core.patterns import (
     count_stars,
     star_decomposition,
 )
+from repro.core.capacity import CapacityPlanner
 from repro.core.engine import (
     INTERFACES,
     EngineConfig,
@@ -45,6 +50,6 @@ __all__ = [
     "count_stars", "star_decomposition",
     "INTERFACES", "EngineConfig", "QueryEngine", "QueryStats",
     "results_as_numpy",
-    "FragmentCache", "QueryScheduler", "SchedulerConfig",
+    "CapacityPlanner", "FragmentCache", "QueryScheduler", "SchedulerConfig",
     "interleave_clients",
 ]

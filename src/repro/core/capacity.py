@@ -1,0 +1,250 @@
+"""Degree-based capacity planning: size binding tables from the data.
+
+Capacity overflow is this system's timeout analogue, and until PR 4 it was
+handled by a blind geometric ladder: restart the whole query at 4x table
+capacity (4096 -> 1 << 20) until it fits.  Non-selective queries (the
+union load's q1/q2 at bench scale) re-climbed that ladder on *every* warm
+run — re-executing every unit at every rung — which is exactly the failure
+mode Montoya et al.'s interface evaluation flags for non-selective
+patterns.  brTPF's lesson is that the lever is shipping *right-sized*
+intermediate bindings; this module sizes them from the store instead of by
+blind retry.
+
+Two sources, in priority order:
+
+1. **High-water-mark memory** — a pod-shared, epoch-tagged map from
+   ``(plan signature, constants, unit, epoch)`` to the capacity a unit
+   last *succeeded* at (keyed like the fragment cache, and invalidated the
+   same way: the store epoch is folded into the key, so a ``bump_epoch``
+   can never alias old observations; ``sync_epoch`` sweeps them eagerly).
+   Warm runs jump straight to the observed rung — no ladder at all.
+2. **Degree oracle** — for cold plans, an upper bound on each unit's
+   result rows computed from per-predicate degree statistics: the max
+   subject out-degree and max object in-degree per predicate, derived from
+   the store's sorted key columns via ``kops.max_run_length_per_segment``
+   (a few vectorized segment reductions, once per store epoch — no query
+   execution).  Chained through the plan's branch cases it bounds every
+   intermediate table, so an oracle-sized run cannot overflow unless the
+   bound exceeds ``max_cap``.
+
+Byte-identity needs no ladder alignment: a non-overflowing evaluation's
+valid rows and cost account are independent of the capacity it ran at, so
+*any* capacity covering a unit's true peak produces blind-ladder-identical
+results (pinned by ``tests/test_capacity.py``).  Planned capacities are
+therefore **snug** — rounded up to the next multiple of the base capacity
+(``cfg.cap``), not to a 4x rung: at bench scale a rung can overshoot a
+unit's true peak by up to 4x, and every per-row cost of the unit step
+scales with the table capacity.  Only in-run overflow *growth* keeps the
+4x factor (``rung``), bounding retry counts like the blind ladder did.
+
+Sharing follows the fragment cache's model: one planner may serve any
+number of engines and schedulers (``DistributedEngine.pod_planner``); it
+is host-side state consulted between device steps.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import TYPE_CHECKING
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as kops
+from repro.rdf.store import TripleStore
+
+if TYPE_CHECKING:  # EngineConfig lives in engine.py; engine imports us
+    from repro.core.engine import EngineConfig, QueryPlan
+
+
+# branch cases whose output row count can exceed their input row count,
+# mapped to the degree statistic that bounds the per-row expansion factor
+_EXPANDING = {"probe_ovar_free": "ps",  # objects within each (p, s) run
+              "scan_ovar_bound": "po",  # subjects within each (p, o) run
+              "scan_ovar_free": "pred"}  # the whole predicate run
+
+
+@dataclass
+class PlannerStats:
+    oracle_caps: int = 0  # capacities served from the degree oracle
+    hwm_caps: int = 0  # capacities served from the high-water-mark memory
+    observations: int = 0
+    swept: int = 0  # HWM entries dropped on an epoch sweep
+
+
+@dataclass
+class CapacityPlanner:
+    """Pod-shareable capacity oracle + high-water-mark memory.
+
+    ``max_entries`` bounds the HWM map (LRU); degree statistics are
+    recomputed lazily per store epoch.
+    """
+
+    store: TripleStore
+    cfg: "EngineConfig"
+    max_entries: int = 65536
+    stats: PlannerStats = field(default_factory=PlannerStats)
+    _hwm: OrderedDict = field(default_factory=OrderedDict, repr=False)
+    _deg_epoch: int = field(default=-1, repr=False)
+    _max_ps: np.ndarray | None = field(default=None, repr=False)
+    _max_po: np.ndarray | None = field(default=None, repr=False)
+    _swept_epoch: int = field(default=0, repr=False)
+
+    # -------------------------------------------------------------- sizing
+    def rung(self, need: int) -> int:
+        """Smallest blind-ladder rung ``cfg.cap * 4**j`` covering ``need``
+        (capped at ``max_cap``) — the geometric growth schedule overflow
+        retries climb, same as the blind path's."""
+        cap = self.cfg.cap
+        while cap < need and cap < self.cfg.max_cap:
+            cap *= 4
+        return min(cap, self.cfg.max_cap)
+
+    # capacities below this buy nothing (table ops are overhead-dominated)
+    # and every distinct capacity is a separate XLA compile of its unit
+    # steps — the quantum floor bounds shape churn on small workloads
+    MIN_QUANTUM = 1024
+
+    def snug(self, need: int) -> int:
+        """Smallest snug capacity covering ``need`` (capped at ``max_cap``)
+        — what oracle bounds and high-water marks are quantized to.
+
+        Snug beats rung-aligned for table sizing because every per-row
+        cost of a unit step scales with the capacity: a 4x ladder rung can
+        nearly double-to-quadruple a fat unit's work.  The quantum is 1/16
+        of the need's power-of-two octave (>= 6% worst-case overshoot),
+        floored at ``max(cfg.cap, MIN_QUANTUM)``, so the number of
+        distinct step shapes — and thus compiles — stays logarithmically
+        bounded per workload."""
+        need = max(int(need), 1)
+        if need >= self.cfg.max_cap:
+            return self.cfg.max_cap
+        q = max(self.cfg.cap, self.MIN_QUANTUM,
+                1 << max((need - 1).bit_length() - 4, 0))
+        return min(-(-need // q) * q, self.cfg.max_cap)
+
+    # ------------------------------------------------------- degree oracle
+    def _degree_stats(self) -> tuple[np.ndarray, np.ndarray]:
+        """(max subject out-degree, max object in-degree) per predicate,
+        computed once per store epoch via ``kops`` segment reductions."""
+        if self._deg_epoch != self.store.epoch or self._max_ps is None:
+            s = self.store
+            n_seg = s.n_predicates + 1
+            seg_ps = jnp.asarray(s.h_key_ps // s.radix, jnp.int64)
+            seg_po = jnp.asarray(s.h_key_po // s.radix, jnp.int64)
+            self._max_ps = np.asarray(kops.max_run_length_per_segment(
+                jnp.asarray(s.h_key_ps), seg_ps, n_seg))
+            self._max_po = np.asarray(kops.max_run_length_per_segment(
+                jnp.asarray(s.h_key_po), seg_po, n_seg))
+            self._deg_epoch = s.epoch
+        return self._max_ps, self._max_po
+
+    def _branch_factor(self, consts: tuple[int, ...], branch) -> int:
+        """Upper bound on the per-input-row output multiplier of a branch."""
+        kind = _EXPANDING.get(branch.case)
+        if kind is None:
+            if branch.case == "scan_oconst":
+                # the whole (p, o) run expands under every input row;
+                # both terms are constants, so the bound is exact
+                p = consts[branch.pred_ci]
+                o = consts[branch.obj_src[1]]
+                return self.store.tp_cardinality(int(p), o=int(o))
+            return 1  # probe_oconst / probe_ovar_bound: pure filters
+        p = int(consts[branch.pred_ci])
+        if kind == "pred":
+            lo, hi = self.store.pred_run(p)
+            return hi - lo
+        max_ps, max_po = self._degree_stats()
+        table = max_ps if kind == "ps" else max_po
+        return int(table[p]) if p < table.shape[0] else 0
+
+    def unit_bounds(self, plan: "QueryPlan") -> list[int]:
+        """Chained per-unit upper bounds on binding-table rows.
+
+        ``bounds[k]`` bounds every intermediate inside unit ``k`` as well
+        as its output: expansion factors multiply, filters keep the bound
+        (never shrink it), so the running product is a monotone upper
+        envelope.  Clamped at ``max_cap`` — past the ceiling the execution
+        truncates-and-latches anyway, so the clamped chain stays a valid
+        bound for the clamped execution.
+        """
+        bound = 1
+        out: list[int] = []
+        for up in plan.units:
+            for b in up.branches:
+                bound = min(bound * self._branch_factor(plan.consts, b),
+                            self.cfg.max_cap)
+            out.append(bound)
+        return out
+
+    # --------------------------------------------------- capacity requests
+    def unit_caps(self, plan: "QueryPlan") -> list[int]:
+        """Per-unit starting capacities: snug HWM if observed at the
+        current epoch, else the oracle bound's snug capacity."""
+        epoch = self.store.epoch
+        caps = []
+        bounds = None
+        for k in range(len(plan.units)):
+            hwm = self._get_hwm((plan.signature, plan.consts, k, epoch))
+            if hwm is not None:
+                self.stats.hwm_caps += 1
+                caps.append(hwm)
+            else:
+                if bounds is None:
+                    bounds = self.unit_bounds(plan)
+                self.stats.oracle_caps += 1
+                caps.append(self.snug(bounds[k]))
+        return caps
+
+    def query_cap(self, plan: "QueryPlan") -> int:
+        """Whole-query starting capacity (the scheduler's per-wave tables
+        share one capacity across units): HWM if observed, else the snug
+        capacity covering the largest per-unit bound."""
+        epoch = self.store.epoch
+        hwm = self._get_hwm((plan.signature, plan.consts, "q", epoch))
+        if hwm is not None:
+            self.stats.hwm_caps += 1
+            return hwm
+        self.stats.oracle_caps += 1
+        bounds = self.unit_bounds(plan)
+        return self.snug(max(bounds, default=1))
+
+    # --------------------------------------------------------- observation
+    def _get_hwm(self, key: tuple) -> int | None:
+        cap = self._hwm.get(key)
+        if cap is not None:
+            self._hwm.move_to_end(key)
+        return cap
+
+    def _put_hwm(self, key: tuple, cap: int) -> None:
+        self._hwm[key] = cap
+        self._hwm.move_to_end(key)
+        self.stats.observations += 1
+        while len(self._hwm) > self.max_entries:
+            self._hwm.popitem(last=False)
+
+    def observe_unit(self, plan: "QueryPlan", k: int, cap: int) -> None:
+        """Record that unit ``k`` of ``plan`` succeeded at ``cap``."""
+        self._put_hwm((plan.signature, plan.consts, k, self.store.epoch), cap)
+
+    def observe_query(self, plan: "QueryPlan", cap: int) -> None:
+        """Record a whole query's final (non-overflow or latched) cap."""
+        self._put_hwm((plan.signature, plan.consts, "q", self.store.epoch),
+                      cap)
+
+    # --------------------------------------------------------------- epoch
+    def sync_epoch(self, epoch: int) -> int:
+        """Sweep HWM entries from other epochs on first sight of a new one
+        (the epoch is also folded into every key, so this only reclaims
+        memory — stale observations could never alias).  Mirrors
+        ``FragmentCache.sync_epoch``; shared planners sweep once per
+        transition regardless of which engine/scheduler sees it first."""
+        if epoch == self._swept_epoch:
+            return 0
+        self._swept_epoch = epoch
+        stale = [k for k in self._hwm if k[3] != epoch]
+        for k in stale:
+            del self._hwm[k]
+        self.stats.swept += len(stale)
+        return len(stale)

@@ -49,6 +49,7 @@ from jax.sharding import PartitionSpec as P
 from repro.compat import shard_map as _shard_map
 
 from repro.core.bindings import BindingTable, compact, unit_table
+from repro.core.capacity import CapacityPlanner
 from repro.core.engine import EngineConfig, QueryPlan, plan_query
 from repro.core.fragcache import FragmentCache
 from repro.core.patterns import BGP
@@ -167,7 +168,8 @@ def _lane_eval(plans: tuple, n_vars: int, cfg: DistConfig, radix: int,
     owner = (my_shard, n_shards) if cfg.owner_masking else None
     for up in plans:
         # --- server side: local (collective-free) unit evaluation ---------
-        local, ops = eval_unit(dev, radix, up, const_vec, table, owner=owner)
+        local, ops, _ = eval_unit(dev, radix, up, const_vec, table,
+                                  owner=owner)
         # keep at most shard_cap local rows (page buffer)
         local = compact(local)
         keep = jnp.arange(cfg.cap) < cfg.shard_cap
@@ -240,6 +242,10 @@ class DistributedEngine:
         # so a fragment computed for one wave serves every later lane on
         # the pod until the store epoch moves past it
         self.pod_cache = FragmentCache()
+        # ...and the pod's shared capacity planner: high-water marks
+        # observed by any scheduler on the pod size every later request's
+        # tables (epoch-tagged like the cache; core/capacity.py)
+        self.pod_planner = CapacityPlanner(store, cfg)
 
     @property
     def _stacked(self) -> StoreArrays:
@@ -374,7 +380,8 @@ class DistributedEngine:
         # QueryScheduler raises its wave-width cap to the mesh's slot
         # count itself, so the default config spans any pod width
         sched = scheduler or QueryScheduler(
-            self.store, self.cfg, cache=self.pod_cache, mesh=self.mesh)
+            self.store, self.cfg, cache=self.pod_cache, mesh=self.mesh,
+            planner=self.pod_planner)
         return sched.run_queries(queries)
 
     # ---------------------------------------------------------------- dry-run

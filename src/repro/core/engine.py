@@ -19,11 +19,29 @@ the benchmark layer's job.
 
 Execution model
 ---------------
-A *single* query (``run``) compiles the whole per-query evaluation — all
-units plus stats — into one jitted function keyed by the query's plan
-signature; constants are routed through a traced vector so structurally
-identical queries share compiles.  Capacity overflow (the timeout
-analogue) retries at 4x capacity up to ``max_cap``.
+A *single* query (``run``) executes unit-by-unit through the shared batch
+step factory (``distributed.make_batch_step`` via ``core/stepper.py``),
+each unit a jitted step keyed by the unit's structure — so structurally
+identical units share compiles across queries and with the scheduler.
+Table capacities come from the capacity planner (``core/capacity.py``):
+each unit starts at a data-informed *snug* capacity — the high-water mark
+(true peak row count) last observed for exactly this ``(plan signature,
+constants, unit)`` at the current store epoch, or the degree oracle's
+upper bound for cold plans, quantized to 1/16-octave granularity so fat
+units never pay a 4x ladder rung's overshoot.  Capacity overflow (the
+timeout analogue) is handled *resumably*: the last valid binding table is
+the checkpoint, and only the overflowed unit's table regrows at 4x — the
+prefix units are never re-executed.  At ``max_cap`` the overflow flag
+latches and evaluation continues on the truncated table, exactly like the
+blind ladder's give-up rung.
+
+Because a non-overflowing evaluation's valid rows and cost account are
+independent of the capacity it ran at, this path is byte-identical (rows
+and gross ``QueryStats``) to the pre-PR 4 blind ladder — restart the whole
+query at 4x capacity until it fits — which survives behind
+``EngineConfig(capacity_planner=False)`` as a single jitted whole-query
+function and is pinned against the planned path by the ladder-parity
+suite (``tests/test_capacity.py``).
 
 A query *load* (``run_load``) does not loop over ``run``: it delegates to
 the concurrent scheduler (``core/scheduler.py``), which buckets requests
@@ -64,6 +82,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.bindings import BindingTable, unit_table
+from repro.core.capacity import CapacityPlanner
 from repro.core.patterns import BGP, StarPattern, star_decomposition
 from repro.core.server import UnitPlan, eval_unit, plan_unit
 from repro.rdf.store import StoreArrays, TripleStore
@@ -79,6 +98,10 @@ class EngineConfig:
     omega: int = 30  # max bindings per request (paper: 30)
     cap: int = 4096  # binding-table capacity (the timeout analogue)
     max_cap: int = 1 << 20  # overflow retry ceiling (4x growth); then give up
+    # size capacities from the data (degree oracle + high-water marks,
+    # core/capacity.py) and resume overflow at the failing unit; False
+    # restores the blind whole-query 4x retry ladder (byte-identical)
+    capacity_planner: bool = True
     # wire-format constants for NTB (bytes): pattern/bindings serialisation
     request_base_bytes: int = 300  # HTTP request overhead
     page_header_bytes: int = 200  # per-page metadata/controls (Def. 4 M', C')
@@ -189,7 +212,7 @@ def _execute(plan_sig_static: tuple, plans: tuple[UnitPlan, ...], n_vars: int,
 
     for k, up in enumerate(plans):
         in_count = table.count()
-        table, ops = eval_unit(dev, radix, up, const_vec, table)
+        table, ops, _ = eval_unit(dev, radix, up, const_vec, table)
         out_count = table.count()
         matched_triples = out_count * up.n_triple_patterns
 
@@ -249,29 +272,54 @@ def _execute(plan_sig_static: tuple, plans: tuple[UnitPlan, ...], n_vars: int,
 
 
 class QueryEngine:
-    """Runs BGP queries against a TripleStore via one of the four interfaces."""
+    """Runs BGP queries against a TripleStore via one of the four interfaces.
 
-    def __init__(self, store: TripleStore, cfg: EngineConfig):
+    ``planner`` may be shared across engines and schedulers (the pod-shared
+    high-water-mark memory — ``DistributedEngine.pod_planner`` does exactly
+    this); by default each engine owns one.
+    """
+
+    def __init__(self, store: TripleStore, cfg: EngineConfig,
+                 planner: "CapacityPlanner | None" = None):
         if cfg.interface not in INTERFACES:
             raise ValueError(f"unknown interface {cfg.interface!r}")
         self.store = store
         self.cfg = cfg
+        self.planner = planner if planner is not None \
+            else CapacityPlanner(store, cfg)
         self._cache: dict[tuple, callable] = {}
 
     def plan(self, bgp: BGP) -> QueryPlan:
         return plan_query(self.store, bgp, self.cfg)
 
     def run(self, bgp: BGP) -> tuple[BindingTable, QueryStats]:
-        """Run one query; on capacity overflow retry with 4x-larger tables
-        (up to ``max_cap``).
+        """Run one query; capacity overflow (the timeout analogue) grows
+        tables 4x up to ``max_cap``.
 
-        Overflow is the static-shape analogue of the paper's query timeout;
-        retry-with-larger-capacity is how a production deployment would
-        absorb the occasional fat intermediate result instead of failing.
-        The 4x factor trades a coarser capacity ladder (fewer jit cache
-        entries per signature) against some over-allocation on retry.
+        With the capacity planner (the default) each unit starts at a
+        data-informed ladder rung and overflow re-enters at the failing
+        unit with only that unit's table regrown; with
+        ``capacity_planner=False`` the whole query restarts at 4x until it
+        fits.  Both return identical valid rows and gross stats — the
+        planner changes how fast the answer is reached, never the answer.
         """
         plan = self.plan(bgp)
+        if not self.cfg.capacity_planner:
+            return self._run_blind(plan)
+        self.planner.sync_epoch(self.store.epoch)
+        caps = self.planner.unit_caps(plan)
+        if not caps or max(caps) <= self.cfg.cap:
+            # the oracle/HWM proves the base capacity cannot overflow:
+            # take the single fused whole-query jit — one dispatch, no
+            # per-unit host syncs (byte-identical either way; this keeps
+            # selective queries at blind-path speed)
+            return self._run_blind(plan)
+        return self._run_planned(plan, caps)
+
+    def _run_blind(self, plan: QueryPlan) -> tuple[BindingTable, QueryStats]:
+        """The pre-planner blind ladder: restart the whole query at 4x
+        capacity until it fits (the ladder-parity baseline).  One jitted
+        whole-query function per (signature, cap)."""
         const_vec = jnp.asarray(np.asarray(plan.consts, dtype=np.int64))
         cap = self.cfg.cap
         while True:
@@ -288,6 +336,85 @@ class QueryEngine:
                 return table, stats
             cap *= 4
 
+    def _run_planned(self, plan: QueryPlan, caps: list[int]
+                     ) -> tuple[BindingTable, QueryStats]:
+        """Unit-stepped execution with planner capacities + resumable
+        overflow (see the module docstring's execution model).  Stats are
+        host ints built through ``stepper.unit_cost`` — the same twin of
+        ``_execute``'s accounting the scheduler uses."""
+        from repro.core import stepper
+
+        cfg = self.cfg
+        store = self.store
+        dev = store.device
+        const_vec = jnp.asarray(np.asarray(plan.consts, dtype=np.int64))[None]
+        n_vars = max(plan.n_vars, 1)
+        n = dev.key_ps_pso.shape[0]
+        logn = max(1, int(math.ceil(math.log2(max(n, 2)))))
+
+        cap = caps[0] if caps else cfg.cap
+        seed = unit_table(cap, n_vars)
+        rows, valid = seed.rows, seed.valid
+        ovf_dev = seed.overflow
+        overflow = False
+        n_in = 1
+        max_peak = 1
+        nrs = ntb = server = client = 0
+        for k, up in enumerate(plan.units):
+            # once overflow latches (at max_cap) the blind ladder's give-up
+            # rung runs everything at max_cap on the truncated table — do
+            # exactly that for byte-identity
+            want = cfg.max_cap if overflow \
+                else max(caps[k], self.planner.snug(n_in))
+            if want != cap:
+                rows, valid = stepper.reseat(rows, valid, want)
+                cap = want
+            while True:
+                step = stepper.serial_unit_step(up, store.radix)
+                r_o, v_o, o_o, ops_o, cnt_o, peak_o = step(
+                    dev, const_vec, rows[None], valid[None],
+                    jnp.asarray([overflow]))
+                unit_ovf = bool(np.asarray(o_o)[0])
+                if unit_ovf and not overflow and cap < cfg.max_cap:
+                    # resumable overflow: regrow only this unit's table,
+                    # seeded with the checkpointed (pre-step) prefix
+                    cap = min(cap * 4, cfg.max_cap)
+                    rows, valid = stepper.reseat(rows, valid, cap)
+                    continue
+                break
+            rows, valid, ovf_dev = r_o[0], v_o[0], o_o[0]
+            out_count = int(np.asarray(cnt_o)[0])
+            d = stepper.unit_cost(cfg, k, up, n_in,
+                                  out_count, int(np.asarray(ops_o)[0]), logn)
+            nrs += d[0]
+            ntb += d[1]
+            server += d[2]
+            client += d[3]
+            if not unit_ovf:
+                # record what the unit NEEDED (its true peak row count),
+                # not the capacity it happened to run at — warm runs then
+                # get exactly-right-sized tables even where the chained
+                # oracle bound (a monotone product) overshoots
+                peak = int(np.asarray(peak_o)[0])
+                self.planner.observe_unit(
+                    plan, k, self.planner.snug(max(peak, n_in)))
+                max_peak = max(max_peak, peak, n_in)
+            overflow = unit_ovf
+            n_in = out_count
+
+        n_results = n_in
+        if cfg.interface == "endpoint":
+            nrs, ntb = stepper.endpoint_totals(cfg, n_results, plan.n_vars)
+        # whole-query HWM (the scheduler's single-cap form): the snug cap
+        # covering the largest true peak, or max_cap on a latched overflow
+        self.planner.observe_query(
+            plan, cfg.max_cap if overflow else self.planner.snug(max_peak))
+        stats = QueryStats(
+            nrs=nrs, ntb=ntb, server_ops=server, client_ops=client,
+            n_results=n_results, overflow=overflow,
+        )
+        return BindingTable(rows, valid, ovf_dev), stats
+
     def run_load(self, queries: list[BGP],
                  scheduler=None) -> tuple[list[BindingTable], list[QueryStats]]:
         """Serve a query list through the concurrent scheduler.
@@ -300,7 +427,8 @@ class QueryEngine:
         """
         from repro.core.scheduler import QueryScheduler
 
-        sched = scheduler or QueryScheduler(self.store, self.cfg)
+        sched = scheduler or QueryScheduler(self.store, self.cfg,
+                                            planner=self.planner)
         return sched.run_queries(queries)
 
 

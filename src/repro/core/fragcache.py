@@ -44,6 +44,15 @@ rejected (``stats.admission_rejects``) and the resident entry survives.
 The sketch ages by periodic halving so stale popularity decays.
 ``policy="lru"`` restores the PR 2 behaviour exactly.
 
+The default sketch is a constant-space **count-min sketch**
+(``sketch="cms"``: depth x width counter matrix, min-over-rows estimate,
+halving decay after a fixed window of touches) — its memory never grows
+with the key population, unlike the exact per-hash dict it replaced.
+``sketch="exact"`` keeps that dict (halving when the distinct-hash count
+overflows) as the admission ground truth: on traces short of both decay
+triggers and free of CMS collisions the two make identical admission
+decisions, which is what the parity test pins.
+
 Empty fragments get a dedicated side table: a negative result is a
 zero-row delta, so caching it in the main map would spend a whole entry
 slot (and admission pressure) on ~0 bytes of payload.  ``put`` routes
@@ -79,6 +88,96 @@ from typing import NamedTuple
 import numpy as np
 
 
+# --------------------------------------------------------------------------
+# frequency sketches (TinyLFU admission support)
+# --------------------------------------------------------------------------
+#
+# Both sketches count by ``hash(key)``, not the key itself: request keys
+# embed Omega digests/bytes, and a long-tail scan of one-shot keys would
+# otherwise park thousands of fat tuples in the sketch — the very workload
+# admission exists to survive.  Collisions merely inflate an approximate
+# count.
+
+class ExactFreqSketch:
+    """The exact per-hash dict sketch (PR 3 behaviour): unbounded-ish —
+    memory grows with the distinct-key population until the halving
+    trigger (distinct hashes > 8x capacity) decays and drops zeros.
+    Kept as the admission ground truth for the CMS parity test."""
+
+    def __init__(self, capacity: int):
+        self.capacity = capacity
+        self._freq: dict = {}
+
+    def add(self, key: tuple) -> int:
+        h = hash(key)
+        f = self._freq.get(h, 0) + 1
+        self._freq[h] = f
+        if len(self._freq) > 8 * self.capacity:
+            self._freq = {k: v // 2 for k, v in self._freq.items() if v >= 2}
+        return f
+
+    def estimate(self, key: tuple) -> int:
+        return self._freq.get(hash(key), 0)
+
+    def clear(self) -> None:
+        self._freq.clear()
+
+
+def _smix64(x: int) -> int:
+    """splitmix64 finaliser on python ints (mod 2^64)."""
+    m = 0xFFFFFFFFFFFFFFFF
+    x &= m
+    x = ((x ^ (x >> 30)) * 0xBF58476D1CE4E5B9) & m
+    x = ((x ^ (x >> 27)) * 0x94D049BB133111EB) & m
+    return x ^ (x >> 31)
+
+
+class CountMinSketch:
+    """Constant-space count-min sketch with halving decay (TinyLFU aging).
+
+    ``depth`` salted rows of ``width`` uint32 counters (width: pow2 >=
+    4x cache capacity); an estimate is the min over rows, so collisions
+    can only inflate counts.  After ``16 x capacity`` touches every
+    counter halves — the same aging intent as the exact sketch's
+    halve-and-drop, bounded in touches instead of distinct keys (the
+    quantity a CMS cannot observe).  Counters cannot overflow: a counter
+    is bumped at most once per touch and the decay window caps touches.
+    """
+
+    DEPTH = 4
+    _SALTS = (0x9E3779B97F4A7C15, 0xC2B2AE3D27D4EB4F,
+              0x165667B19E3779F9, 0x27D4EB2F165667C5)
+
+    def __init__(self, capacity: int):
+        width = 1 << max(8, (4 * capacity - 1).bit_length())
+        self._mask = width - 1
+        self._table = np.zeros((self.DEPTH, width), np.uint32)
+        self._window = 16 * capacity
+        self._touches = 0
+
+    def _slots(self, key: tuple) -> list[int]:
+        h = hash(key) & 0xFFFFFFFFFFFFFFFF
+        return [_smix64(h ^ s) & self._mask for s in self._SALTS]
+
+    def add(self, key: tuple) -> int:
+        slots = self._slots(key)
+        for d, i in enumerate(slots):
+            self._table[d, i] += 1
+        self._touches += 1
+        if self._touches >= self._window:
+            self._table >>= 1
+            self._touches = 0
+        return int(min(self._table[d, i] for d, i in enumerate(slots)))
+
+    def estimate(self, key: tuple) -> int:
+        return int(min(self._table[d, i]
+                       for d, i in enumerate(self._slots(key))))
+
+    def clear(self) -> None:
+        self._table[:] = 0
+        self._touches = 0
+
+
 class FragmentEntry(NamedTuple):
     """Replayable response of one seeded unit request."""
 
@@ -87,6 +186,10 @@ class FragmentEntry(NamedTuple):
     overflow: bool  # the unit's own overflow contribution
     ops: int  # server work units the evaluation cost
     epoch: int = 0  # store epoch the fragment was computed against
+    # the unit's true peak row count (max branch-boundary count of the
+    # recorded evaluation) — replayed units feed it to the capacity
+    # planner's high-water marks just like computed ones
+    peak: int = 0
 
     @property
     def n_out(self) -> int:
@@ -135,22 +238,30 @@ class FragmentCache:
     evict the whole working set for one unlikely-to-repeat key).
     ``neg_capacity`` bounds the negative side table.  ``policy`` selects
     admission: ``"freq"`` (TinyLFU-style, the default) or ``"lru"``
-    (admit always, PR 2 behaviour).
+    (admit always, PR 2 behaviour).  ``sketch`` selects the frequency
+    sketch backing ``"freq"``: ``"cms"`` (constant-space count-min with
+    halving decay, the default) or ``"exact"`` (the PR 3 per-hash dict —
+    the parity baseline).
     """
 
     capacity: int = 4096
     max_entry_rows: int = 1 << 20
     neg_capacity: int = 16384
     policy: str = "freq"  # "freq" | "lru"
+    sketch: str = "cms"  # "cms" | "exact"
     _entries: OrderedDict = field(default_factory=OrderedDict, repr=False)
     _neg: OrderedDict = field(default_factory=OrderedDict, repr=False)
-    _freq: dict = field(default_factory=dict, repr=False)
+    _sketch: object = field(default=None, repr=False)
     _swept_epoch: int = field(default=0, repr=False)
     stats: CacheStats = field(default_factory=CacheStats)
 
     def __post_init__(self):
         if self.policy not in ("freq", "lru"):
             raise ValueError(f"unknown admission policy {self.policy!r}")
+        if self.sketch not in ("cms", "exact"):
+            raise ValueError(f"unknown frequency sketch {self.sketch!r}")
+        self._sketch = CountMinSketch(self.capacity) if self.sketch == "cms" \
+            else ExactFreqSketch(self.capacity)
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -159,36 +270,24 @@ class FragmentCache:
     def n_negative(self) -> int:
         return len(self._neg)
 
-    # ------------------------------------------------------- frequency sketch
-    def _touch(self, key: tuple) -> int:
-        """Record one request for ``key``; returns its updated frequency.
-
-        The sketch counts by ``hash(key)``, not the key itself: request
-        keys embed the Omega block's bytes (KBs at large caps), and a
-        long-tail scan of one-shot keys would otherwise park thousands of
-        fat tuples in the sketch — the very workload admission exists to
-        survive.  Hash collisions merely inflate an approximate count
-        (same trade a count-min sketch makes).  The sketch is bounded at
-        8x capacity; overflowing it halves every count and drops zeros
-        (TinyLFU aging), so popularity estimates decay instead of
-        accumulating forever.
-        """
-        h = hash(key)
-        f = self._freq.get(h, 0) + 1
-        self._freq[h] = f
-        if len(self._freq) > 8 * self.capacity:
-            self._freq = {k: v // 2 for k, v in self._freq.items() if v >= 2}
-        return f
-
     # ---------------------------------------------------------------- lookups
     def get(self, key: tuple, epoch: int = 0) -> FragmentEntry | None:
         """Look up a canonical request at the current store ``epoch``.
 
         An entry recorded under an older epoch is stale: it is dropped on
         touch (lazy invalidation — no flush) and the lookup misses.
+
+        Invariant: the scheduler's keys (``server.unit_request_key`` /
+        ``unit_digest_key``) fold the epoch into the key itself, so for
+        them a stale entry is simply *unreachable* — this get-time check
+        can only ever fire for callers using raw or epoch-less keys, and
+        the scheduler relies on the eager ``sync_epoch`` sweep (not this
+        branch) to reclaim stale memory.  The branch is kept as the
+        correctness backstop for raw-key users of the public API and is
+        pinned by an explicit raw-key probe test.
         """
         if self.policy == "freq":  # plain LRU never consults the sketch
-            self._touch(key)
+            self._sketch.add(key)
         entry = self._entries.get(key)
         if entry is not None:
             if entry.epoch != epoch:
@@ -202,7 +301,7 @@ class FragmentCache:
             return entry
         neg = self._neg.get(key)
         if neg is not None:
-            neg_overflow, neg_ops, neg_epoch = neg
+            neg_overflow, neg_ops, neg_epoch, neg_peak = neg
             if neg_epoch != epoch:
                 del self._neg[key]
                 self.stats.stale_evictions += 1
@@ -212,7 +311,7 @@ class FragmentCache:
             self.stats.hits += 1
             self.stats.neg_hits += 1
             return FragmentEntry(_EMPTY_SRC, _EMPTY_WRITTEN, neg_overflow,
-                                 neg_ops, neg_epoch)
+                                 neg_ops, neg_epoch, neg_peak)
         self.stats.misses += 1
         return None
 
@@ -244,7 +343,8 @@ class FragmentCache:
         stale = [k for k, e in self._entries.items() if e.epoch != epoch]
         for k in stale:
             self.stats.bytes_stored -= self._entries.pop(k).nbytes
-        stale_neg = [k for k, (_, _, ep) in self._neg.items() if ep != epoch]
+        stale_neg = [k for k, (_, _, ep, _) in self._neg.items()
+                     if ep != epoch]
         for k in stale_neg:
             del self._neg[k]
         n = len(stale) + len(stale_neg)
@@ -266,7 +366,7 @@ class FragmentCache:
             # it never competes with real fragments for capacity
             if key in self._neg:
                 return
-            self._neg[key] = (entry.overflow, entry.ops, epoch)
+            self._neg[key] = (entry.overflow, entry.ops, epoch, entry.peak)
             self.stats.neg_insertions += 1
             while len(self._neg) > self.neg_capacity:
                 self._neg.popitem(last=False)
@@ -278,8 +378,8 @@ class FragmentCache:
             # TinyLFU admission: the newcomer must be at least as popular
             # as the LRU victim it would displace, else keep the resident
             victim_key = next(iter(self._entries))
-            new_f = self._freq.get(hash(key), 1)
-            victim_f = self._freq.get(hash(victim_key), 0)
+            new_f = self._sketch.estimate(key) or 1
+            victim_f = self._sketch.estimate(victim_key)
             if new_f < victim_f:
                 self.stats.admission_rejects += 1
                 return
@@ -295,7 +395,7 @@ class FragmentCache:
         """Drop entries, sketch and counters (fresh measurement epoch)."""
         self._entries.clear()
         self._neg.clear()
-        self._freq.clear()
+        self._sketch.clear()
         self.stats = CacheStats()
 
 

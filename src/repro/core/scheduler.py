@@ -10,48 +10,62 @@ clients and turns it into device-efficient work:
    collapse onto one job whose response is fanned out (request collapsing,
    the concurrent analogue of a cache hit).  Plan homogeneity — the
    restriction ``DistributedEngine.plan_batch`` exposes to callers — is an
-   internal bucketing detail here.
+   internal bucketing detail here.  Starting capacities are data-informed:
+   the capacity planner (``core/capacity.py``) serves the high-water mark
+   last observed for the query (pod-shared, epoch-tagged) or the degree
+   oracle's bound for cold plans, so warm loads never climb the 4x ladder.
 2. **Pad** — each bucket is cut into waves of at most ``lanes`` jobs; a
    wave runs at the smallest power-of-two lane width that fits it and is
    padded with no-op lanes (empty seed table, zero constants), so the
    compiled step set stays small (one per width) without 16-wide padding
    of a single huge-capacity retry.
 3. **Dispatch** — a wave executes unit-by-unit through the shared batch
-   step factory (``distributed.make_batch_step``), and the factory is
-   instantiated *per wave*: a scheduler built with a device ``mesh``
-   routes waves wide enough to span the mesh's lane slots through the
-   replicated-store ``shard_map`` step (``mesh=..., data_axis=None`` —
-   one wave lane per device), while narrow waves (and every wave of a
-   mesh-less scheduler) take the single-host ``jit(vmap(...))`` step.
-   Both lowerings run the same per-lane evaluator on the full store, so
-   the choice is pure scheduling — results stay byte-identical either
-   way.  Unit steps are jit-cached by unit structure (and mesh), so
-   buckets with different query signatures still share compilations of
-   their common stars.
-4. **Cache** — between unit steps the scheduler canonicalizes every lane's
-   seeded request (``server.unit_request_key``, tagged with the store
-   epoch) and consults the pod-shared star-fragment cache
-   (``core/fragcache.py``): frequency-aware admission over LRU eviction,
-   with empty fragments in a negative side table.  A wave whose active
-   lanes all hit skips the device step entirely and replays host-side;
-   misses are recorded as replayable deltas.  Exact per-query savings
-   land in ``QueryStats`` (``cache_hits``/``cache_misses``/
-   ``nrs_saved``/``ntb_saved``).  One cache instance may be shared by
-   any number of schedulers (``DistributedEngine.pod_cache``); a store
-   mutation bumps ``TripleStore.epoch`` and stale fragments invalidate
-   lazily.
+   step factory (``distributed.make_batch_step`` via ``core/stepper.py``),
+   and the factory is instantiated *per wave*: a scheduler built with a
+   device ``mesh`` routes waves wide enough to span the mesh's lane slots
+   through the replicated-store ``shard_map`` step (``mesh=...,
+   data_axis=None`` — one wave lane per device), while narrow waves (and
+   every wave of a mesh-less scheduler) take the single-host
+   ``jit(vmap(...))`` step.  Both lowerings run the same per-lane
+   evaluator on the full store, so the choice is pure scheduling — results
+   stay byte-identical either way.  Unit steps are jit-cached by unit
+   structure (and mesh), so buckets with different query signatures still
+   share compilations of their common stars.  Wave state stays
+   device-resident between steps: per unit only per-lane digests, counts
+   and flags cross to the host.
+4. **Cache** — between unit steps the scheduler fingerprints every lane's
+   seeded request *on device* (``kops.fingerprint_rows`` over the valid
+   prefix of the unit's read columns) and consults the pod-shared
+   star-fragment cache (``core/fragcache.py``) with the digest-form key
+   (``server.unit_digest_key``, tagged with the store epoch): the Omega
+   block itself never round-trips to the host just to be hashed into a
+   key.  Host arrays materialise only when actually needed — a wave whose
+   active lanes all hit pulls its state once and replays host-side
+   (skipping the device step entirely); a miss pulls just that lane's
+   output prefix to record the replayable delta.  Admission is
+   frequency-aware over a constant-space count-min sketch, with empty
+   fragments in a negative side table.  Exact per-query savings land in
+   ``QueryStats`` (``cache_hits``/``cache_misses``/``nrs_saved``/
+   ``ntb_saved``).  One cache instance may be shared by any number of
+   schedulers (``DistributedEngine.pod_cache``); a store mutation bumps
+   ``TripleStore.epoch`` and stale fragments are swept on the next drain.
 
 Provenance: unit steps carry an extra int32 table column seeded with the
 row index, so the scheduler can read each output row's source row off the
 result — that is what makes computed fragments replayable as deltas
 without re-deriving join provenance on the host.
 
-Capacity overflow retries the affected *queries* (not the whole wave) at
-4x capacity, re-bucketed under the larger cap — the same ladder as
-``QueryEngine.run``, so results stay byte-identical to the serial path.
-Stats match the serial engine's exactly on the gross fields (the host
-accounting below mirrors ``engine._execute``; drift is pinned down by
-tests comparing full ``QueryStats`` across both paths).
+Capacity overflow is *resumable*: when a lane overflows at unit k, only
+that query is requeued — re-bucketed under ``(signature, 4x cap, unit k)``
+with the checkpointed pre-step table as its seed and its cost account
+carried over, so units 0..k-1 are never re-executed (the blind
+re-run-everything ladder survives only as what a retried wave would have
+recomputed anyway).  Results stay byte-identical to the serial path: a
+non-overflowing unit's valid rows and cost account are independent of the
+capacity (and seed capacity) it ran at.  Stats match the serial engine's
+exactly on the gross fields (``stepper.unit_cost`` mirrors
+``engine._execute``; drift is pinned down by tests comparing full
+``QueryStats`` across both paths).
 """
 
 from __future__ import annotations
@@ -59,19 +73,20 @@ from __future__ import annotations
 import math
 from collections import OrderedDict
 from dataclasses import dataclass, replace
-from typing import Callable, Iterable, NamedTuple
+from typing import Iterable, NamedTuple
 
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
+from repro.core import stepper
 from repro.core.bindings import BindingTable
-from repro.core.distributed import make_batch_step
+from repro.core.capacity import CapacityPlanner
 from repro.core.engine import EngineConfig, QueryPlan, QueryStats, plan_query
 from repro.core.fragcache import FragmentCache, FragmentEntry, replay
 from repro.core.patterns import BGP
-from repro.core.server import UnitPlan, eval_unit, unit_io, unit_request_key
-from repro.kernels import ops as kops
+from repro.core.server import unit_digest_key, unit_io
+from repro.kernels import ref as kref
 from repro.rdf.store import TripleStore
 
 
@@ -86,9 +101,11 @@ class SchedulerConfig:
     # collapse identical in-flight (signature, constants) requests onto one
     # lane; their shared response counts as cache-served for the duplicates
     collapse_duplicates: bool = True
-    # remember each query's final capacity: re-submissions start there
-    # instead of re-climbing the 4x ladder (results are byte-identical —
-    # the serial path's returned table/stats also come from the final rung)
+    # start jobs at planner-informed capacities (HWM or degree oracle when
+    # the engine config enables the planner; the legacy per-scheduler
+    # final-cap memo otherwise) instead of cfg.cap — re-submissions jump
+    # straight to the last observed rung (results are byte-identical: the
+    # serial path's returned table/stats also come from the final rung)
     cap_hints: bool = True
 
 
@@ -100,12 +117,23 @@ class Request(NamedTuple):
 
 @dataclass
 class _Job:
-    """One distinct query execution: a lane's worth of work at one cap."""
+    """One distinct query execution: a lane's worth of work at one cap.
+
+    A resumable overflow retry re-enters at ``resume_k`` with ``seed`` (the
+    checkpointed valid-prefix rows of the overflowed unit's input) and the
+    cost account ``acc`` accumulated over units 0..resume_k-1.
+    """
 
     plan: QueryPlan
     consts: tuple[int, ...]
     cap: int
     rids: list[int]
+    resume_k: int = 0
+    seed: np.ndarray | None = None
+    acc: "_LaneAcc | None" = None
+    # largest true per-unit peak row count seen so far (carried across
+    # resume retries) — what observe_query records as the query's need
+    peak_seen: int = 1
 
 
 @dataclass
@@ -118,7 +146,7 @@ class SchedMetrics:
     steps_skipped: int = 0  # unit-steps fully served by the cache
     lane_steps: int = 0  # lanes x dispatched steps (incl. padding)
     active_lane_steps: int = 0  # non-padding lanes among those
-    retries: int = 0  # jobs requeued at 4x cap
+    retries: int = 0  # jobs requeued (resumably) at 4x cap
 
     @property
     def occupancy(self) -> float:
@@ -140,98 +168,9 @@ def interleave_clients(queries: list[BGP], n_clients: int
     return [(c, q) for q in queries for c in range(n_clients)]
 
 
-# --------------------------------------------------------------------------
-# unit-step compilation cache (module-level: shared across scheduler
-# instances, so engine.run_load creating a scheduler per call stays warm)
-# --------------------------------------------------------------------------
-
-_STEP_CACHE: dict[tuple, Callable] = {}
-
-
-def _unit_step(up: UnitPlan, radix: int, mesh: Mesh | None = None,
-               lane_axes: tuple[str, ...] = ()):
-    """Jitted one-unit step, cached by the unit's trace statics.
-
-    The key holds everything ``eval_unit`` bakes into the trace (branch
-    cases, const-vector indices, var columns) plus the dispatch-layer
-    FORCE setting read at trace time and the mesh the step lowers onto
-    (``None`` for the single-host vmap step); array shapes (cap, n_vars,
-    lanes) retrace within one cached step naturally.  ``est_card`` is
-    planning metadata and deliberately excluded — same-shaped units from
-    different queries share one compilation.
-
-    The mesh instantiation replicates the store (``data_axis=None``) and
-    splits the wave's lanes across ``lane_axes``, so a lane computes the
-    same integer arithmetic it would under vmap — byte-identical outputs,
-    different device placement.
-    """
-    key = (tuple((b.case, b.pred_ci, b.subj_src, b.obj_src)
-                 for b in up.branches), radix, kops.FORCE, mesh, lane_axes)
-    step = _STEP_CACHE.get(key)
-    if step is None:
-        def lane_fn(dev, const_vec, rows, valid, overflow):
-            cap = rows.shape[0]
-            prov = jnp.arange(cap, dtype=jnp.int32)[:, None]
-            table = BindingTable(jnp.concatenate([rows, prov], axis=1),
-                                 valid, overflow)
-            table, ops = eval_unit(dev, radix, up, const_vec, table)
-            return (table.rows[:, :-1], table.valid, table.overflow,
-                    table.rows[:, -1], ops)
-
-        if mesh is None:
-            step = make_batch_step(lane_fn)
-        else:
-            step = make_batch_step(lane_fn, out_proto=(0, 0, 0, 0, 0),
-                                   mesh=mesh, data_axis=None,
-                                   lane_axes=lane_axes)
-        _STEP_CACHE[key] = step
-    return step
-
-
-# --------------------------------------------------------------------------
-# host twin of engine._execute's per-unit cost accounting
-# --------------------------------------------------------------------------
-
-def _unit_cost(cfg: EngineConfig, k: int, up: UnitPlan, in_count: int,
-               out_count: int, ops: int, logn: int
-               ) -> tuple[int, int, int, int]:
-    """(nrs, ntb, server_ops, client_ops) deltas for one unit, in ints.
-
-    Mirrors the traced accounting in ``engine._execute`` exactly; the
-    scheduler/serial stats-parity tests pin the two together.
-    """
-    tb = cfg.term_bytes
-    matched = out_count * up.n_triple_patterns
-    if cfg.interface == "endpoint":
-        return 0, 0, ops, 0
-    meta = 1
-    if cfg.interface == "tpf":
-        blocks = max(in_count, 1) if k > 0 else 1
-    else:  # brtpf / spf: Omega-blocked requests
-        blocks = -(-max(in_count, 1) // cfg.omega) if k > 0 else 1
-    pages = -(-max(out_count, 1) // cfg.page_size)
-    extra = max(pages - blocks, 0)
-    nrs_d = meta + blocks + extra
-    sent = (blocks + meta + extra) * cfg.request_base_bytes
-    if cfg.interface in ("brtpf", "spf") and k > 0:
-        n_bound_vars = len(
-            {v for b in up.branches for src in (b.subj_src, b.obj_src)
-             if src[0] == "var" for v in [src[1]]})
-        sent += in_count * max(n_bound_vars, 1) * tb
-    recv = matched * 3 * tb + (pages + meta) * cfg.page_header_bytes
-    ntb_d = sent + recv
-    if cfg.interface == "tpf":
-        server_d = blocks * 2 * logn + matched
-        client_d = ops
-    else:
-        server_d = ops
-        client_d = out_count
-    return nrs_d, ntb_d, server_d, client_d
-
-
 @dataclass
 class _LaneAcc:
-    """Per-lane stats accumulator for one wave pass."""
+    """Per-lane stats accumulator, carried across resume retries."""
 
     nrs: int = 0
     ntb: int = 0
@@ -252,9 +191,10 @@ class QueryScheduler:
 
     ``run_queries`` is the drop-in for ``QueryEngine.run_load``; ``submit``
     + ``drain`` expose the request-stream form for simulated-client loads.
-    One scheduler owns one store + engine config; the fragment cache can be
-    shared across schedulers by passing it in (the pod-shared cache —
-    ``DistributedEngine.pod_cache`` does exactly this).
+    One scheduler owns one store + engine config; the fragment cache and
+    the capacity planner can be shared across schedulers by passing them
+    in (the pod-shared instances — ``DistributedEngine.pod_cache`` /
+    ``pod_planner`` do exactly this).
 
     ``mesh`` opts waves into distributed dispatch: every mesh axis becomes
     lane slots (store replicated per device), and ``_run_wave`` picks the
@@ -268,12 +208,15 @@ class QueryScheduler:
     def __init__(self, store: TripleStore, cfg: EngineConfig,
                  scfg: SchedulerConfig | None = None,
                  cache: FragmentCache | None = None,
-                 mesh: Mesh | None = None):
+                 mesh: Mesh | None = None,
+                 planner: CapacityPlanner | None = None):
         self.store = store
         self.cfg = cfg
         self.scfg = scfg or SchedulerConfig()
         self.cache = cache if cache is not None else \
             FragmentCache(capacity=self.scfg.cache_entries)
+        self.planner = planner if planner is not None \
+            else CapacityPlanner(store, cfg)
         self.mesh = mesh
         if mesh is not None:
             self._lane_axes = tuple(mesh.axis_names)
@@ -289,7 +232,7 @@ class QueryScheduler:
             self._mesh_slots = 0
         self.metrics = SchedMetrics()
         self._plan_memo: dict[BGP, QueryPlan] = {}
-        self._cap_hints: dict[tuple, int] = {}
+        self._cap_hints: dict[tuple, int] = {}  # legacy memo (planner off)
         self._pending: list[Request] = []
         self._next_rid = 0
         n = store.n_triples
@@ -326,20 +269,29 @@ class QueryScheduler:
             self._plan_memo[query] = plan
         return plan
 
+    def _start_cap(self, plan: QueryPlan, jkey: tuple) -> int:
+        if not self.scfg.cap_hints:
+            return self.cfg.cap
+        if self.cfg.capacity_planner:
+            return self.planner.query_cap(plan)
+        return self._cap_hints.get(jkey, self.cfg.cap)
+
     # ---------------------------------------------------------------- drain
     def drain(self) -> dict[int, tuple[BindingTable, QueryStats]]:
         """Execute all pending requests; returns {rid: (table, stats)}."""
         requests, self._pending = self._pending, []
         results: dict[int, tuple[BindingTable, QueryStats]] = {}
 
-        # store mutated since the cache last swept: drop stale fragments
-        # now (keys are epoch-tagged, so they could never alias — this
-        # just reclaims their memory eagerly instead of waiting on LRU
-        # churn; the sweep state lives on the pod-shared cache so fresh
-        # schedulers still trigger it)
+        # store mutated since the cache/planner last swept: drop stale
+        # fragments and high-water marks now (keys are epoch-tagged, so
+        # they could never alias — this just reclaims their memory eagerly
+        # instead of waiting on LRU churn; the sweep state lives on the
+        # pod-shared objects so fresh schedulers still trigger it)
         self.cache.sync_epoch(self.store.epoch)
+        self.planner.sync_epoch(self.store.epoch)
 
-        # bucket by (signature, cap); collapse identical in-flight queries
+        # bucket by (signature, cap, resume unit); collapse identical
+        # in-flight queries
         buckets: OrderedDict[tuple, list[_Job]] = OrderedDict()
         job_of: dict[tuple, _Job] = {}
         for req in requests:
@@ -347,41 +299,48 @@ class QueryScheduler:
             jkey = (plan.signature, plan.consts)
             job = job_of.get(jkey) if self.scfg.collapse_duplicates else None
             if job is None:
-                cap = self._cap_hints.get(jkey, self.cfg.cap) \
-                    if self.scfg.cap_hints else self.cfg.cap
+                cap = self._start_cap(plan, jkey)
                 job = _Job(plan, plan.consts, cap, [req.rid])
                 job_of[jkey] = job
-                buckets.setdefault((plan.signature, job.cap), []).append(job)
+                buckets.setdefault((plan.signature, job.cap, 0), []).append(job)
                 self.metrics.jobs += 1
             else:
                 job.rids.append(req.rid)
 
         while buckets:
-            (sig, cap), jobs = buckets.popitem(last=False)
+            (sig, cap, k0), jobs = buckets.popitem(last=False)
             lanes = self.scfg.lanes
             for i in range(0, len(jobs), lanes):
                 wave = jobs[i:i + lanes]
                 retries = self._run_wave(wave, results)
                 for job in retries:
-                    buckets.setdefault((sig, job.cap), []).append(job)
+                    buckets.setdefault((sig, job.cap, job.resume_k),
+                                       []).append(job)
         return results
 
     # ----------------------------------------------------------------- wave
     def _run_wave(self, jobs: list[_Job],
                   results: dict[int, tuple[BindingTable, QueryStats]]
                   ) -> list[_Job]:
-        """Run one padded wave of same-signature, same-cap jobs through the
-        per-unit stepped batch path.  Completed jobs land in ``results``;
-        overflowed ones come back as 4x-cap retry jobs.
+        """Run one padded wave of same-signature, same-cap, same-resume-unit
+        jobs through the per-unit stepped batch path.  Completed jobs land
+        in ``results``; overflowed ones come back as resumable 4x-cap retry
+        jobs seeded at the failing unit.
 
         Wide waves span the mesh: with a mesh attached and the wave width
         covering the lane-slot count, unit steps dispatch through the
         replicated-store shard_map step (one lane per device); otherwise
         the single-host vmap step runs.  The pick is per wave, so one
         bucket can mix both (e.g. a wide first pass and a 1-job overflow
-        retry)."""
+        retry).
+
+        Wave state lives on the device between steps and moves to the host
+        only when an all-hit unit replays there (or at finalize); the
+        cache phase ships 16-byte digests per lane, not Omega blocks.
+        """
         scfg = self.scfg
         plan, cap = jobs[0].plan, jobs[0].cap
+        k0 = jobs[0].resume_k
         n_active = len(jobs)
         B = 1  # smallest power-of-two width that fits, capped at scfg.lanes
         while B < min(n_active, scfg.lanes):
@@ -394,35 +353,75 @@ class QueryScheduler:
             # multiple instead (the extra lanes are no-op padding)
             B = -(-B // self._mesh_slots) * self._mesh_slots
         V = max(plan.n_vars, 1)
-        active = range(n_active)
         epoch = self.store.epoch
+        dev = self.store.device
 
         consts = np.zeros((B, max(len(plan.consts), 1)), np.int64)
         for j, job in enumerate(jobs):
             consts[j, :len(job.consts)] = job.consts
         consts_dev = jnp.asarray(consts[:, :len(plan.consts)]) \
             if plan.consts else jnp.zeros((B, 0), jnp.int64)
-        rows = np.full((B, cap, V), -1, np.int32)
-        valid = np.zeros((B, cap), bool)
-        valid[:n_active, 0] = True  # no-op padding lanes stay all-invalid
+
+        rows_h = np.full((B, cap, V), -1, np.int32)
+        valid_h = np.zeros((B, cap), bool)
+        counts = [0] * B
+        for j, job in enumerate(jobs):
+            if job.seed is None:
+                valid_h[j, 0] = True  # fresh job: the all-unbound seed row
+                counts[j] = 1
+            else:  # resume: the checkpointed valid prefix
+                m = job.seed.shape[0]
+                rows_h[j, :m] = job.seed
+                valid_h[j, :m] = True
+                counts[j] = m
         ovf = np.zeros((B,), bool)
-        acc = [_LaneAcc() for _ in active]
-        dev = self.store.device
+        acc = [job.acc if job.acc is not None else _LaneAcc()
+               for job in jobs]
         self.metrics.waves += 1
 
-        for k, up in enumerate(plan.units):
-            io = unit_io(up)
-            n_in = [int(valid[j].sum()) for j in active]
+        # state location: device arrays between steps; host arrays while a
+        # run of all-hit units replays without touching the device
+        rows_d = jnp.asarray(rows_h)
+        valid_d = jnp.asarray(valid_h)
+        on_host = False
 
-            # --- cache phase: canonicalize, look up, collapse in-wave -----
+        retired: set[int] = set()
+        retries: list[_Job] = []
+
+        def _retire(j: int, k: int, seed: np.ndarray) -> None:
+            job = jobs[j]
+            retries.append(_Job(job.plan, job.consts,
+                                min(cap * 4, self.cfg.max_cap), job.rids,
+                                resume_k=k, seed=seed, acc=acc[j],
+                                peak_seen=job.peak_seen))
+            retired.add(j)
+            self.metrics.retries += 1
+
+        for k in range(k0, len(plan.units)):
+            up = plan.units[k]
+            io = unit_io(up)
+            active = [j for j in range(n_active) if j not in retired]
+            if not active:
+                break
+            n_in = {j: counts[j] for j in active}
+
+            # --- cache phase: digest-first canonicalization ---------------
             status: dict[int, tuple[str, object]] = {}
             keys: dict[int, tuple] = {}
             if scfg.use_cache:
+                if on_host:
+                    digs = {j: kref.fingerprint_prefix_np(
+                        rows_h[j, :n_in[j]][:, list(io.read_cols)])
+                        for j in active}
+                else:
+                    d = np.asarray(
+                        stepper.digest_step(io.read_cols)(rows_d, valid_d))
+                    digs = {j: tuple(int(x) for x in d[j]) for j in active}
                 first_of: dict[tuple, int] = {}
                 for j in active:
                     cvals = tuple(int(consts[j, i]) for i in io.const_idx)
-                    block = rows[j, :n_in[j]][:, list(io.read_cols)]
-                    key = unit_request_key(io, cvals, block, cap, epoch)
+                    key = unit_digest_key(io, cvals, cap, epoch, n_in[j],
+                                          digs[j])
                     keys[j] = key
                     if key in first_of:
                         status[j] = ("shared", first_of[key])
@@ -440,57 +439,93 @@ class QueryScheduler:
             need_step = any(s == "miss" for s, _ in status.values())
             ops_lane: dict[int, int] = {}
             if need_step:
+                if on_host:
+                    rows_d = jnp.asarray(rows_h)
+                    valid_d = jnp.asarray(valid_h)
+                    on_host = False
                 if use_mesh:
-                    step = _unit_step(up, self.store.radix, self.mesh,
-                                      self._lane_axes)
+                    step = stepper.unit_step(up, self.store.radix, self.mesh,
+                                             self._lane_axes)
                     self.metrics.mesh_steps += 1
                 else:
-                    step = _unit_step(up, self.store.radix)
-                r_o, v_o, o_o, src_o, ops_o = step(
-                    dev, consts_dev, jnp.asarray(rows), jnp.asarray(valid),
-                    jnp.asarray(ovf))
-                # np.array (copy), not np.asarray: device outputs surface as
-                # read-only views on CPU, and a later all-hit unit's replay
-                # writes into these buffers in place
-                r_o = np.array(r_o)
-                v_o = np.array(v_o)
-                o_o = np.array(o_o)
-                src_o = np.asarray(src_o)
-                ops_o = np.asarray(ops_o)
+                    step = stepper.unit_step(up, self.store.radix)
+                r_o, v_o, o_o, src_o, ops_o, cnt_o, peak_o = step(
+                    dev, consts_dev, rows_d, valid_d, jnp.asarray(ovf))
+                ops_np = np.asarray(ops_o)
+                cnt_np = np.asarray(cnt_o)
+                ovf_np = np.asarray(o_o)
+                peak_np = np.asarray(peak_o)
                 self.metrics.steps += 1
                 self.metrics.lane_steps += B
-                self.metrics.active_lane_steps += n_active
+                self.metrics.active_lane_steps += len(active)
                 for j in active:
-                    ops_lane[j] = int(ops_o[j])
+                    ops_lane[j] = int(ops_np[j])
+                    if bool(ovf_np[j]) and not bool(ovf[j]) \
+                            and cap < self.cfg.max_cap:
+                        # resumable overflow: checkpoint this unit's input
+                        # prefix (still the pre-step device state) and
+                        # requeue at 4x — units 0..k-1 are never re-run
+                        _retire(j, k, np.asarray(rows_d[j, :n_in[j]]))
+                        continue
                     if status[j][0] == "miss" and scfg.use_cache \
                             and not bool(ovf[j]):
-                        n_out = int(v_o[j].sum())
+                        # miss that needs insertion: pull only this lane's
+                        # output prefix to record the replayable delta
+                        n_out = int(cnt_np[j])
+                        out_rows = np.asarray(r_o[j, :n_out])
                         entry = FragmentEntry(
-                            src_row=np.ascontiguousarray(src_o[j, :n_out]),
+                            src_row=np.ascontiguousarray(
+                                np.asarray(src_o[j, :n_out])),
                             written=np.ascontiguousarray(
-                                r_o[j, :n_out][:, list(io.write_cols)]),
-                            overflow=bool(o_o[j]),
-                            ops=int(ops_o[j]),
+                                out_rows[:, list(io.write_cols)]),
+                            overflow=bool(ovf_np[j]),
+                            ops=int(ops_np[j]),
                             epoch=epoch,
+                            peak=int(peak_np[j]),
                         )
                         self.cache.put(keys[j], entry, epoch)
-                rows, valid, ovf = r_o, v_o, o_o
+                rows_d, valid_d = r_o, v_o
+                ovf = np.array(ovf_np)
+                for j in active:
+                    if j not in retired:
+                        counts[j] = int(cnt_np[j])
+                        jobs[j].peak_seen = max(jobs[j].peak_seen,
+                                                int(peak_np[j]), n_in[j])
             else:
                 # every active lane hit: replay host-side, skip the device
                 self.metrics.steps_skipped += 1
+                if not on_host:
+                    # a hit that needs replay: materialise the wave state
+                    # once (np.array: writable copies — replay writes into
+                    # these buffers in place across subsequent units)
+                    rows_h = np.array(rows_d)
+                    valid_h = np.array(valid_d)
+                    on_host = True
                 for j in active:
                     entry = status[j][1]
+                    if isinstance(entry, int):  # shared alias of a hit lane
+                        entry = status[entry][1]
                     assert isinstance(entry, FragmentEntry)
-                    rows[j], valid[j] = replay(
-                        entry, rows[j, :n_in[j]], cap, V, io.write_cols)
+                    if entry.overflow and not bool(ovf[j]) \
+                            and cap < self.cfg.max_cap:
+                        # the cached unit overflowed at this cap: resume
+                        # from the (host) checkpoint like a computed one
+                        _retire(j, k, rows_h[j, :n_in[j]].copy())
+                        continue
+                    rows_h[j], valid_h[j] = replay(
+                        entry, rows_h[j, :n_in[j]], cap, V, io.write_cols)
                     ovf[j] = bool(ovf[j]) | entry.overflow
+                    counts[j] = entry.n_out
                     ops_lane[j] = entry.ops
+                    jobs[j].peak_seen = max(jobs[j].peak_seen, entry.peak,
+                                            n_in[j])
 
             # --- host stats accounting (twin of engine._execute) ----------
             for j in active:
-                out_count = int(valid[j].sum())
-                nrs_d, ntb_d, server_d, client_d = _unit_cost(
-                    self.cfg, k, up, n_in[j], out_count, ops_lane[j],
+                if j in retired:
+                    continue
+                nrs_d, ntb_d, server_d, client_d = stepper.unit_cost(
+                    self.cfg, k, up, n_in[j], counts[j], ops_lane[j],
                     self._logn)
                 a = acc[j]
                 a.nrs += nrs_d
@@ -505,30 +540,35 @@ class QueryScheduler:
                     a.ntb_saved += ntb_d
 
         # --------------------------------------------------------- finalize
-        retries: list[_Job] = []
+        if not on_host:
+            rows_h = np.asarray(rows_d)
+            valid_h = np.asarray(valid_d)
         for j, job in enumerate(jobs):
-            if bool(ovf[j]) and job.cap < self.cfg.max_cap:
-                retries.append(_Job(job.plan, job.consts, job.cap * 4,
-                                    job.rids))
-                self.metrics.retries += 1
+            if j in retired:
                 continue
-            if self.scfg.cap_hints and job.cap != self.cfg.cap:
-                self._cap_hints[(job.plan.signature, job.consts)] = job.cap
+            if self.scfg.cap_hints:
+                if self.cfg.capacity_planner:
+                    # record the query's true need (largest per-unit peak),
+                    # not the cap it ran at — warm resubmissions then get
+                    # right-sized tables even where the oracle overshot
+                    self.planner.observe_query(
+                        job.plan, self.cfg.max_cap if bool(ovf[j])
+                        else self.planner.snug(job.peak_seen))
+                elif job.cap != self.cfg.cap:
+                    self._cap_hints[(job.plan.signature, job.consts)] = job.cap
             a = acc[j]
-            n_results = int(valid[j].sum())
+            n_results = counts[j]
             nrs, ntb = a.nrs, a.ntb
             if self.cfg.interface == "endpoint":
-                nrs = 1
-                ntb = (self.cfg.request_base_bytes
-                       + n_results * plan.n_vars * self.cfg.term_bytes
-                       + self.cfg.page_header_bytes)
+                nrs, ntb = stepper.endpoint_totals(self.cfg, n_results,
+                                                   plan.n_vars)
                 if plan.units and a.hits == len(plan.units):
                     # whole query served from cache: the one endpoint
                     # request never reaches the server
                     a.nrs_saved, a.ntb_saved = nrs, ntb
                 else:
                     a.nrs_saved = a.ntb_saved = 0
-            table = BindingTable(rows[j].copy(), valid[j].copy(),
+            table = BindingTable(rows_h[j].copy(), valid_h[j].copy(),
                                  np.bool_(ovf[j]))
             stats = QueryStats(
                 nrs=nrs, ntb=ntb, server_ops=a.server, client_ops=a.client,

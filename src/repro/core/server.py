@@ -358,6 +358,27 @@ def unit_request_key(io: UnitIO, const_vals: tuple[int, ...],
             block.tobytes())
 
 
+def unit_digest_key(io: UnitIO, const_vals: tuple[int, ...], cap: int,
+                    epoch: int, n_in: int,
+                    digest: tuple[int, int, int, int]) -> tuple:
+    """Digest form of ``unit_request_key``: the Omega block represented by
+    its on-device fingerprint instead of its raw bytes.
+
+    ``digest`` is ``kops.fingerprint_rows`` over the valid prefix of the
+    block's read columns (or ``ref.fingerprint_prefix_np`` of the same
+    prefix on host-replayed state — bit-identical by construction), and
+    ``n_in`` the prefix length.  The scheduler keys the fragment cache
+    with this form so a unit step ships 16 bytes per lane to the host
+    instead of the whole Omega block.  The ``"fp32x4"`` tag keeps the two
+    key forms structurally disjoint — a digest key can never alias a
+    byte key that happens to contain the same integers.  Collision risk
+    across distinct blocks is that of a 128-bit hash (~2^-64 per pair),
+    far below any operational concern.
+    """
+    return (io.canon_sig, const_vals, cap, epoch, int(n_in),
+            ("fp32x4", tuple(int(x) for x in digest)))
+
+
 BRANCH_EVALUATORS: dict[str, BranchEvaluator] = {
     "probe_oconst": probe_filter,
     "probe_ovar_bound": probe_filter,
@@ -371,11 +392,18 @@ BRANCH_EVALUATORS: dict[str, BranchEvaluator] = {
 def eval_unit(dev: StoreArrays, radix: int, plan: UnitPlan,
               const_vec: jnp.ndarray, table: BindingTable,
               owner: tuple[jnp.ndarray, int] | None = None
-              ) -> tuple[BindingTable, jnp.ndarray]:
-    """Evaluate one unit seeded with ``table``; returns (table, ops).
+              ) -> tuple[BindingTable, jnp.ndarray, jnp.ndarray]:
+    """Evaluate one unit seeded with ``table``; returns (table, ops, peak).
 
     ``ops`` counts probe/expansion work (device scalar) — the server/client
     load accounting uses it.  Log-factors of binary searches are folded in.
+
+    ``peak`` is the max row count at any branch boundary, input included —
+    on a non-overflowing evaluation this is exactly the capacity the unit
+    *needed* (an expansion's post-branch count equals its unclamped total
+    when it fits), which is what the capacity planner records as the
+    unit's high-water mark (``core/capacity.py``).  On an overflowed
+    evaluation it is clamped at the capacity and unused.
 
     ``owner`` is the distributed runtime's ``(my_shard, n_shards)``: on a
     subject-hash sharded store only bound-subject (probe-first) units are
@@ -388,7 +416,9 @@ def eval_unit(dev: StoreArrays, radix: int, plan: UnitPlan,
         owner = None
     ctx = EvalCtx(dev, radix, const_vec, logn, owner)
     ops_total = jnp.int64(0)
+    peak = table.count()
     for b in plan.branches:
         table, delta = BRANCH_EVALUATORS[b.case](ctx, b, table)
         ops_total = ops_total + delta
-    return table, ops_total
+        peak = jnp.maximum(peak, table.count())
+    return table, ops_total, peak

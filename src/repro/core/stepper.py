@@ -1,0 +1,200 @@
+"""Shared unit-stepped execution machinery (engine ladder + scheduler waves).
+
+PR 2 gave the scheduler a per-unit stepped execution path built on
+``distributed.make_batch_step``; PR 4's resumable overflow gives the serial
+engine one too (``QueryEngine.run`` re-enters at the overflowed unit instead
+of re-running the whole query), so the step factories, their module-level
+compile cache and the host twin of the traced cost accounting now live here
+where both can reach them without an import cycle (this module imports
+``distributed`` which imports ``engine``; ``engine`` imports this module
+lazily at call time).
+
+Contents:
+
+- ``unit_step``        — the scheduler's wave step: per-lane seeded unit
+  evaluation with a provenance column (src-row extraction for replayable
+  cache deltas) returning per-lane ``(rows, valid, overflow, src, ops,
+  count)``; vmap on one host, replicated-store shard_map across mesh lanes.
+- ``serial_unit_step`` — the engine's ladder step: same evaluation without
+  the provenance column (serial ``run`` never inserts into the cache).
+- ``digest_step``      — jitted wave fingerprinting: gathers a unit's read
+  columns and hashes every lane's valid prefix on device
+  (``kops.fingerprint_rows``), so the fragment cache is consulted with a
+  16-byte digest per lane instead of a host round trip of the Omega block.
+- ``reseat``           — capacity regrow/shrink of a compacted table
+  (resumable overflow grows exactly one unit's table; the valid prefix is
+  preserved, the new tail is UNBOUND-filled).
+- ``unit_cost``        — host twin of ``engine._execute``'s per-unit cost
+  accounting, shared by the scheduler and the planned serial path (drift
+  is pinned by the scheduler/serial stats-parity tests).
+
+All step caches key on trace statics including ``kops.FORCE`` (read at
+trace time) and, for wave steps, the mesh — shapes retrace within one
+cached entry naturally.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.core.bindings import BindingTable
+from repro.core.distributed import make_batch_step
+from repro.core.server import UnitPlan, eval_unit
+from repro.kernels import ops as kops
+
+_STEP_CACHE: dict[tuple, Callable] = {}
+
+
+def _branch_statics(up: UnitPlan) -> tuple:
+    return tuple((b.case, b.pred_ci, b.subj_src, b.obj_src)
+                 for b in up.branches)
+
+
+def unit_step(up: UnitPlan, radix: int, mesh: Mesh | None = None,
+              lane_axes: tuple[str, ...] = ()):
+    """Jitted one-unit wave step, cached by the unit's trace statics.
+
+    The key holds everything ``eval_unit`` bakes into the trace (branch
+    cases, const-vector indices, var columns) plus the dispatch-layer
+    FORCE setting read at trace time and the mesh the step lowers onto
+    (``None`` for the single-host vmap step); array shapes (cap, n_vars,
+    lanes) retrace within one cached step naturally.  ``est_card`` is
+    planning metadata and deliberately excluded — same-shaped units from
+    different queries share one compilation.
+
+    The mesh instantiation replicates the store (``data_axis=None``) and
+    splits the wave's lanes across ``lane_axes``, so a lane computes the
+    same integer arithmetic it would under vmap — byte-identical outputs,
+    different device placement.
+    """
+    key = ("wave", _branch_statics(up), radix, kops.FORCE, mesh, lane_axes)
+    step = _STEP_CACHE.get(key)
+    if step is None:
+        def lane_fn(dev, const_vec, rows, valid, overflow):
+            cap = rows.shape[0]
+            prov = jnp.arange(cap, dtype=jnp.int32)[:, None]
+            table = BindingTable(jnp.concatenate([rows, prov], axis=1),
+                                 valid, overflow)
+            table, ops, peak = eval_unit(dev, radix, up, const_vec, table)
+            return (table.rows[:, :-1], table.valid, table.overflow,
+                    table.rows[:, -1], ops,
+                    jnp.sum(table.valid.astype(jnp.int64)), peak)
+
+        if mesh is None:
+            step = make_batch_step(lane_fn)
+        else:
+            step = make_batch_step(lane_fn, out_proto=(0,) * 7,
+                                   mesh=mesh, data_axis=None,
+                                   lane_axes=lane_axes)
+        _STEP_CACHE[key] = step
+    return step
+
+
+def serial_unit_step(up: UnitPlan, radix: int):
+    """The serial engine's ladder step: ``unit_step`` without the
+    provenance column (``run`` checkpoints tables, not cache deltas).
+    Batched with a leading lane axis like every ``make_batch_step``
+    product — the engine passes a width-1 batch."""
+    key = ("serial", _branch_statics(up), radix, kops.FORCE)
+    step = _STEP_CACHE.get(key)
+    if step is None:
+        def lane_fn(dev, const_vec, rows, valid, overflow):
+            table, ops, peak = eval_unit(dev, radix, up, const_vec,
+                                         BindingTable(rows, valid, overflow))
+            return (table.rows, table.valid, table.overflow, ops,
+                    jnp.sum(table.valid.astype(jnp.int64)), peak)
+
+        step = make_batch_step(lane_fn)
+        _STEP_CACHE[key] = step
+    return step
+
+
+def digest_step(read_cols: tuple[int, ...]):
+    """Jitted wave fingerprint: ``(rows[B, cap, V], valid[B, cap]) ->
+    uint32[B, 4]`` digests of each lane's valid prefix restricted to
+    ``read_cols`` — the device half of the digest-first cache keys
+    (host twin: ``ref.fingerprint_prefix_np`` on replayed state)."""
+    key = ("digest", read_cols, kops.FORCE)
+    fn = _STEP_CACHE.get(key)
+    if fn is None:
+        cols = jnp.asarray(read_cols, jnp.int32) if read_cols else None
+
+        @jax.jit
+        def fn(rows, valid):
+            block = jnp.take(rows, cols, axis=2) if cols is not None \
+                else rows[:, :, :0]
+            return jax.vmap(kops.fingerprint_rows)(block, valid)
+
+        _STEP_CACHE[key] = fn
+    return fn
+
+
+@partial(jax.jit, static_argnames=("new_cap",))
+def reseat(rows: jnp.ndarray, valid: jnp.ndarray, new_cap: int):
+    """Re-home a compacted table at a new capacity.
+
+    Growing pads the tail with UNBOUND rows; shrinking drops tail rows
+    (callers guarantee the valid prefix fits — planner rungs always cover
+    the seed row count).  The valid prefix is preserved bit-for-bit, which
+    is what makes re-entering the ladder at the overflowed unit
+    byte-identical to the blind whole-query retry.
+    """
+    cap, n_vars = rows.shape
+    if new_cap <= cap:
+        return rows[:new_cap], valid[:new_cap]
+    pad = new_cap - cap
+    return (jnp.concatenate(
+                [rows, jnp.full((pad, n_vars), -1, rows.dtype)]),
+            jnp.concatenate([valid, jnp.zeros((pad,), valid.dtype)]))
+
+
+def endpoint_totals(cfg, n_results: int, n_vars: int) -> tuple[int, int]:
+    """(nrs, ntb) of a whole endpoint-interface query — the host twin of
+    ``engine._execute``'s end-of-query override (one request, the full
+    result set in one response).  Shared by the planned serial path and
+    the scheduler finalize so the three copies cannot drift to two."""
+    return (1, cfg.request_base_bytes + n_results * n_vars * cfg.term_bytes
+            + cfg.page_header_bytes)
+
+
+def unit_cost(cfg, k: int, up: UnitPlan, in_count: int, out_count: int,
+              ops: int, logn: int) -> tuple[int, int, int, int]:
+    """(nrs, ntb, server_ops, client_ops) deltas for one unit, in ints.
+
+    Mirrors the traced accounting in ``engine._execute`` exactly; the
+    scheduler/serial stats-parity tests pin the two together.  ``k`` is
+    the unit's absolute position in the plan (resumed executions keep
+    their original indices).
+    """
+    tb = cfg.term_bytes
+    matched = out_count * up.n_triple_patterns
+    if cfg.interface == "endpoint":
+        return 0, 0, ops, 0
+    meta = 1
+    if cfg.interface == "tpf":
+        blocks = max(in_count, 1) if k > 0 else 1
+    else:  # brtpf / spf: Omega-blocked requests
+        blocks = -(-max(in_count, 1) // cfg.omega) if k > 0 else 1
+    pages = -(-max(out_count, 1) // cfg.page_size)
+    extra = max(pages - blocks, 0)
+    nrs_d = meta + blocks + extra
+    sent = (blocks + meta + extra) * cfg.request_base_bytes
+    if cfg.interface in ("brtpf", "spf") and k > 0:
+        n_bound_vars = len(
+            {v for b in up.branches for src in (b.subj_src, b.obj_src)
+             if src[0] == "var" for v in [src[1]]})
+        sent += in_count * max(n_bound_vars, 1) * tb
+    recv = matched * 3 * tb + (pages + meta) * cfg.page_header_bytes
+    ntb_d = sent + recv
+    if cfg.interface == "tpf":
+        server_d = blocks * 2 * logn + matched
+        client_d = ops
+    else:
+        server_d = ops
+        client_d = out_count
+    return nrs_d, ntb_d, server_d, client_d

@@ -1,0 +1,113 @@
+"""Pallas TPU kernel: on-device fingerprint of a binding-table block.
+
+The concurrent scheduler keys its star-fragment cache on the canonical
+seeded unit request, which embeds the Omega block — the valid prefix of the
+wave's binding table restricted to the unit's read columns.  PR 2/3 pulled
+that block to the host on *every unit step of every wave* just to call
+``tobytes()`` (the ROADMAP round-trip item); at scheduler capacities this is
+megabytes of PCIe traffic per step for what ends up a dict key.
+
+This kernel hashes the block where it lives: one pass over the table tile
+stream computes a 4x32-bit order-sensitive digest of the valid prefix, and
+only the 16-byte digest crosses to the host.  The hash spec (and its
+constants) is defined in ``repro.kernels.ref`` and shared by three
+implementations that must stay bit-identical:
+
+- ``ref.fingerprint_rows_ref``   — jnp oracle (non-TPU dispatch target),
+- ``fingerprint_rows_pallas``    — this kernel (TPU fast path),
+- ``ref.fingerprint_prefix_np``  — numpy twin for host-replayed wave state.
+
+TPU adaptation: rows stream through VMEM in 1-D tiles (same idiom as
+``run_probe``); per tile the VPU computes each row's column-folded hash,
+mixes in the global row position, masks invalid rows, and accumulates four
+salted wrapping-uint32 sums into the output block across grid steps
+(init at tile 0).  The per-salt totals are finalized (n-mix) by the
+wrapper outside the kernel so the oracle and kernel share the exact same
+tail arithmetic.  All arithmetic is uint32: TPU has no 64-bit integer
+multiply, and uint32 wrap-around is identical across numpy/jnp/Mosaic.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.ref import _FP_COL, _FP_POS, _FP_SALTS, _FP_SEED, _M32
+
+DEFAULT_R_TILE = 512
+
+
+def _mix32(x):
+    x = x ^ (x >> jnp.uint32(16))
+    x = x * jnp.uint32(0x85EBCA6B)
+    x = x ^ (x >> jnp.uint32(13))
+    x = x * jnp.uint32(0xC2B2AE35)
+    x = x ^ (x >> jnp.uint32(16))
+    return x
+
+
+def _fp_kernel(block_ref, mask_ref, acc_ref, *, n_cols: int):
+    i = pl.program_id(0)
+    r_tile = mask_ref.shape[0]
+    h = jnp.full((r_tile,), _FP_SEED, jnp.uint32)
+    for c in range(n_cols):  # static unroll: n_cols is a trace constant
+        v = block_ref[:, c].astype(jnp.uint32)
+        h = _mix32(h ^ (v + jnp.uint32(((c + 1) * _FP_COL) & _M32)))
+    # global row index per lane (2D iota: TPU rejects 1D)
+    local = jax.lax.broadcasted_iota(jnp.uint32, (r_tile, 1), 0)[:, 0]
+    pos = ((i * r_tile).astype(jnp.uint32) + local + jnp.uint32(1)) \
+        * jnp.uint32(_FP_POS)
+    g = _mix32(h ^ _mix32(pos))
+    m = mask_ref[...]
+    partial = jnp.stack(
+        [jnp.sum(_mix32(g + jnp.uint32(s)) * m, dtype=jnp.uint32)
+         for s in _FP_SALTS])
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = partial
+
+    @pl.when(i != 0)
+    def _accum():
+        acc_ref[...] = acc_ref[...] + partial
+
+
+@functools.partial(jax.jit, static_argnames=("r_tile", "interpret"))
+def fingerprint_rows_pallas(block: jnp.ndarray, valid: jnp.ndarray,
+                            r_tile: int = DEFAULT_R_TILE,
+                            interpret: bool = False) -> jnp.ndarray:
+    """uint32[4] digest of the valid rows of ``block`` (int32[n, C], C >= 1).
+
+    ``valid`` masks rows; in the engine it is always a prefix (tables stay
+    compacted), but the kernel only requires a mask.  Row padding to the
+    tile multiple carries ``valid=False`` and contributes nothing, so the
+    digest is independent of the table capacity — only the valid rows,
+    their positions and their count matter (the contract the scheduler's
+    host/device key parity rests on).
+    """
+    n, n_cols = block.shape
+    if n_cols == 0:
+        raise ValueError("fingerprint_rows_pallas needs >= 1 column; "
+                         "the dispatch layer routes 0-column blocks to ref")
+    r_pad = -n % r_tile
+    block_p = jnp.pad(block, ((0, r_pad), (0, 0)))
+    mask_p = jnp.pad(valid.astype(jnp.uint32), (0, r_pad))
+    grid = (block_p.shape[0] // r_tile,)
+    acc = pl.pallas_call(
+        functools.partial(_fp_kernel, n_cols=n_cols),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((r_tile, n_cols), lambda i: (i, 0)),
+            pl.BlockSpec((r_tile,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((4,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((4,), jnp.uint32),
+        interpret=interpret,
+    )(block_p, mask_p)
+    # shared finalize (identical to the oracle's tail)
+    n_in = jnp.sum(valid.astype(jnp.uint32), dtype=jnp.uint32)
+    salts = jnp.asarray(_FP_SALTS, jnp.uint32)
+    return _mix32(acc ^ (n_in * jnp.uint32(_FP_POS) + salts))

@@ -44,6 +44,14 @@ Join/probe primitives (the SPF server's hot path)
                             masking (the distributed runtime's
                             ``owner_masking``): non-owned rows get an
                             empty run instead of a separate mask pass.
+- ``fingerprint_rows``    — 4x32-bit on-device digest of a binding-table
+                            block's valid rows (the scheduler's
+                            digest-first fragment-cache keys; host twin
+                            ``ref.fingerprint_prefix_np``).
+- ``max_run_length_per_segment`` — per-predicate max equal-key run length
+                            (the capacity planner's degree oracle; jnp
+                            segment ops on both backends — one-shot per
+                            store epoch, no kernel needed).
 """
 
 from __future__ import annotations
@@ -181,6 +189,42 @@ def searchsorted_in_runs(values: jnp.ndarray, lo: jnp.ndarray,
     """Absolute "left" insertion position of ``targets[i]`` within the
     sorted run ``values[lo[i]:hi[i]]``."""
     return run_probe(values, lo, hi, targets)[0]
+
+
+def fingerprint_rows(block: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
+    """Order-sensitive uint32[4] digest of the valid rows of ``block``.
+
+    ``block`` is int32[n, C] (a binding table restricted to a unit's read
+    columns), ``valid`` the row mask (always a prefix in the engine).  The
+    digest depends only on the valid rows' values, positions and count —
+    never on capacity padding or invalid-row garbage — so it can stand in
+    for the block's bytes in ``server.unit_digest_key`` and be compared
+    against host-side state hashed with ``ref.fingerprint_prefix_np``
+    (bit-identical by construction; pinned by the kernel parity tests).
+    vmap-safe: the scheduler digests whole waves in one call.
+
+    Zero-column blocks (a unit that reads nothing from Omega) carry no
+    content beyond the row count and always take the jnp path.
+    """
+    if _use_pallas() and block.shape[1] > 0:
+        from repro.kernels.fingerprint import fingerprint_rows_pallas
+        return fingerprint_rows_pallas(block, valid, interpret=_interpret())
+    return ref.fingerprint_rows_ref(block, valid)
+
+
+def max_run_length_per_segment(sorted_keys: jnp.ndarray,
+                               segment_ids: jnp.ndarray,
+                               num_segments: int) -> jnp.ndarray:
+    """Per-segment max equal-key run length in a sorted key column.
+
+    The capacity planner's degree oracle: over the PSO key column this is
+    each predicate's max subject out-degree, over POS its max object
+    in-degree.  Runs once per store epoch (a few vectorized segment
+    reductions), so both backends use the jnp oracle — there is no hot
+    path to accelerate.
+    """
+    return ref.max_run_length_per_segment_ref(sorted_keys, segment_ids,
+                                              num_segments)
 
 
 # --------------------------------------------------------------------------

@@ -12,6 +12,7 @@ import math
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def sorted_probe_ref(keys: jnp.ndarray, queries: jnp.ndarray
@@ -96,6 +97,126 @@ def run_probe_ref(values: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray,
     at = values[jnp.clip(pos, 0, n - 1)]
     contains = (pos < hi) & (at == targets)
     return pos.astype(jnp.int32), contains
+
+
+def max_run_length_per_segment_ref(sorted_keys: jnp.ndarray,
+                                   segment_ids: jnp.ndarray,
+                                   num_segments: int) -> jnp.ndarray:
+    """Per-segment maximum equal-key run length in a sorted key column.
+
+    ``sorted_keys`` ascending; ``segment_ids`` non-decreasing (a run never
+    crosses a segment boundary — predicate runs in the PSO/POS layouts
+    guarantee this).  Returns int64[num_segments]; empty segments get 0.
+    A few vectorized reductions (change-point cumsum + two segment ops) —
+    this is the capacity planner's degree oracle, computed once per store
+    epoch, so it has no Pallas fast path by design.
+    """
+    n = sorted_keys.shape[0]
+    if n == 0:
+        return jnp.zeros((num_segments,), jnp.int64)
+    is_start = jnp.concatenate(
+        [jnp.ones((1,), bool), sorted_keys[1:] != sorted_keys[:-1]])
+    run_id = jnp.cumsum(is_start.astype(jnp.int64)) - 1
+    run_len = jax.ops.segment_sum(jnp.ones((n,), jnp.int64), run_id,
+                                  num_segments=n)
+    out = jax.ops.segment_max(run_len[run_id], segment_ids,
+                              num_segments=num_segments)
+    return jnp.maximum(out, 0)
+
+
+# --------------------------------------------------------------------------
+# request fingerprints (the scheduler's digest-first cache keys)
+# --------------------------------------------------------------------------
+#
+# The hash is defined entirely in wrapping uint32 arithmetic so that the
+# jnp oracle, the Pallas kernel and the numpy host twin produce identical
+# bit patterns (the scheduler mixes device-resident and host-replayed wave
+# state, and both must canonicalize to the same cache key).  Layout:
+#
+#     h_i   = fold over columns c of mix32(h ^ (v[i, c] + (c+1)*COL))
+#     g_i   = mix32(h_i ^ mix32((i+1) * POS))        position-dependent
+#     acc_s = sum_{valid i} mix32(g_i + SALT_s)       (mod 2^32, s = 0..3)
+#     out_s = mix32(acc_s ^ (n_valid * POS + SALT_s))
+#
+# Only the valid prefix contributes (invalid rows are masked to zero), so
+# the digest of a device table whose invalid region holds step garbage
+# equals the digest of its host-side valid-prefix materialisation.
+
+_M32 = 0xFFFFFFFF
+_FP_SEED = 0x9E3779B9
+_FP_COL = 0x85EBCA6B
+_FP_POS = 0x9E3779B1
+_FP_SALTS = (0x243F6A88, 0x85A308D3, 0x13198A2E, 0x03707344)
+
+
+def _mix32_jnp(x: jnp.ndarray) -> jnp.ndarray:
+    """murmur3 finalizer on uint32 (wrapping)."""
+    x = x ^ (x >> jnp.uint32(16))
+    x = x * jnp.uint32(0x85EBCA6B)
+    x = x ^ (x >> jnp.uint32(13))
+    x = x * jnp.uint32(0xC2B2AE35)
+    x = x ^ (x >> jnp.uint32(16))
+    return x
+
+
+def fingerprint_rows_ref(block: jnp.ndarray, valid: jnp.ndarray
+                         ) -> jnp.ndarray:
+    """uint32[4] digest of the valid rows of ``block`` (int32[n, C]).
+
+    Pure jnp oracle for ``fingerprint_rows_pallas``; vmap/shard_map-safe
+    (static column unroll, masked sum).  Must stay bit-identical to
+    ``fingerprint_prefix_np`` on prefix-valid inputs.
+    """
+    n, n_cols = block.shape
+    h = jnp.full((n,), _FP_SEED, jnp.uint32)
+    for c in range(n_cols):
+        v = block[:, c].astype(jnp.uint32)
+        h = _mix32_jnp(h ^ (v + jnp.uint32(((c + 1) * _FP_COL) & _M32)))
+    pos = (jnp.arange(n, dtype=jnp.uint32) + jnp.uint32(1)) \
+        * jnp.uint32(_FP_POS)
+    g = _mix32_jnp(h ^ _mix32_jnp(pos))
+    m = valid.astype(jnp.uint32)
+    n_in = jnp.sum(m, dtype=jnp.uint32)
+    outs = []
+    for s in _FP_SALTS:
+        acc = jnp.sum(_mix32_jnp(g + jnp.uint32(s)) * m, dtype=jnp.uint32)
+        outs.append(_mix32_jnp(
+            acc ^ (n_in * jnp.uint32(_FP_POS) + jnp.uint32(s))))
+    return jnp.stack(outs)
+
+
+def _mix32_np(x: "np.ndarray") -> "np.ndarray":
+    x = x ^ (x >> np.uint32(16))
+    x = x * np.uint32(0x85EBCA6B)
+    x = x ^ (x >> np.uint32(13))
+    x = x * np.uint32(0xC2B2AE35)
+    x = x ^ (x >> np.uint32(16))
+    return x
+
+
+def fingerprint_prefix_np(block: "np.ndarray") -> tuple[int, int, int, int]:
+    """Host twin of ``fingerprint_rows_ref`` for an all-valid prefix block.
+
+    ``block`` is the valid prefix ``int32[n, C]`` (every row valid, in
+    order).  Bit-identical to the device digest of a cap-sized table whose
+    valid prefix is exactly ``block`` — pinned by the kernel parity tests.
+    """
+    block = np.ascontiguousarray(block, dtype=np.int32)
+    n, n_cols = block.shape
+    h = np.full((n,), _FP_SEED, np.uint32)
+    for c in range(n_cols):
+        v = block[:, c].astype(np.uint32)
+        h = _mix32_np(h ^ (v + np.uint32(((c + 1) * _FP_COL) & _M32)))
+    pos = (np.arange(n, dtype=np.uint32) + np.uint32(1)) * np.uint32(_FP_POS)
+    g = _mix32_np(h ^ _mix32_np(pos))
+    accs = np.array(
+        [np.sum(_mix32_np(g + np.uint32(s)), dtype=np.uint32) if n else 0
+         for s in _FP_SALTS], np.uint32)
+    fins = np.array([(n * _FP_POS + s) & _M32 for s in _FP_SALTS], np.uint32)
+    # 1-D arrays throughout: numpy warns on (harmless, intended) uint32
+    # wrap-around for scalar/0-d operands but not for arrays
+    out = _mix32_np(accs ^ fins)
+    return tuple(int(x) for x in out)
 
 
 def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,

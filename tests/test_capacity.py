@@ -1,0 +1,232 @@
+"""Capacity planner: ladder parity, oracle bounds, high-water marks, resume.
+
+The contract under test (the PR 4 tentpole): planner-started runs —
+data-informed starting rungs, per-unit capacities, resume-at-the-failing-
+unit overflow handling — are byte-identical to the blind whole-query 4x
+retry ladder (``EngineConfig(capacity_planner=False)``) in valid result
+rows AND gross ``QueryStats`` fields, across all four interfaces,
+including forced-overflow and resume-at-unit-k cases.  The planner may
+only change how fast the answer is reached, never the answer.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    C,
+    CapacityPlanner,
+    EngineConfig,
+    QueryEngine,
+    QueryScheduler,
+    SchedulerConfig,
+    V,
+    results_as_numpy,
+)
+from repro.core.patterns import BGP, TriplePattern
+from repro.rdf import TripleStore, generate_query_load
+from repro.rdf.queries import QueryLoadConfig
+
+LOADS = ["1-star", "2-stars", "3-stars", "paths", "union"]
+INTERFACES = ["tpf", "brtpf", "spf", "endpoint"]
+
+
+def _assert_run_parity(blind_out, planned_out, ctx):
+    (b_tbl, b_stats), (p_tbl, p_stats) = blind_out, planned_out
+    a, b = results_as_numpy(b_tbl), results_as_numpy(p_tbl)
+    assert a.dtype == b.dtype and a.shape == b.shape, ctx
+    assert np.array_equal(a, b), ctx
+    assert tuple(int(x) for x in b_stats)[:6] \
+        == tuple(int(x) for x in p_stats)[:6], ctx
+
+
+@pytest.fixture(scope="module")
+def parity_queries(watdiv_small):
+    g, store = watdiv_small
+    qs = []
+    for load in LOADS:
+        qs += generate_query_load(g, store, load, QueryLoadConfig(n_queries=2))
+    return qs
+
+
+@pytest.mark.parametrize("interface", INTERFACES)
+def test_planned_byte_identical_to_blind_ladder(watdiv_small, parity_queries,
+                                                interface):
+    """All loads, comfortable starting capacity: planner on vs off."""
+    _, store = watdiv_small
+    blind = QueryEngine(store, EngineConfig(interface=interface, cap=2048,
+                                            capacity_planner=False))
+    planned = QueryEngine(store, EngineConfig(interface=interface, cap=2048))
+    for i, q in enumerate(parity_queries):
+        _assert_run_parity(blind.run(q), planned.run(q), (interface, i))
+
+
+@pytest.mark.parametrize("interface", INTERFACES)
+def test_forced_overflow_parity(watdiv_small, interface):
+    """Tiny starting capacity forces the blind ladder to climb; the planner
+    must land on byte-identical results without it (oracle bounds are
+    upper bounds, so planned runs start at a fitting rung)."""
+    g, store = watdiv_small
+    qs = generate_query_load(g, store, "2-stars", QueryLoadConfig(n_queries=3))
+    blind = QueryEngine(store, EngineConfig(interface=interface, cap=4,
+                                            capacity_planner=False))
+    planned = QueryEngine(store, EngineConfig(interface=interface, cap=4))
+    for i, q in enumerate(qs):
+        _assert_run_parity(blind.run(q), planned.run(q), (interface, i))
+
+
+def test_max_cap_latch_parity(watdiv_small):
+    """When even ``max_cap`` overflows, both paths must latch the overflow
+    flag and return the identical truncated evaluation (the blind ladder's
+    give-up rung runs every unit at max_cap; the planned path switches to
+    max_cap from the latch point on)."""
+    g, store = watdiv_small
+    qs = generate_query_load(g, store, "2-stars", QueryLoadConfig(n_queries=3))
+    blind = QueryEngine(store, EngineConfig(interface="spf", cap=4, max_cap=16,
+                                            capacity_planner=False))
+    planned = QueryEngine(store, EngineConfig(interface="spf", cap=4,
+                                              max_cap=16))
+    overflowed = 0
+    for i, q in enumerate(qs):
+        b = blind.run(q)
+        p = planned.run(q)
+        _assert_run_parity(b, p, i)
+        overflowed += int(bool(b[1].overflow))
+    assert overflowed > 0  # the latch case actually happened
+
+
+def test_resume_at_unit_k_self_corrects(watdiv_small):
+    """A wrong (too small) high-water mark must self-correct through the
+    resumable ladder — re-entering at the overflowed unit with only that
+    unit's table regrown — and still produce blind-identical results."""
+    g, store = watdiv_small
+    qs = generate_query_load(g, store, "2-stars", QueryLoadConfig(n_queries=2))
+    blind = QueryEngine(store, EngineConfig(interface="spf", cap=4,
+                                            capacity_planner=False))
+    planned = QueryEngine(store, EngineConfig(interface="spf", cap=4))
+    for i, q in enumerate(qs):
+        plan = planned.plan(q)
+        for k in range(len(plan.units)):
+            planned.planner.observe_unit(plan, k, 4)  # deliberately tiny
+        _assert_run_parity(blind.run(q), planned.run(q), i)
+
+
+def test_oracle_bounds_are_upper_bounds(watdiv_small, parity_queries):
+    """A cold planned run must never overflow below ``max_cap``: after it,
+    every observed per-unit high-water mark equals the oracle's cold cap
+    (the ladder never had to climb)."""
+    _, store = watdiv_small
+    eng = QueryEngine(store, EngineConfig(interface="spf", cap=64))
+    for q in parity_queries:
+        plan = eng.plan(q)
+        cold = eng.planner.unit_caps(plan)
+        eng.run(q)
+        observed = eng.planner.unit_caps(plan)  # now HWM-served
+        # growth only via the seed-prefix floor, never via overflow retry:
+        # each observed cap is the cold rung or the rung covering the
+        # previous unit's output (which the cold bound also covers)
+        assert all(o <= c for o, c in zip(observed, cold)), (cold, observed)
+
+
+def test_hwm_jump_and_epoch_invalidation(watdiv_small):
+    """Warm runs jump to observed rungs (no ladder); a store-epoch bump
+    forgets the marks (epoch-tagged like the fragment cache) and results
+    stay identical."""
+    g, store = watdiv_small
+    qs = generate_query_load(g, store, "2-stars", QueryLoadConfig(n_queries=2))
+    eng = QueryEngine(store, EngineConfig(interface="spf", cap=4))
+    first = [eng.run(q) for q in qs]
+    assert eng.planner.stats.observations > 0
+    warm_hwm = eng.planner.stats.hwm_caps
+    second = [eng.run(q) for q in qs]
+    assert eng.planner.stats.hwm_caps > warm_hwm  # warm caps came from HWM
+    for f, s in zip(first, second):
+        _assert_run_parity(f, s, "warm")
+    store.bump_epoch()
+    assert eng.planner.sync_epoch(store.epoch) > 0  # stale marks swept
+    third = [eng.run(q) for q in qs]
+    for f, t in zip(first, third):
+        _assert_run_parity(f, t, "post-bump")
+
+
+def test_degree_oracle_exact_factors():
+    """Hand-built store: the per-unit bounds are the expected products of
+    degree statistics (and the oracle is exact for const-object scans)."""
+    # p0: subject degrees 2/1/1 (max 2); object 3 has in-degree 3 under p0
+    s = np.array([0, 0, 1, 2, 3, 3])
+    p = np.array([0, 0, 0, 0, 1, 1])
+    o = np.array([3, 4, 3, 3, 4, 5])
+    store = TripleStore.build(s, p, o, n_terms=6, n_predicates=2)
+    cfg = EngineConfig(interface="spf", cap=4)
+    planner = CapacityPlanner(store, cfg)
+    eng = QueryEngine(store, cfg)
+
+    # scan_oconst: (?s, p0, 3) — exact cardinality 3
+    q = BGP((TriplePattern(V(0), C(0), C(3)),), n_vars=1)
+    assert planner.unit_bounds(eng.plan(q)) == [3]
+
+    # one star, two branches: the selective branch scans p1's whole run
+    # (|run| = 2), then the p0 probe expands each subject by at most
+    # max-out-degree(p0) = 2 objects -> bound 2 * 2
+    q2 = BGP((TriplePattern(V(0), C(0), V(1)),
+              TriplePattern(V(0), C(1), V(2))), n_vars=3)
+    assert planner.unit_bounds(eng.plan(q2)) == [4]
+
+    # retry rungs grow 4x from cfg.cap; snug caps quantize to 1/16 octave
+    # with the shape-churn floor
+    assert planner.rung(1) == 4 and planner.rung(5) == 16
+    assert planner.rung(10**9) == cfg.max_cap
+    assert planner.snug(1) == 1024  # MIN_QUANTUM floor
+    assert planner.snug(2000) == 2048
+    assert planner.snug(600_000) == 655_360  # quantum 65536, ~9% over
+    assert planner.snug(10**9) == cfg.max_cap
+
+
+def test_scheduler_resume_skips_completed_units():
+    """The in-bucket retry re-enters at the overflowed unit: a 2-unit query
+    whose first unit fits the tiny cap re-runs only unit 1 on retry
+    (3 device steps: unit0, unit1-overflow, unit1-retried), where the
+    blind whole-query ladder would have re-run unit 0 as well."""
+    s = np.array([0, 0, 1, 2, 3, 3, 4, 4])
+    p = np.array([0, 0, 0, 0, 1, 1, 1, 1])
+    o = np.array([3, 4, 3, 3, 4, 5, 3, 5])
+    store = TripleStore.build(s, p, o, n_terms=8, n_predicates=2)
+    # unit 0: (?s, p0, 4) -> 1 row; unit 1: (?o: s p1 ?o)-style expansion
+    q = BGP((TriplePattern(V(0), C(0), C(4)),
+             TriplePattern(V(1), C(1), V(2)),), n_vars=3)
+    cfg = EngineConfig(interface="spf", cap=1, capacity_planner=False)
+    sched = QueryScheduler(store, cfg,
+                           SchedulerConfig(lanes=1, use_cache=False))
+    tables, stats = sched.run_queries([q])
+    eng = QueryEngine(store, cfg)
+    ref_tbl, ref_stats = eng.run(q)
+    assert np.array_equal(results_as_numpy(tables[0]),
+                          results_as_numpy(ref_tbl))
+    assert tuple(int(x) for x in stats[0])[:6] \
+        == tuple(int(x) for x in ref_stats)[:6]
+    m = sched.metrics
+    assert m.retries > 0
+    n_units = len(eng.plan(q).units)
+    assert n_units == 2
+    # resumable: strictly fewer unit steps than re-running whole queries
+    assert m.steps < (m.retries + 1) * n_units
+
+
+def test_planner_hint_sharing_across_schedulers(watdiv_small):
+    """A pod-shared planner hands a second scheduler the first one's
+    high-water marks: its jobs start at the observed (right-sized) rungs
+    with no retries, and fragments recorded at those rungs hit.  The
+    first drain runs at cold oracle caps and records true peaks; the
+    second drain re-warms the cache at the peak rungs; a fresh scheduler
+    sharing both objects is then served entirely from them."""
+    g, store = watdiv_small
+    qs = generate_query_load(g, store, "2-stars", QueryLoadConfig(n_queries=2))
+    cfg = EngineConfig(interface="spf", cap=4)
+    first = QueryScheduler(store, cfg)
+    first.run_queries(qs)  # cold: oracle caps, peaks observed
+    first.run_queries(qs)  # warm: HWM caps, cache re-warmed at those rungs
+    second = QueryScheduler(store, cfg, cache=first.cache,
+                            planner=first.planner)
+    _, stats = second.run_queries(qs)
+    assert second.metrics.retries == 0
+    assert all(int(st.cache_misses) == 0 and int(st.cache_hits) > 0
+               for st in stats)

@@ -173,15 +173,75 @@ def test_freq_admission_keeps_hot_fragments():
 
 
 def test_freq_sketch_ages_by_halving():
-    """The frequency sketch is bounded: overflowing it halves every count
-    (stale popularity decays instead of pinning the cache forever)."""
-    cache = FragmentCache(capacity=1)
+    """Both sketches decay by halving so stale popularity cannot pin the
+    cache forever: the CMS halves after its touch window, the exact dict
+    when its distinct-hash count overflows."""
+    cache = FragmentCache(capacity=1)  # CMS window = 16 * capacity touches
     for _ in range(8):
         cache.get(("old-hot",))
-    for i in range(8 * cache.capacity + 4):
+    assert cache._sketch.estimate(("old-hot",)) == 8
+    for i in range(16 * cache.capacity + 4):
         cache.get((f"filler-{i}",))
-    assert cache._freq.get(hash(("old-hot",)), 0) < 8
-    assert len(cache._freq) <= 8 * cache.capacity + 1
+    assert cache._sketch.estimate(("old-hot",)) < 8
+    exact = FragmentCache(capacity=1, sketch="exact")
+    for _ in range(8):
+        exact.get(("old-hot",))
+    for i in range(8 * exact.capacity + 4):
+        exact.get((f"filler-{i}",))
+    assert exact._sketch.estimate(("old-hot",)) < 8
+
+
+def test_cms_is_constant_space_and_admission_matches_exact():
+    """Satellite contract: the count-min sketch replaces the exact dict
+    without changing admission decisions on small traces (no decay, no
+    collisions), and its memory does not grow with the key population."""
+    import numpy as np
+
+    from repro.core.fragcache import CountMinSketch
+
+    rng = np.random.default_rng(7)
+    # trace sized below both decay triggers (CMS: 16 x capacity touches;
+    # exact: > 8 x capacity distinct hashes), where the two sketches are
+    # defined to agree exactly absent CMS collisions
+    caches = {kind: FragmentCache(capacity=8, sketch=kind)
+              for kind in ("cms", "exact")}
+    keys = [(f"k{i}",) for i in range(16)]
+    trace = [keys[int(rng.integers(0, len(keys)))] for _ in range(100)]
+    for t, key in enumerate(trace):
+        decisions = {}
+        for kind, cache in caches.items():
+            cache.get(key)
+            if t % 3 == 0:
+                cache.put(key, _entry())
+            decisions[kind] = (sorted(k[0] for k in cache._entries),
+                               cache.stats.admission_rejects,
+                               cache.stats.insertions)
+        assert decisions["cms"] == decisions["exact"], (t, decisions)
+    # constant space: the counter table never grows with the trace
+    sk = CountMinSketch(capacity=4)
+    nbytes = sk._table.nbytes
+    for i in range(10_000):
+        sk.add((f"scan-{i}",))
+    assert sk._table.nbytes == nbytes
+
+
+def test_lazy_epoch_check_is_a_raw_key_backstop():
+    """The get-time staleness branch can only fire for raw/epoch-less keys:
+    scheduler keys fold the epoch into the key, so after a bump they are
+    simply different keys (a plain miss, no stale eviction at get time) —
+    the eager ``sync_epoch`` sweep is what reclaims their entries.  Raw
+    keys (same tuple across epochs) take the lazy branch."""
+    cache = FragmentCache(capacity=8)
+    # scheduler-style: epoch inside the key
+    cache.put(("sig", 0), _entry(), epoch=0)  # key distinct per epoch
+    assert cache.get(("sig", 1), epoch=1) is None  # new-epoch key: plain miss
+    assert cache.stats.stale_evictions == 0  # lazy branch never fired
+    assert cache.sync_epoch(1) == 1  # the sweep reclaims the stale entry
+    assert cache.stats.stale_evictions == 1
+    # raw-key style: same key across epochs -> lazy drop on touch
+    cache.put(("raw",), _entry(), epoch=1)
+    assert cache.get(("raw",), epoch=2) is None
+    assert cache.stats.stale_evictions == 2
 
 
 def test_negative_results_cached_in_side_table():

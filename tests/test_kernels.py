@@ -171,6 +171,99 @@ def test_run_probe_property(data):
     _check_run_probe(vals, lo, hi, targets, r_tile=32, v_tile=64)
 
 
+# ---------------------------------------------------------------- fingerprint
+
+@pytest.mark.parametrize("n,cols,cap", [
+    (0, 0, 4), (0, 3, 8), (1, 1, 1), (5, 2, 16),
+    (100, 4, 256), (513, 3, 1024), (2048, 6, 2048),
+])
+def test_fingerprint_three_way_parity(n, cols, cap, rng):
+    """The digest contract: jnp oracle on a cap-sized masked table, Pallas
+    kernel on the same, and the numpy host twin on the bare valid prefix
+    must all be bit-identical — invalid-region garbage must not leak in.
+    This is what lets the scheduler mix device-digested and host-replayed
+    wave state under one cache key space."""
+    from repro.kernels.fingerprint import fingerprint_rows_pallas
+
+    full = rng.integers(-1000, 1000, (cap, cols)).astype(np.int32)
+    prefix = full[:n].copy()
+    valid = np.zeros((cap,), bool)
+    valid[:n] = True
+    want = ref.fingerprint_prefix_np(prefix)
+    got_ref = np.asarray(ref.fingerprint_rows_ref(jnp.asarray(full),
+                                                  jnp.asarray(valid)))
+    assert tuple(int(x) for x in got_ref) == want
+    if cols > 0:
+        got_pal = np.asarray(fingerprint_rows_pallas(
+            jnp.asarray(full), jnp.asarray(valid), r_tile=256,
+            interpret=True))
+        assert tuple(int(x) for x in got_pal) == want
+    # garbage beyond the valid prefix must be invisible
+    full2 = full.copy()
+    full2[n:] = -7
+    got2 = np.asarray(ref.fingerprint_rows_ref(jnp.asarray(full2),
+                                               jnp.asarray(valid)))
+    assert tuple(int(x) for x in got2) == want
+
+
+def test_fingerprint_sensitivity():
+    """Value, order and length perturbations all change the digest (the
+    properties the digest-form cache key relies on)."""
+    base = ref.fingerprint_prefix_np(np.array([[1, 2], [3, 4]], np.int32))
+    assert base != ref.fingerprint_prefix_np(
+        np.array([[3, 4], [1, 2]], np.int32))
+    assert base != ref.fingerprint_prefix_np(
+        np.array([[1, 2], [3, 5]], np.int32))
+    assert base != ref.fingerprint_prefix_np(np.array([[1, 2]], np.int32))
+    assert base != ref.fingerprint_prefix_np(
+        np.array([[1, 2], [3, 4], [3, 4]], np.int32))
+
+
+def test_fingerprint_dispatch_vmap():
+    """kops.fingerprint_rows under vmap (the scheduler's whole-wave digest
+    call) matches per-lane host digests on both FORCE settings."""
+    import jax
+
+    from repro.kernels import ops as kops
+
+    rng = np.random.default_rng(3)
+    rows = rng.integers(-1, 50, (4, 32, 3)).astype(np.int32)
+    valid = np.zeros((4, 32), bool)
+    lens = [0, 1, 7, 32]
+    for j, m in enumerate(lens):
+        valid[j, :m] = True
+    want = [ref.fingerprint_prefix_np(rows[j, :m]) for j, m in enumerate(lens)]
+    old = kops.FORCE
+    try:
+        for force in ("ref", "pallas"):
+            kops.FORCE = force
+            got = np.asarray(jax.vmap(kops.fingerprint_rows)(
+                jnp.asarray(rows), jnp.asarray(valid)))
+            assert [tuple(int(x) for x in g) for g in got] == want, force
+    finally:
+        kops.FORCE = old
+
+
+# ------------------------------------------------------- segment run lengths
+
+def test_max_run_length_per_segment_matches_bruteforce(rng):
+    keys = np.sort(rng.integers(0, 40, 500)).astype(np.int64)
+    seg_of = keys // 10  # 4 segments; runs never cross boundaries
+    want = np.zeros((6,), np.int64)
+    for seg in range(6):
+        ks = keys[seg_of == seg]
+        if ks.size:
+            want[seg] = np.bincount(ks - ks.min()).max()
+    got = np.asarray(ref.max_run_length_per_segment_ref(
+        jnp.asarray(keys), jnp.asarray(seg_of), 6))
+    np.testing.assert_array_equal(got, want)
+    # empty input
+    got0 = np.asarray(ref.max_run_length_per_segment_ref(
+        jnp.asarray(np.zeros((0,), np.int64)),
+        jnp.asarray(np.zeros((0,), np.int64)), 3))
+    np.testing.assert_array_equal(got0, np.zeros((3,), np.int64))
+
+
 # ------------------------------------------------------------ flash_attention
 
 @pytest.mark.parametrize("shape,causal,dt", [

@@ -111,11 +111,14 @@ def test_padding_lanes_are_noops(watdiv_small, serial_results, all_queries):
 
 def test_overflow_retry_inside_bucket(watdiv_small):
     """Queries that overflow the starting capacity are retried at 4x inside
-    the scheduler (re-bucketed at the larger cap) and still match the
-    serial engine's retry ladder byte-for-byte."""
+    the scheduler — resumably: re-bucketed at the larger cap *at the
+    failing unit*, seeded with the checkpointed table — and still match
+    the serial engine's retry ladder byte-for-byte.  The blind config
+    (``capacity_planner=False``) forces the ladder; with the planner on,
+    the same load starts at oracle rungs and never overflows at all."""
     g, store = watdiv_small
     qs = generate_query_load(g, store, "2-stars", QueryLoadConfig(n_queries=3))
-    cfg = EngineConfig(interface="spf", cap=4)
+    cfg = EngineConfig(interface="spf", cap=4, capacity_planner=False)
     eng = QueryEngine(store, cfg)
     serial = [eng.run(q) for q in qs]
     for use_cache in (False, True):
@@ -124,6 +127,13 @@ def test_overflow_retry_inside_bucket(watdiv_small):
         tables, stats = sched.run_queries(qs)
         _assert_equivalent(serial, tables, stats, ("overflow", use_cache))
         assert sched.metrics.retries > 0
+    # planner on: data-informed starting rungs make overflow rare (here:
+    # absent), with byte-identical results
+    planned_cfg = EngineConfig(interface="spf", cap=4)
+    sched = QueryScheduler(store, planned_cfg, SchedulerConfig(lanes=4))
+    tables, stats = sched.run_queries(qs)
+    _assert_equivalent(serial, tables, stats, "planner-on")
+    assert sched.metrics.retries == 0
 
 
 def test_cross_client_requests_hit_the_cache(watdiv_small):
@@ -209,7 +219,8 @@ def test_mesh_vmap_mixed_widths_and_retries(watdiv_small):
     n_dev = len(jax.devices())
     qs = generate_query_load(g, store, "2-stars", QueryLoadConfig(n_queries=2))
     single = generate_query_load(g, store, "1-star", QueryLoadConfig(n_queries=1))
-    cfg = EngineConfig(interface="spf", cap=4)
+    # blind config: the retry ladder is the subject under test here
+    cfg = EngineConfig(interface="spf", cap=4, capacity_planner=False)
     eng = QueryEngine(store, cfg)
     serial = {id(q): eng.run(q) for q in qs + single}
     stream = [(c, q) for q in qs for c in range(n_dev)] \
