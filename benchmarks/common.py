@@ -250,6 +250,88 @@ def sched_mesh_vs_vmap(load: str, n_clients: int, interface: str = "spf",
         "mesh_wave_fraction": m.mesh_steps / m.steps if m.steps else 0.0,
         "hit_rate": sched_of["mesh"].cache.stats.hit_rate,
         "occupancy": m.occupancy,
+        # replicated lanes move no per-unit gather traffic; recorded so
+        # the artifact schema matches the sharded figure's records and
+        # the transfer models stay comparable
+        "gather_bytes": m.gather_bytes,
         "byte_identical": bool(identical),
         "stats": [st for _, st in out["mesh"]],
+    }
+
+
+def sched_shard_vs_replicated(load: str, n_clients: int, n_shards: int,
+                              interface: str = "spf", lanes: int = 16):
+    """Serve one interleaved multi-client stream through sharded-store
+    scheduler waves vs replicated mesh waves (``fig_shard_sched``).
+
+    The sharded scheduler gets a ``(data=n_shards, model=n_dev/n_shards)``
+    mesh with the store subject-hash sharded along ``data`` (1/n_shards of
+    the index per device); the replicated baseline spans all devices as
+    lanes with the full store on each.  Collapsing is off on both paths
+    so wave width reaches the lane-slot counts.  Records wall seconds for
+    both, the *per-device store bytes* of each placement (the figure's
+    headline: sharded bytes shrink ~linearly with the shard count), the
+    sharded path's measured per-unit gather traffic, hit rate, occupancy
+    and the byte-identity flag between the two paths' results + gross
+    stats (the acceptance invariant: shard count is invisible in bytes).
+    """
+    import jax
+    import numpy as np
+
+    from repro.core import results_as_numpy
+    from repro.core.scheduler import SchedMetrics
+
+    qs = bench_load(load)
+    _, store = bench_graph()
+    stream = interleave_clients(list(qs), n_clients)
+    cfg = EngineConfig(interface=interface)
+    n_dev = len(jax.devices())
+    if n_dev % n_shards:
+        raise ValueError(f"n_shards {n_shards} must divide the device "
+                         f"count {n_dev}")
+    mesh_rep = jax.make_mesh((n_dev,), ("model",))
+    mesh_sh = jax.make_mesh((n_shards, n_dev // n_shards),
+                            ("data", "model"))
+    lanes = max(lanes, n_dev)
+
+    out, wall, sched_of = {}, {}, {}
+    for name, m, ax in (("replicated", mesh_rep, None),
+                        ("sharded", mesh_sh, "data")):
+        sched = QueryScheduler(
+            store, cfg,
+            SchedulerConfig(lanes=lanes, collapse_duplicates=False),
+            mesh=m, data_axis=ax)
+        sched.serve(stream)  # warm compile of this lowering's unit steps
+        sched.cache.clear()
+        sched.metrics = SchedMetrics()
+        t0 = time.perf_counter()
+        out[name] = sched.serve(stream)
+        wall[name] = time.perf_counter() - t0
+        sched_of[name] = sched
+
+    identical = all(
+        np.array_equal(results_as_numpy(a), results_as_numpy(b))
+        and tuple(int(x) for x in sa)[:6] == tuple(int(x) for x in sb)[:6]
+        for (a, sa), (b, sb) in zip(out["replicated"], out["sharded"]))
+    m = sched_of["sharded"].metrics
+    full_bytes = sum(int(np.asarray(a).nbytes) for a in store.device)
+    stacked = sched_of["sharded"]._stacked
+    shard_bytes = sum(int(np.asarray(a).nbytes) for a in stacked) // n_shards
+    return {
+        "load": load, "interface": interface, "clients": n_clients,
+        "requests": len(stream), "n_devices": n_dev, "n_shards": n_shards,
+        "lanes": lanes,
+        "replicated_s": wall["replicated"], "sharded_s": wall["sharded"],
+        "sharded_vs_replicated": wall["replicated"] / wall["sharded"]
+        if wall["sharded"] else float("inf"),
+        "store_bytes_per_device_replicated": full_bytes,
+        "store_bytes_per_device_sharded": shard_bytes,
+        "store_bytes_shrink": full_bytes / shard_bytes if shard_bytes
+        else float("inf"),
+        "shard_wave_fraction": m.shard_steps / m.steps if m.steps else 0.0,
+        "gather_bytes": m.gather_bytes,
+        "hit_rate": sched_of["sharded"].cache.stats.hit_rate,
+        "occupancy": m.occupancy,
+        "byte_identical": bool(identical),
+        "stats": [st for _, st in out["sharded"]],
     }

@@ -24,6 +24,11 @@ Figures covered:
   fig_dist_sched        mesh-spanning scheduler waves vs single-host vmap
                         waves on the same streams (run with 8 forced host
                         devices in CI); writes BENCH_dist_sched.json
+  fig_shard_sched       sharded-store scheduler waves vs replicated mesh
+                        waves: per-device store bytes, wall, measured
+                        gather traffic fed through the throughput model
+                        (run with 8 forced host devices in CI); writes
+                        BENCH_shard_sched.json
   kernels               sorted_probe / run_probe / flash_attention microbench
 """
 
@@ -45,7 +50,8 @@ from repro.core.patterns import star_decomposition  # noqa: E402
 from benchmarks.common import (CLIENTS, INTERFACES, LOADS,  # noqa: E402
                                SCHED_CLIENTS, bench_graph, bench_load,
                                capacity_planner_vs_blind, engine, load_run,
-                               sched_mesh_vs_vmap, sched_vs_serial, timed_run)
+                               sched_mesh_vs_vmap, sched_shard_vs_replicated,
+                               sched_vs_serial, timed_run)
 
 
 def emit(name: str, us_per_call: float, derived: str) -> None:
@@ -273,6 +279,73 @@ def fig_dist_sched() -> None:
     print(f"# wrote {out} ({len(records)} records)", file=sys.stderr)
 
 
+# ------------------------------------------------- sharded scheduler
+
+def fig_shard_sched() -> None:
+    """Sharded-store scheduler waves vs replicated mesh waves on the same
+    interleaved multi-client streams (the PR 5 acceptance figure): wall
+    time, per-device store bytes (the sharded mode's point — they shrink
+    ~linearly with the shard count at byte-identical results), measured
+    per-unit gather traffic, hit rate and occupancy.  Run under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (or a real
+    pod) so shards land on distinct devices — on one device only
+    ``n_shards=1`` is valid and the record documents the collective
+    overhead floor.  Writes the ``BENCH_shard_sched.json`` artifact.
+
+    The modeled throughput charges the sharded path's measured
+    ``gather_bytes`` against the pod interconnect (``CostModel``) — the
+    replicated transfer model would be silently optimistic for it.
+
+    Environment knobs (the CI matrix job restricts these):
+      BENCH_SHARD_LOADS    comma list, default "2-stars,union"
+      BENCH_SHARD_CLIENTS  comma list, default "16"
+      BENCH_SHARD_COUNTS   comma list, default "1,2,4" (device divisors)
+      BENCH_SHARD_JSON     output path, default BENCH_shard_sched.json
+    """
+    import jax
+
+    cm = CostModel()
+    loads = tuple(
+        s for s in os.environ.get("BENCH_SHARD_LOADS", "2-stars,union").split(",")
+        if s)
+    clients = tuple(
+        int(c) for c in os.environ.get("BENCH_SHARD_CLIENTS", "16").split(","))
+    n_dev = len(jax.devices())
+    shards = tuple(
+        s for s in (int(x) for x in
+                    os.environ.get("BENCH_SHARD_COUNTS", "1,2,4").split(","))
+        if s <= n_dev and n_dev % s == 0)
+    records = []
+    for load in loads:
+        for c in clients:
+            for s in shards:
+                r = sched_shard_vs_replicated(load, c, s)
+                per_q = r.pop("stats")
+                gather_s = r["gather_bytes"] / cm.pod_bw_bytes_s
+                mean_s = np.mean([modeled_query_seconds(
+                    st, c, occupancy=max(r["occupancy"], 1.0))
+                    for st in per_q]) + gather_s / max(r["requests"], 1)
+                r["modeled_queries_per_min"] = c * 60.0 / mean_s
+                records.append(r)
+                emit(f"fig_shard_sched/{load}/clients{c}/shards{s}",
+                     1e6 * r["sharded_s"] / max(r["requests"], 1),
+                     f"devices={r['n_devices']};"
+                     f"store_mb_per_dev={r['store_bytes_per_device_sharded'] / 1e6:.2f};"
+                     f"shrink={r['store_bytes_shrink']:.2f};"
+                     f"repl_s={r['replicated_s']:.3f};"
+                     f"shard_s={r['sharded_s']:.3f};"
+                     f"shard_wave_frac={r['shard_wave_fraction']:.2f};"
+                     f"gather_mb={r['gather_bytes'] / 1e6:.2f};"
+                     f"hit_rate={r['hit_rate']:.3f};"
+                     f"occupancy={r['occupancy']:.2f};"
+                     f"identical={int(r['byte_identical'])}")
+    out = os.environ.get("BENCH_SHARD_JSON", "BENCH_shard_sched.json")
+    with open(out, "w") as f:
+        json.dump({"figure": "fig_shard_sched",
+                   "n_devices": n_dev, "records": records}, f, indent=2)
+    print(f"# wrote {out} ({len(records)} records)", file=sys.stderr)
+
+
 # ----------------------------------------------------------------- kernels
 
 def kernels() -> None:
@@ -331,7 +404,7 @@ def kernels() -> None:
 
 FIGS = [fig4_loadstats, fig5_throughput, fig5f_timeouts, fig6_server_load,
         fig7_network, fig8_latency, fig_sched_throughput, fig_capacity,
-        fig_dist_sched, kernels]
+        fig_dist_sched, fig_shard_sched, kernels]
 
 
 def main() -> None:

@@ -43,6 +43,10 @@ class CostModel:
     bw_bytes_s: float = 125e6  # 1 Gbit/s
     op_s: float = 20e-9  # one work unit (probe step / row touched)
     server_cores: int = 16  # the paper's server
+    # pod-interior interconnect feeding the sharded lowering's per-unit
+    # all_gather (ICI/NVLink class, far above the client wire) — the
+    # sharded throughput model charges its measured gather_bytes here
+    pod_bw_bytes_s: float = 40e9
 
 
 def modeled_query_seconds(stats, n_clients: int = 1,
@@ -87,7 +91,8 @@ def load_throughput(store, queries, interface: str, n_clients: int,
 def scheduled_load_throughput(store, queries, interface: str, n_clients: int,
                               cm: CostModel = CostModel(),
                               cfg: EngineConfig | None = None,
-                              scheduler=None, mesh=None):
+                              scheduler=None, mesh=None,
+                              data_axis: str | None = None):
     """Modeled queries/minute with the scheduler serving the load.
 
     Serves the full interleaved ``n_clients x queries`` arrival stream
@@ -95,21 +100,32 @@ def scheduled_load_throughput(store, queries, interface: str, n_clients: int,
     and per-request cache savings into the cost model.  Returns
     ``(queries_per_min, hit_rate, occupancy)``.  Pass a device ``mesh``
     to route wide waves across mesh lanes (``fig_dist_sched``'s serving
-    configuration); the counts the model consumes are byte-identical
-    either way, so the mesh shows up through measured occupancy only.
+    configuration), plus ``data_axis`` to shard the store along one of
+    its axes (``fig_shard_sched``); the counts the model consumes are
+    byte-identical either way.
+
+    The sharded lowering's per-unit ``all_gather`` is not free: its
+    *measured* payload (``SchedMetrics.gather_bytes``) is charged against
+    the pod interconnect (``cm.pod_bw_bytes_s``) and spread over the
+    stream, so sharded throughput numbers are never silently optimistic
+    relative to the replicated step's transfer model (where the term is
+    zero, reproducing the old formula exactly).
     """
     from repro.core.scheduler import QueryScheduler, interleave_clients
 
-    if scheduler is not None and mesh is not None:
-        raise ValueError("pass either a prebuilt scheduler or a mesh, not "
-                         "both: the mesh only shapes a scheduler this "
-                         "function constructs itself")
+    if scheduler is not None and (mesh is not None or data_axis is not None):
+        raise ValueError("pass either a prebuilt scheduler or mesh/"
+                         "data_axis, not both: they only shape a scheduler "
+                         "this function constructs itself")
     cfg = cfg or EngineConfig(interface=interface)
-    sched = scheduler or QueryScheduler(store, cfg, mesh=mesh)
+    sched = scheduler or QueryScheduler(store, cfg, mesh=mesh,
+                                        data_axis=data_axis)
+    gather0 = sched.metrics.gather_bytes
     served = sched.serve(interleave_clients(list(queries), n_clients))
     occ = max(sched.metrics.occupancy, 1.0)
+    gather_s = (sched.metrics.gather_bytes - gather0) / cm.pod_bw_bytes_s
     total_s = sum(modeled_query_seconds(st, n_clients, cm, occupancy=occ)
-                  for _, st in served)
+                  for _, st in served) + gather_s
     mean_s = total_s / max(len(served), 1)
     return (n_clients * 60.0 / mean_s, sched.cache.stats.hit_rate,
             sched.metrics.occupancy)

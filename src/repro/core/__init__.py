@@ -8,10 +8,12 @@
 - :mod:`repro.core.capacity`      — degree-based capacity planning: size the
   overflow ladder from the data (oracle bounds + pod-shared high-water marks)
 - :mod:`repro.core.stepper`       — shared unit-stepped execution machinery
-  (resumable ladder steps, wave steps, on-device request fingerprints)
+  (resumable ladder steps, wave steps, the sharded-store unit collective,
+  on-device request fingerprints + fragment replay)
 - :mod:`repro.core.scheduler`     — concurrent query scheduler: mixed loads as
-  signature-bucketed, cache-aware waves (vmapped on one host, shard_map across
-  mesh lanes when wide enough)
+  signature-bucketed, cache-aware waves, picking per wave among three
+  lowerings (single-host vmap, replicated mesh lanes, subject-hash sharded
+  store)
 - :mod:`repro.core.fragcache`     — pod-shared star-fragment cache over
   canonicalized seeded unit requests (frequency-aware admission,
   negative-result side table, store-epoch invalidation)

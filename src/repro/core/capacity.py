@@ -197,6 +197,47 @@ class CapacityPlanner:
                 caps.append(self.snug(bounds[k]))
         return caps
 
+    def seeded_unit_bound(self, plan: "QueryPlan", k: int, n_in: int) -> int:
+        """Upper bound on unit ``k``'s branch-boundary row counts given an
+        *observed* seed of ``n_in`` rows.
+
+        Unlike ``unit_bounds`` — whose running product is chained from the
+        query start and therefore monotone — this restarts the chain from
+        the actual seed prefix: ``max`` over branch prefixes of ``n_in``
+        times the running product of branch factors (filters keep the
+        bound, expansions multiply it).  Since every per-row expansion is
+        bounded by its branch factor, no branch boundary of the unit can
+        exceed this, so a table at this capacity cannot overflow — which
+        is what makes shrinking to it byte-safe (capacity-independence).
+        """
+        run = m = max(int(n_in), 1)
+        for b in plan.units[k].branches:
+            run = min(run * self._branch_factor(plan.consts, b),
+                      self.cfg.max_cap)
+            m = max(m, run)
+        return m
+
+    def unit_start_cap(self, plan: "QueryPlan", k: int, n_in: int) -> int:
+        """Starting capacity for unit ``k`` seeded with ``n_in`` rows:
+        the snug HWM if one is recorded at the current epoch, else the
+        snug capacity of the *seeded* oracle bound.
+
+        This is the capacity-shrink follow-up from PR 4: the chained
+        bound never decreases along a query, so a tail unit after a fat
+        intermediate collapsed used to inherit the fat unit's capacity
+        forever on cold plans.  The seeded bound restarts from the
+        observed prefix, so an hourglass-shaped plan's tail units drop
+        back to snug tables — byte-safe by the same
+        capacity-independence argument that justified snug over rungs.
+        """
+        epoch = self.store.epoch
+        hwm = self._get_hwm((plan.signature, plan.consts, k, epoch))
+        if hwm is not None:
+            self.stats.hwm_caps += 1
+            return max(hwm, self.snug(n_in))
+        self.stats.oracle_caps += 1
+        return self.snug(self.seeded_unit_bound(plan, k, n_in))
+
     def query_cap(self, plan: "QueryPlan") -> int:
         """Whole-query starting capacity (the scheduler's per-wave tables
         share one capacity across units): HWM if observed, else the snug

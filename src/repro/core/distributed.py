@@ -31,8 +31,13 @@ element-wise/scan code, so the same engine code lowers under both
 The batching scaffold itself is the module-level ``make_batch_step``
 factory: ``mesh=None`` yields the single-host ``jit(vmap(...))`` step the
 concurrent scheduler (``core/scheduler.py``) dispatches its buckets
-through; with a mesh it yields the ``shard_map`` step used here.  One
-lane evaluator, two lowerings.
+through; with a mesh it yields the ``shard_map`` step used here.  Since
+PR 5 the per-unit collective itself (local evaluation + order-restoring
+gather) lives in ``core/stepper.py`` (``eval_unit_sharded`` +
+``gather_merge``), shared between this module's whole-query lane and the
+scheduler's sharded wave steps — one lane evaluator, and the serial loop,
+vmap waves, replicated mesh waves, sharded mesh waves and this whole-query
+sharded lane are all instantiations of it.
 """
 
 from __future__ import annotations
@@ -48,12 +53,11 @@ from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map as _shard_map
 
-from repro.core.bindings import BindingTable, compact, unit_table
+from repro.core.bindings import BindingTable, unit_table
 from repro.core.capacity import CapacityPlanner
 from repro.core.engine import EngineConfig, QueryPlan, plan_query
 from repro.core.fragcache import FragmentCache
 from repro.core.patterns import BGP
-from repro.core.server import eval_unit
 from repro.rdf.store import StoreArrays, TripleStore
 
 
@@ -125,7 +129,10 @@ def make_batch_step(lane_fn, out_proto=None, *, mesh: Mesh | None = None,
         raise ValueError("mesh-mapped steps need out_proto for out_specs")
     store_spec = StoreArrays(*[P(data_axis) if data_axis else P()
                                for _ in range(6)])
-    lane_spec = P(lane_axes if len(lane_axes) > 1 else lane_axes[0])
+    # an empty lane_axes (every mesh axis shards the store) replicates the
+    # lane batch across the mesh — each shard evaluates all lanes locally
+    lane_spec = P() if not lane_axes else \
+        P(lane_axes if len(lane_axes) > 1 else lane_axes[0])
     out_specs = jax.tree_util.tree_map(lambda _: lane_spec, out_proto)
 
     def step(stacked: StoreArrays, *lane_batches):
@@ -142,7 +149,7 @@ def make_batch_step(lane_fn, out_proto=None, *, mesh: Mesh | None = None,
 
 
 def _lane_eval(plans: tuple, n_vars: int, cfg: DistConfig, radix: int,
-               interface: str, n_shards: int, dev: StoreArrays,
+               interface: str, n_shards: int, logn: int, dev: StoreArrays,
                const_vec: jnp.ndarray
                ) -> tuple[jnp.ndarray, jnp.ndarray, DistStats]:
     """Evaluate one query lane against the local shard, gathering along
@@ -151,67 +158,70 @@ def _lane_eval(plans: tuple, n_vars: int, cfg: DistConfig, radix: int,
     ``dev`` is the local shard's index arrays; ``const_vec`` the lane's
     constants; ``n_shards`` the static ``data``-axis extent (shapes depend
     on it, so it is threaded in from the mesh rather than read off the
-    axis environment).  Returns (rows, valid, stats); rows/valid are the
-    lane's final table (replicated along ``data``).
+    axis environment); ``logn`` the *global* store's log-factor (the cost
+    account must match the serial engine's, and the local shard's length
+    would drift from it).  Returns (rows, valid, stats); rows/valid are
+    the lane's final table (replicated along ``data``).
+
+    Since PR 5 this is just the whole-query instantiation of the shared
+    sharded unit machinery (``stepper.eval_unit_sharded`` +
+    ``stepper.gather_merge``): local collective-free unit evaluation, one
+    order-restoring gather per unit.  The gather sorts by provenance +
+    drawn-value columns, so lane results are *byte-identical* to the
+    serial engine — not merely set-equal as before — and ``server_ops``
+    is the exact serial account (rebuilt from scalar psums of the
+    branch-boundary counts).
     """
+    from repro.core import stepper
+    from repro.core.server import unit_io
+
     axis = cfg.data_axis
-    table = unit_table(cfg.cap, max(n_vars, 1))
+    width = max(n_vars, 1)
+    table = unit_table(cfg.cap, width)
     rounds = jnp.int64(0)
     g_rows = jnp.int64(0)
     g_bytes = jnp.int64(0)
     server_ops = jnp.int64(0)
+    overflow = table.overflow
 
     my_shard = jax.lax.axis_index(axis)
-    # owner masking now lives inside the dispatched probe (eval_unit routes
-    # bound-subject branches through kops.eqrange_owned): non-owned rows get
-    # empty runs, so no per-unit hash-and-mask pass over the table here.
+    # owner masking still routes bound-subject probes through
+    # kops.eqrange_owned (fewer index reads on real hardware); results are
+    # identical either way — a non-owner shard's runs are empty regardless,
+    # because the data simply is not there
     owner = (my_shard, n_shards) if cfg.owner_masking else None
+    trim = min(cfg.shard_cap, cfg.cap)
     for up in plans:
         # --- server side: local (collective-free) unit evaluation ---------
-        local, ops, _ = eval_unit(dev, radix, up, const_vec, table,
-                                  owner=owner)
-        # keep at most shard_cap local rows (page buffer)
-        local = compact(local)
-        keep = jnp.arange(cfg.cap) < cfg.shard_cap
-        local = BindingTable(local.rows,
-                             local.valid & keep,
-                             local.overflow | jnp.any(local.valid & ~keep))
+        prov = jnp.arange(cfg.cap, dtype=jnp.int32)[:, None]
+        seeded = BindingTable(jnp.concatenate([table.rows, prov], axis=1),
+                              table.valid, overflow)
+        local, ops, _, cnt, ovf = stepper.eval_unit_sharded(
+            dev, radix, up, const_vec, seeded, axis=axis, logn=logn,
+            owner=owner)
         server_ops = server_ops + ops
 
-        # --- network: shard-local results -> client lane ------------------
-        rows_g = jax.lax.all_gather(local.rows[: cfg.shard_cap], axis)
-        valid_g = jax.lax.all_gather(local.valid[: cfg.shard_cap], axis)
-        rows_flat = rows_g.reshape(n_shards * cfg.shard_cap, -1)
-        valid_flat = valid_g.reshape(n_shards * cfg.shard_cap)
-        n_found = jnp.sum(valid_flat.astype(jnp.int64))
-        # rebuild the lane table (client state, replicated along data)
-        order = jnp.argsort(~valid_flat, stable=True)
-        new_rows = rows_flat[order]
-        new_valid = valid_flat[order]
-        gathered = n_shards * cfg.shard_cap
-        if gathered >= cfg.cap:
-            new_rows = new_rows[: cfg.cap]
-            new_valid = new_valid[: cfg.cap]
-        else:
-            pad = cfg.cap - gathered
-            new_rows = jnp.concatenate(
-                [new_rows, jnp.full((pad, new_rows.shape[1]), -1, jnp.int32)])
-            new_valid = jnp.concatenate([new_valid, jnp.zeros((pad,), bool)])
-        overflow = local.overflow | (n_found > cfg.cap)
-        table = BindingTable(new_rows, new_valid, overflow)
+        # --- network: shard-local results -> client lane (one collective,
+        # order-restoring: provenance column + drawn-value columns) --------
+        sort_cols = (width,) + tuple(unit_io(up).write_cols)
+        rows_m, valid_m, lost = stepper.gather_merge(
+            local.rows, local.valid, sort_cols, axis, cfg.cap, trim)
+        overflow = ovf | (jax.lax.psum(lost.astype(jnp.int32), axis) > 0)
+        table = BindingTable(rows_m[:, :-1], valid_m, overflow)
 
         rounds = rounds + 1
-        g_rows = g_rows + n_found
-        # bytes actually moved by the all_gather (both arrays, all shards)
-        g_bytes = g_bytes + n_shards * cfg.shard_cap * (new_rows.shape[1] * 4 + 1)
+        g_rows = g_rows + cnt
+        # bytes actually moved by the all_gather (rows incl. the provenance
+        # column, plus the validity mask, from every shard)
+        g_bytes = g_bytes + n_shards * trim * ((width + 1) * 4 + 1)
 
     stats = DistStats(
         rounds=rounds,
         gathered_rows=g_rows,
         gathered_bytes=g_bytes,
-        server_ops=jax.lax.psum(server_ops, axis),
+        server_ops=server_ops,
         n_results=table.count(),
-        overflow=table.overflow,
+        overflow=overflow,
     )
     return table.rows, table.valid, stats
 
@@ -246,6 +256,9 @@ class DistributedEngine:
         # observed by any scheduler on the pod size every later request's
         # tables (epoch-tagged like the cache; core/capacity.py)
         self.pod_planner = CapacityPlanner(store, cfg)
+        # run_load's default scheduler, kept across calls so repeated
+        # loads reuse its sharded store arrays and step caches
+        self._load_sched = None
 
     @property
     def _stacked(self) -> StoreArrays:
@@ -302,9 +315,13 @@ class DistributedEngine:
                              f"{n_lane_slots}")
         per_lane = batch // n_lane_slots
 
+        from repro.core.server import log_factor
+        logn = log_factor(self.store.n_triples)  # GLOBAL store's factor
+
         def lane_fn(dev, const_vec):
             return _lane_eval(plan.units, plan.n_vars, dcfg, self.store.radix,
-                              plan.interface, self._n_data, dev, const_vec)
+                              plan.interface, self._n_data, logn, dev,
+                              const_vec)
 
         step = make_batch_step(
             lane_fn, out_proto=(0, 0, DistStats(*[0] * 6)), mesh=self.mesh,
@@ -362,27 +379,39 @@ class DistributedEngine:
         """Serve a query list through a mesh-routed concurrent scheduler.
 
         The distributed counterpart of ``QueryEngine.run_load``: requests
-        are bucketed by plan signature and stepped unit-by-unit, but wide
-        waves span this engine's mesh lanes (every mesh axis becomes lane
-        slots, store replicated — ``make_batch_step(mesh=...,
-        data_axis=None)``) while narrow waves fall back to the single-host
-        vmap step.  All waves share ``self.pod_cache``, so fragments
-        computed anywhere on the pod serve every later request.  Results
-        and gross stats are byte-identical to the serial ``QueryEngine.run``
-        path — mesh routing changes the lowering, not the computation.
+        are bucketed by plan signature and stepped unit-by-unit, and the
+        scheduler picks each wave's lowering from this engine's mesh.
+        When the mesh carries the engine's ``data`` axis, wide waves run
+        **sharded**: the store is subject-hash sharded along it (the same
+        per-device memory footprint as ``run_batch`` — 1/n_data of the
+        index per device) and wave lanes span the remaining axes, with one
+        order-restoring collective per unit
+        (``stepper.sharded_unit_step``).  Narrow waves fall back to
+        replicated mesh lanes or single-host vmap.  All waves share
+        ``self.pod_cache`` and ``self.pod_planner``, so fragments and
+        high-water marks observed anywhere on the pod serve every later
+        request.  Results and gross stats are byte-identical to the serial
+        ``QueryEngine.run`` path — the lowering changes placement, never
+        the computation.
 
-        Pass a ``QueryScheduler`` to reuse its metrics across calls; it
-        must have been built with ``cache=engine.pod_cache`` to keep the
-        pod-shared contract.
+        Pass a ``QueryScheduler`` to control the configuration or reuse
+        metrics across calls; it must have been built with
+        ``cache=engine.pod_cache`` to keep the pod-shared contract.
+        Without one, the engine keeps a default scheduler across calls so
+        repeated loads reuse its sharded store arrays and step caches.
         """
         from repro.core.scheduler import QueryScheduler
 
+        if scheduler is not None:
+            return scheduler.run_queries(queries)
         # QueryScheduler raises its wave-width cap to the mesh's slot
         # count itself, so the default config spans any pod width
-        sched = scheduler or QueryScheduler(
-            self.store, self.cfg, cache=self.pod_cache, mesh=self.mesh,
-            planner=self.pod_planner)
-        return sched.run_queries(queries)
+        if getattr(self, "_load_sched", None) is None \
+                or self._load_sched.mesh is not self.mesh:
+            self._load_sched = QueryScheduler(
+                self.store, self.cfg, cache=self.pod_cache, mesh=self.mesh,
+                planner=self.pod_planner, data_axis=self.dcfg.data_axis)
+        return self._load_sched.run_queries(queries)
 
     # ---------------------------------------------------------------- dry-run
     def lower_step(self, plan: QueryPlan, batch: int,

@@ -19,21 +19,30 @@ the benchmark layer's job.
 
 Execution model
 ---------------
-A *single* query (``run``) executes unit-by-unit through the shared batch
-step factory (``distributed.make_batch_step`` via ``core/stepper.py``),
-each unit a jitted step keyed by the unit's structure — so structurally
-identical units share compiles across queries and with the scheduler.
-Table capacities come from the capacity planner (``core/capacity.py``):
-each unit starts at a data-informed *snug* capacity — the high-water mark
-(true peak row count) last observed for exactly this ``(plan signature,
-constants, unit)`` at the current store epoch, or the degree oracle's
-upper bound for cold plans, quantized to 1/16-octave granularity so fat
-units never pay a 4x ladder rung's overshoot.  Capacity overflow (the
-timeout analogue) is handled *resumably*: the last valid binding table is
-the checkpoint, and only the overflowed unit's table regrows at 4x — the
-prefix units are never re-executed.  At ``max_cap`` the overflow flag
-latches and evaluation continues on the truncated table, exactly like the
-blind ladder's give-up rung.
+Every execution path in the system is an instantiation of **one unit
+evaluator** behind the shared batch-step factory
+(``distributed.make_batch_step`` via ``core/stepper.py``): the serial
+ladder, vmapped scheduler waves, replicated mesh waves, subject-hash
+*sharded* mesh waves, and the distributed engine's whole-query lanes all
+run the same branch evaluators — the lowering (and its collective
+schedule, or absence) is the only difference, and it is invisible in the
+bytes.
+
+A *single* query (``run``) executes unit-by-unit, each unit a jitted step
+keyed by the unit's structure — so structurally identical units share
+compiles across queries and with the scheduler.  Table capacities come
+from the capacity planner (``core/capacity.py``): each unit starts at a
+data-informed *snug* capacity — the high-water mark (true peak row count)
+last observed for exactly this ``(plan signature, constants, unit)`` at
+the current store epoch, or the degree oracle's bound *seeded from the
+observed input prefix* for cold plans (``unit_start_cap``), so capacities
+shrink back after a fat intermediate collapses instead of dragging the
+query maximum through the tail.  Capacity overflow (the timeout analogue)
+is handled *resumably*: the last valid binding table is the checkpoint,
+and only the overflowed unit's table regrows at 4x — the prefix units are
+never re-executed.  At ``max_cap`` the overflow flag latches and
+evaluation continues on the truncated table, exactly like the blind
+ladder's give-up rung.
 
 Because a non-overflowing evaluation's valid rows and cost account are
 independent of the capacity it ran at, this path is byte-identical (rows
@@ -45,34 +54,44 @@ suite (``tests/test_capacity.py``).
 
 A query *load* (``run_load``) does not loop over ``run``: it delegates to
 the concurrent scheduler (``core/scheduler.py``), which buckets requests
-by plan signature, pads buckets to fixed-width waves, and dispatches them
-unit-by-unit through the shared batch-step factory
-(``distributed.make_batch_step``) with the star-fragment cache
-(``core/fragcache.py`` — frequency-aware admission, negative-result side
-table, store-epoch invalidation) between unit steps.  The two paths
-return byte-identical valid result rows and identical gross
-``QueryStats``; the scheduler additionally fills the cache fields
-(``cache_hits``, ``cache_misses``, ``nrs_saved``, ``ntb_saved``) that
-``run`` leaves zero.  The scheduler seam is what turns the per-query cost
-simulator into a load-serving system: repeated star/bind requests across
-queries and simulated clients are served from the cache instead of the
-store.
+by plan signature, pads buckets to fixed-width waves, and picks each
+wave's lowering — single-host vmap, replicated mesh lanes, or the sharded
+mesh step — with the star-fragment cache (``core/fragcache.py`` —
+frequency-aware admission, negative-result side table, store-epoch
+invalidation) consulted digest-first between unit steps and cache hits
+*replayed on device* (``kops.replay_delta``), so all-hit waves never
+materialise Omega blocks on the host.  The two paths return byte-identical
+valid result rows and identical gross ``QueryStats``; the scheduler
+additionally fills the cache fields (``cache_hits``, ``cache_misses``,
+``nrs_saved``, ``ntb_saved``) that ``run`` leaves zero.  The scheduler
+seam is what turns the per-query cost simulator into a load-serving
+system: repeated star/bind requests across queries and simulated clients
+are served from the cache instead of the store.
 
 The *distributed* load path (``DistributedEngine.run_load``) is the same
-scheduler handed a device mesh and the engine's pod-shared cache: waves
-wide enough to cover the mesh's lane slots dispatch through the
-replicated-store ``shard_map`` instantiation of the same step factory
-(one wave lane per device), narrow waves fall back to vmap, and every
-lane consults the one ``pod_cache`` whose entries are tagged with the
-store epoch (``TripleStore.bump_epoch`` invalidates them on mutation).
-Mesh routing changes device placement only — all-integer evaluation makes
-the lowering choice invisible in the bytes, which is exactly what the
-mesh-parametrized scheduler tests and the property suite pin.
+scheduler handed a device mesh, the engine's pod-shared cache/planner and
+its ``data`` axis: wide waves run against the subject-hash sharded store
+(1/n_data of the index per device — the memory-scaling mode) with wave
+lanes spread over the remaining axes and one order-restoring collective
+per unit (``stepper.sharded_unit_step`` hoists exactly the per-unit
+``all_gather`` the whole-query lane evaluator uses); narrower waves fall
+back to replicated mesh lanes or vmap.  The sharded step rebuilds the
+exact serial cost account from scalar psums of the branch-boundary counts
+and sorts its gather by provenance + drawn-value columns back into serial
+row order, so the choice of lowering — and the shard count — is invisible
+in results, stats, overflow flags, retry sequences and cache digests,
+which is exactly what the shard-parametrized scheduler tests and the
+property suite pin.
+
+Cost accounting: the TPF page path charges fragment location at the
+*dispatched* probe primitive's cost (``kops.probe_op_cost`` — bisection
+steps on the jnp oracle, column-stream tile passes on Pallas), so
+TPF-vs-SPF server-op comparisons track the kernel layer actually serving
+the requests.
 """
 
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass, replace
 from functools import partial
 from typing import NamedTuple
@@ -85,6 +104,7 @@ from repro.core.bindings import BindingTable, unit_table
 from repro.core.capacity import CapacityPlanner
 from repro.core.patterns import BGP, StarPattern, star_decomposition
 from repro.core.server import UnitPlan, eval_unit, plan_unit
+from repro.kernels import ops as kops
 from repro.rdf.store import StoreArrays, TripleStore
 
 
@@ -249,10 +269,14 @@ def _execute(plan_sig_static: tuple, plans: tuple[UnitPlan, ...], n_vars: int,
         # ---- work split ---------------------------------------------------
         if cfg.interface == "tpf":
             # server only locates/pages each instantiated fragment; the
-            # client performs the joins (merging bindings into its table)
-            n = dev.key_ps_pso.shape[0]
-            logn = max(1, math.ceil(math.log2(max(n, 2))))
-            server_ops = server_ops + blocks * 2 * logn + matched_triples
+            # client performs the joins (merging bindings into its table).
+            # The per-probe charge is the dispatched primitive's cost model
+            # (kops.probe_op_cost: bisection steps on the jnp oracle,
+            # column-stream tile passes on the Pallas path), so TPF-vs-SPF
+            # server-op comparisons use the same accounting as the kernel
+            # layer it actually runs.
+            probe_ops = kops.probe_op_cost(dev.key_ps_pso.shape[0])
+            server_ops = server_ops + blocks * probe_ops + matched_triples
             client_ops = client_ops + ops
         else:
             server_ops = server_ops + ops
@@ -314,7 +338,7 @@ class QueryEngine:
             # per-unit host syncs (byte-identical either way; this keeps
             # selective queries at blind-path speed)
             return self._run_blind(plan)
-        return self._run_planned(plan, caps)
+        return self._run_planned(plan)
 
     def _run_blind(self, plan: QueryPlan) -> tuple[BindingTable, QueryStats]:
         """The pre-planner blind ladder: restart the whole query at 4x
@@ -336,12 +360,18 @@ class QueryEngine:
                 return table, stats
             cap *= 4
 
-    def _run_planned(self, plan: QueryPlan, caps: list[int]
+    def _run_planned(self, plan: QueryPlan
                      ) -> tuple[BindingTable, QueryStats]:
         """Unit-stepped execution with planner capacities + resumable
         overflow (see the module docstring's execution model).  Stats are
         host ints built through ``stepper.unit_cost`` — the same twin of
-        ``_execute``'s accounting the scheduler uses."""
+        ``_execute``'s accounting the scheduler uses.
+
+        Each unit starts at ``planner.unit_start_cap`` — its HWM, or the
+        *seeded* oracle bound chained from the observed input prefix —
+        so capacities shrink back to snug after a fat intermediate
+        collapses (hourglass plans no longer drag the fat unit's capacity
+        through their tail; byte-safe by capacity-independence)."""
         from repro.core import stepper
 
         cfg = self.cfg
@@ -350,9 +380,10 @@ class QueryEngine:
         const_vec = jnp.asarray(np.asarray(plan.consts, dtype=np.int64))[None]
         n_vars = max(plan.n_vars, 1)
         n = dev.key_ps_pso.shape[0]
-        logn = max(1, int(math.ceil(math.log2(max(n, 2)))))
+        probe_ops = kops.probe_op_cost(n)
 
-        cap = caps[0] if caps else cfg.cap
+        cap = self.planner.unit_start_cap(plan, 0, 1) if plan.units \
+            else cfg.cap
         seed = unit_table(cap, n_vars)
         rows, valid = seed.rows, seed.valid
         ovf_dev = seed.overflow
@@ -365,7 +396,7 @@ class QueryEngine:
             # rung runs everything at max_cap on the truncated table — do
             # exactly that for byte-identity
             want = cfg.max_cap if overflow \
-                else max(caps[k], self.planner.snug(n_in))
+                else self.planner.unit_start_cap(plan, k, n_in)
             if want != cap:
                 rows, valid = stepper.reseat(rows, valid, want)
                 cap = want
@@ -385,7 +416,8 @@ class QueryEngine:
             rows, valid, ovf_dev = r_o[0], v_o[0], o_o[0]
             out_count = int(np.asarray(cnt_o)[0])
             d = stepper.unit_cost(cfg, k, up, n_in,
-                                  out_count, int(np.asarray(ops_o)[0]), logn)
+                                  out_count, int(np.asarray(ops_o)[0]),
+                                  probe_ops)
             nrs += d[0]
             ntb += d[1]
             server += d[2]

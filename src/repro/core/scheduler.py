@@ -21,34 +21,55 @@ clients and turns it into device-efficient work:
    of a single huge-capacity retry.
 3. **Dispatch** — a wave executes unit-by-unit through the shared batch
    step factory (``distributed.make_batch_step`` via ``core/stepper.py``),
-   and the factory is instantiated *per wave*: a scheduler built with a
-   device ``mesh`` routes waves wide enough to span the mesh's lane slots
-   through the replicated-store ``shard_map`` step (``mesh=...,
-   data_axis=None`` — one wave lane per device), while narrow waves (and
-   every wave of a mesh-less scheduler) take the single-host
-   ``jit(vmap(...))`` step.  Both lowerings run the same per-lane
-   evaluator on the full store, so the choice is pure scheduling — results
-   stay byte-identical either way.  Unit steps are jit-cached by unit
-   structure (and mesh), so buckets with different query signatures still
-   share compilations of their common stars.  Wave state stays
-   device-resident between steps: per unit only per-lane digests, counts
-   and flags cross to the host.
+   and the factory is instantiated *per wave*, picking among **three
+   lowerings** by wave width, store size and capacity:
+
+   - **vmap** — narrow waves (and every wave of a mesh-less scheduler):
+     single-host ``jit(vmap(...))``, store broadcast.
+   - **replicated mesh** — waves wide enough to span the mesh's lane
+     slots: ``shard_map`` with every mesh axis a lane axis and the store
+     replicated per device (``data_axis=None``).
+   - **sharded mesh** — a scheduler built with a ``data_axis`` naming one
+     of its mesh axes shards the store by subject hash along it (1/n_data
+     of the index per device — the memory-scaling mode) and spreads wave
+     lanes over the remaining axes; each unit step is local branch
+     evaluation plus one order-restoring collective
+     (``stepper.sharded_unit_step``).  Waves at the overflow-latch rung
+     (``cap == max_cap``) fall back to the replicated/vmap lowerings —
+     latch semantics truncate mid-unit in global row order, which only a
+     whole-table lowering can reproduce.
+
+   All three run the same per-lane evaluator, so the pick is pure
+   placement — valid rows, gross stats, overflow flags and retry
+   sequences stay byte-identical (the sharded step rebuilds the exact
+   serial cost account from scalar psums and restores serial row order in
+   its gather).  Unit steps are jit-cached by unit structure (and mesh),
+   so buckets with different query signatures still share compilations of
+   their common stars.  Wave state stays device-resident between steps:
+   per unit only per-lane digests, counts and flags cross to the host.
 4. **Cache** — between unit steps the scheduler fingerprints every lane's
    seeded request *on device* (``kops.fingerprint_rows`` over the valid
    prefix of the unit's read columns) and consults the pod-shared
    star-fragment cache (``core/fragcache.py``) with the digest-form key
    (``server.unit_digest_key``, tagged with the store epoch): the Omega
    block itself never round-trips to the host just to be hashed into a
-   key.  Host arrays materialise only when actually needed — a wave whose
-   active lanes all hit pulls its state once and replays host-side
-   (skipping the device step entirely); a miss pulls just that lane's
-   output prefix to record the replayable delta.  Admission is
-   frequency-aware over a constant-space count-min sketch, with empty
-   fragments in a negative side table.  Exact per-query savings land in
-   ``QueryStats`` (``cache_hits``/``cache_misses``/``nrs_saved``/
-   ``ntb_saved``).  One cache instance may be shared by any number of
-   schedulers (``DistributedEngine.pod_cache``); a store mutation bumps
-   ``TripleStore.epoch`` and stale fragments are swept on the next drain.
+   key.  Replay runs on device too (``stepper.replay_step`` /
+   ``kops.replay_delta``): when every active lane hits, the cached
+   fragment deltas — the small objects — are uploaded and scattered onto
+   the lanes' seed prefixes in place, so an all-hit wave performs **zero**
+   host Omega materialisations (``SchedMetrics.host_block_pulls`` counts
+   the exceptions: a miss pulls just that lane's output prefix to record
+   the replayable delta, an overflow-retire pulls its checkpoint seed).
+   The digest is a pure function of the valid prefix, which is
+   byte-identical across all three lowerings and every shard count, so
+   fragments recorded under one lowering serve waves under any other.
+   Admission is frequency-aware over a constant-space count-min sketch,
+   with empty fragments in a negative side table.  Exact per-query
+   savings land in ``QueryStats`` (``cache_hits``/``cache_misses``/
+   ``nrs_saved``/``ntb_saved``).  One cache instance may be shared by any
+   number of schedulers (``DistributedEngine.pod_cache``); a store
+   mutation bumps ``TripleStore.epoch`` and stale fragments are swept on
+   the next drain.
 
 Provenance: unit steps carry an extra int32 table column seeded with the
 row index, so the scheduler can read each output row's source row off the
@@ -83,10 +104,10 @@ from repro.core import stepper
 from repro.core.bindings import BindingTable
 from repro.core.capacity import CapacityPlanner
 from repro.core.engine import EngineConfig, QueryPlan, QueryStats, plan_query
-from repro.core.fragcache import FragmentCache, FragmentEntry, replay
+from repro.core.fragcache import FragmentCache, FragmentEntry
 from repro.core.patterns import BGP
-from repro.core.server import unit_digest_key, unit_io
-from repro.kernels import ref as kref
+from repro.core.server import log_factor, unit_digest_key, unit_io
+from repro.kernels import ops as kops
 from repro.rdf.store import TripleStore
 
 
@@ -107,6 +128,13 @@ class SchedulerConfig:
     # straight to the last observed rung (results are byte-identical: the
     # serial path's returned table/stats also come from the final rung)
     cap_hints: bool = True
+    # sharded lowering policy (only with a mesh + data_axis): minimum
+    # store size for sharding to pay (below it the per-unit collective
+    # dominates and replicated lanes win), and the per-shard gather
+    # budget's skew margin (stepper.shard_trim: a shard ships at most
+    # headroom * cap / n_shards rows per unit — "per-shard caps")
+    shard_min_triples: int = 0
+    shard_headroom: int = 2
 
 
 class Request(NamedTuple):
@@ -142,11 +170,20 @@ class SchedMetrics:
     jobs: int = 0  # distinct executions after collapsing
     waves: int = 0
     steps: int = 0  # device unit-steps dispatched
-    mesh_steps: int = 0  # the subset routed through the mesh shard_map step
+    mesh_steps: int = 0  # the subset routed through mesh shard_map steps
+    shard_steps: int = 0  # ...and the subset of THOSE on the sharded store
     steps_skipped: int = 0  # unit-steps fully served by the cache
     lane_steps: int = 0  # lanes x dispatched steps (incl. padding)
     active_lane_steps: int = 0  # non-padding lanes among those
     retries: int = 0  # jobs requeued (resumably) at 4x cap
+    # Omega-block device->host pulls during unit stepping (miss-insertion
+    # prefix pulls + overflow-retire checkpoints; finalize excluded).  The
+    # device-replay invariant the tests pin: an all-hit wave adds zero.
+    host_block_pulls: int = 0
+    # bytes moved by the sharded lowering's per-unit gather collectives
+    # (benchlib folds these into the modeled throughput so sharded BENCH
+    # numbers are not silently optimistic)
+    gather_bytes: int = 0
 
     @property
     def occupancy(self) -> float:
@@ -203,13 +240,25 @@ class QueryScheduler:
     waves.  A 1-device mesh is valid and routes everything through the
     shard_map lowering (how the tier-1 suite exercises the path on one
     CPU device).
+
+    ``data_axis`` (naming one of the mesh's axes) additionally opts waves
+    into the **sharded** lowering: the store is subject-hash sharded along
+    it (``TripleStore.stacked_shard_arrays`` — 1/n_shards of the index per
+    device) and wave lanes span the remaining axes.  ``_run_wave`` picks
+    it for waves wide enough to cover those lane slots whenever the store
+    clears ``scfg.shard_min_triples`` and the wave is below the
+    overflow-latch rung; results stay byte-identical (the sharded step's
+    per-unit gather restores serial row order and its psums rebuild the
+    exact serial cost account).  A ``data_axis`` of extent 1 is valid and
+    exercises the sharded lowering on one device.
     """
 
     def __init__(self, store: TripleStore, cfg: EngineConfig,
                  scfg: SchedulerConfig | None = None,
                  cache: FragmentCache | None = None,
                  mesh: Mesh | None = None,
-                 planner: CapacityPlanner | None = None):
+                 planner: CapacityPlanner | None = None,
+                 data_axis: str | None = None):
         self.store = store
         self.cfg = cfg
         self.scfg = scfg or SchedulerConfig()
@@ -218,10 +267,25 @@ class QueryScheduler:
         self.planner = planner if planner is not None \
             else CapacityPlanner(store, cfg)
         self.mesh = mesh
+        if mesh is not None and data_axis is not None \
+                and data_axis not in mesh.axis_names:
+            data_axis = None  # a lane-only mesh: replicated/vmap picks only
+        self.data_axis = data_axis
         if mesh is not None:
+            # replicated lowering: every axis (data included) is lane slots
             self._lane_axes = tuple(mesh.axis_names)
             self._mesh_slots = math.prod(mesh.shape[a]
                                          for a in self._lane_axes)
+            if data_axis is not None:
+                self._n_shards = mesh.shape[data_axis]
+                self._shard_lane_axes = tuple(a for a in mesh.axis_names
+                                              if a != data_axis)
+                self._shard_slots = math.prod(
+                    [mesh.shape[a] for a in self._shard_lane_axes] or [1])
+            else:
+                self._n_shards = 0
+                self._shard_lane_axes = ()
+                self._shard_slots = 0
             if self.scfg.lanes < self._mesh_slots:
                 # the wave-width cap must reach the slot count or wide
                 # waves could never span the mesh (mesh routing would be
@@ -230,13 +294,21 @@ class QueryScheduler:
         else:
             self._lane_axes = ()
             self._mesh_slots = 0
+            self._n_shards = 0
+            self._shard_lane_axes = ()
+            self._shard_slots = 0
         self.metrics = SchedMetrics()
         self._plan_memo: dict[BGP, QueryPlan] = {}
         self._cap_hints: dict[tuple, int] = {}  # legacy memo (planner off)
         self._pending: list[Request] = []
         self._next_rid = 0
+        self._stacked_cache = None  # sharded store arrays, epoch-versioned
+        self._stacked_epoch = store.epoch
         n = store.n_triples
-        self._logn = max(1, int(math.ceil(math.log2(max(n, 2)))))
+        self._logn = log_factor(n)
+        # TPF page-accounting charges the dispatched probe primitive's
+        # cost, not an analytic logn (read once, like FORCE at trace time)
+        self._probe_ops = kops.probe_op_cost(n)
 
     # ------------------------------------------------------------- requests
     def submit(self, query: BGP, client: int = 0) -> int:
@@ -275,6 +347,19 @@ class QueryScheduler:
         if self.cfg.capacity_planner:
             return self.planner.query_cap(plan)
         return self._cap_hints.get(jkey, self.cfg.cap)
+
+    @property
+    def _stacked(self):
+        """Subject-hash sharded store arrays for the sharded lowering,
+        built lazily and versioned by the store epoch (mirrors
+        ``DistributedEngine._stacked``: a ``bump_epoch`` forces a
+        re-shard, so sharded waves can never serve pre-mutation arrays)."""
+        if self._stacked_cache is None \
+                or self._stacked_epoch != self.store.epoch:
+            self._stacked_cache = self.store.stacked_shard_arrays(
+                self._n_shards)
+            self._stacked_epoch = self.store.epoch
+        return self._stacked_cache
 
     # ---------------------------------------------------------------- drain
     def drain(self) -> dict[int, tuple[BindingTable, QueryStats]]:
@@ -327,16 +412,22 @@ class QueryScheduler:
         in ``results``; overflowed ones come back as resumable 4x-cap retry
         jobs seeded at the failing unit.
 
-        Wide waves span the mesh: with a mesh attached and the wave width
-        covering the lane-slot count, unit steps dispatch through the
-        replicated-store shard_map step (one lane per device); otherwise
-        the single-host vmap step runs.  The pick is per wave, so one
-        bucket can mix both (e.g. a wide first pass and a 1-job overflow
-        retry).
+        The lowering is picked per wave (sharded > replicated mesh >
+        vmap): with a ``data_axis``, waves wide enough to cover the
+        non-data lane slots run against the subject-hash sharded store
+        (unless the store is below the sharding threshold or the wave sits
+        at the overflow-latch rung); waves covering the full mesh run
+        replicated; everything else takes the single-host vmap step.  One
+        bucket can mix all three (e.g. a wide sharded first pass and a
+        1-job vmap overflow retry) — results are byte-identical across
+        them.
 
-        Wave state lives on the device between steps and moves to the host
-        only when an all-hit unit replays there (or at finalize); the
-        cache phase ships 16-byte digests per lane, not Omega blocks.
+        Wave state lives on the device between steps: the cache phase
+        ships 16-byte digests per lane, cache hits replay on device
+        (uploaded deltas), and Omega blocks cross to the host only for a
+        miss's recorded prefix or an overflow-retire's checkpoint
+        (counted in ``metrics.host_block_pulls``) — and once at finalize
+        to deliver the responses.
         """
         scfg = self.scfg
         plan, cap = jobs[0].plan, jobs[0].cap
@@ -345,16 +436,23 @@ class QueryScheduler:
         B = 1  # smallest power-of-two width that fits, capped at scfg.lanes
         while B < min(n_active, scfg.lanes):
             B *= 2
-        use_mesh = self.mesh is not None and B >= self._mesh_slots
-        if use_mesh and B % self._mesh_slots:
+        # --- lowering pick: sharded > replicated mesh > vmap --------------
+        use_shard = (self._n_shards > 0 and B >= self._shard_slots
+                     and cap < self.cfg.max_cap
+                     and self.store.n_triples >= scfg.shard_min_triples)
+        use_mesh = (not use_shard and self.mesh is not None
+                    and B >= self._mesh_slots)
+        slots = self._shard_slots if use_shard \
+            else self._mesh_slots if use_mesh else 0
+        if slots and B % slots:
             # non-power-of-two slot counts (e.g. a 6-device pod) would
             # otherwise never divide a power-of-two width and mesh routing
             # would silently die: round the wave up to the next slot
             # multiple instead (the extra lanes are no-op padding)
-            B = -(-B // self._mesh_slots) * self._mesh_slots
+            B = -(-B // slots) * slots
         V = max(plan.n_vars, 1)
         epoch = self.store.epoch
-        dev = self.store.device
+        dev = self._stacked if use_shard else self.store.device
 
         consts = np.zeros((B, max(len(plan.consts), 1)), np.int64)
         for j, job in enumerate(jobs):
@@ -379,17 +477,17 @@ class QueryScheduler:
                for job in jobs]
         self.metrics.waves += 1
 
-        # state location: device arrays between steps; host arrays while a
-        # run of all-hit units replays without touching the device
+        # wave state is device-resident for the whole wave; host numpy
+        # exists only in the seeds above and the finalize pull below
         rows_d = jnp.asarray(rows_h)
         valid_d = jnp.asarray(valid_h)
-        on_host = False
 
         retired: set[int] = set()
         retries: list[_Job] = []
 
         def _retire(j: int, k: int, seed: np.ndarray) -> None:
             job = jobs[j]
+            self.metrics.host_block_pulls += 1  # the checkpointed seed
             retries.append(_Job(job.plan, job.consts,
                                 min(cap * 4, self.cfg.max_cap), job.rids,
                                 resume_k=k, seed=seed, acc=acc[j],
@@ -406,17 +504,15 @@ class QueryScheduler:
             n_in = {j: counts[j] for j in active}
 
             # --- cache phase: digest-first canonicalization ---------------
+            # the digest is a pure function of the valid prefix, which is
+            # byte-identical across lowerings and shard counts, so sharded
+            # waves hit fragments recorded by vmap waves and vice versa
             status: dict[int, tuple[str, object]] = {}
             keys: dict[int, tuple] = {}
             if scfg.use_cache:
-                if on_host:
-                    digs = {j: kref.fingerprint_prefix_np(
-                        rows_h[j, :n_in[j]][:, list(io.read_cols)])
-                        for j in active}
-                else:
-                    d = np.asarray(
-                        stepper.digest_step(io.read_cols)(rows_d, valid_d))
-                    digs = {j: tuple(int(x) for x in d[j]) for j in active}
+                d = np.asarray(
+                    stepper.digest_step(io.read_cols)(rows_d, valid_d))
+                digs = {j: tuple(int(x) for x in d[j]) for j in active}
                 first_of: dict[tuple, int] = {}
                 for j in active:
                     cvals = tuple(int(consts[j, i]) for i in io.const_idx)
@@ -439,11 +535,21 @@ class QueryScheduler:
             need_step = any(s == "miss" for s, _ in status.values())
             ops_lane: dict[int, int] = {}
             if need_step:
-                if on_host:
-                    rows_d = jnp.asarray(rows_h)
-                    valid_d = jnp.asarray(valid_h)
-                    on_host = False
-                if use_mesh:
+                if use_shard:
+                    step = stepper.sharded_unit_step(
+                        up, self.store.radix, self.mesh, self.data_axis,
+                        self._shard_lane_axes, self._n_shards, self._logn,
+                        scfg.shard_headroom)
+                    self.metrics.mesh_steps += 1
+                    self.metrics.shard_steps += 1
+                    trim = stepper.shard_trim(cap, self._n_shards,
+                                              scfg.shard_headroom)
+                    # the per-unit all_gather's payload (rows incl. the
+                    # provenance column + validity), for the throughput
+                    # model — measured, not assumed
+                    self.metrics.gather_bytes += \
+                        B * self._n_shards * trim * ((V + 1) * 4 + 1)
+                elif use_mesh:
                     step = stepper.unit_step(up, self.store.radix, self.mesh,
                                              self._lane_axes)
                     self.metrics.mesh_steps += 1
@@ -471,6 +577,7 @@ class QueryScheduler:
                             and not bool(ovf[j]):
                         # miss that needs insertion: pull only this lane's
                         # output prefix to record the replayable delta
+                        self.metrics.host_block_pulls += 1
                         n_out = int(cnt_np[j])
                         out_rows = np.asarray(r_o[j, :n_out])
                         entry = FragmentEntry(
@@ -492,15 +599,13 @@ class QueryScheduler:
                         jobs[j].peak_seen = max(jobs[j].peak_seen,
                                                 int(peak_np[j]), n_in[j])
             else:
-                # every active lane hit: replay host-side, skip the device
+                # every active lane hit: replay the cached deltas on the
+                # device (stepper.replay_step / kops.replay_delta).  The
+                # uploaded delta is the small object — the lanes' Omega
+                # blocks never cross to the host, so an all-hit wave adds
+                # zero host_block_pulls (the invariant the tests pin).
                 self.metrics.steps_skipped += 1
-                if not on_host:
-                    # a hit that needs replay: materialise the wave state
-                    # once (np.array: writable copies — replay writes into
-                    # these buffers in place across subsequent units)
-                    rows_h = np.array(rows_d)
-                    valid_h = np.array(valid_d)
-                    on_host = True
+                live: dict[int, FragmentEntry] = {}
                 for j in active:
                     entry = status[j][1]
                     if isinstance(entry, int):  # shared alias of a hit lane
@@ -509,15 +614,35 @@ class QueryScheduler:
                     if entry.overflow and not bool(ovf[j]) \
                             and cap < self.cfg.max_cap:
                         # the cached unit overflowed at this cap: resume
-                        # from the (host) checkpoint like a computed one
-                        _retire(j, k, rows_h[j, :n_in[j]].copy())
+                        # from the checkpointed seed like a computed one
+                        _retire(j, k, np.asarray(rows_d[j, :n_in[j]]))
                         continue
-                    rows_h[j], valid_h[j] = replay(
-                        entry, rows_h[j, :n_in[j]], cap, V, io.write_cols)
-                    ovf[j] = bool(ovf[j]) | entry.overflow
-                    counts[j] = entry.n_out
-                    ops_lane[j] = entry.ops
-                    jobs[j].peak_seen = max(jobs[j].peak_seen, entry.peak,
+                    live[j] = entry
+                if not live:  # every hit lane retired on a cached overflow
+                    continue
+                n_w = len(io.write_cols)
+                m = 1
+                for e in live.values():
+                    m = max(m, e.n_out)
+                # pow2-pad the delta width: bounds replay-step retraces
+                m = min(1 << (m - 1).bit_length(), cap)
+                src_h = np.zeros((B, m), np.int32)
+                wr_h = np.zeros((B, m, n_w), np.int32)
+                nout_h = np.zeros((B,), np.int32)  # non-hit lanes: empty
+                for j, e in live.items():
+                    if e.n_out:
+                        src_h[j, :e.n_out] = e.src_row
+                        if n_w:
+                            wr_h[j, :e.n_out] = e.written
+                    nout_h[j] = e.n_out
+                rows_d, valid_d = stepper.replay_step(io.write_cols)(
+                    rows_d, jnp.asarray(src_h), jnp.asarray(wr_h),
+                    jnp.asarray(nout_h))
+                for j, e in live.items():
+                    ovf[j] = bool(ovf[j]) | e.overflow
+                    counts[j] = e.n_out
+                    ops_lane[j] = e.ops
+                    jobs[j].peak_seen = max(jobs[j].peak_seen, e.peak,
                                             n_in[j])
 
             # --- host stats accounting (twin of engine._execute) ----------
@@ -526,7 +651,7 @@ class QueryScheduler:
                     continue
                 nrs_d, ntb_d, server_d, client_d = stepper.unit_cost(
                     self.cfg, k, up, n_in[j], counts[j], ops_lane[j],
-                    self._logn)
+                    self._probe_ops)
                 a = acc[j]
                 a.nrs += nrs_d
                 a.ntb += ntb_d
@@ -540,9 +665,11 @@ class QueryScheduler:
                     a.ntb_saved += ntb_d
 
         # --------------------------------------------------------- finalize
-        if not on_host:
-            rows_h = np.asarray(rows_d)
-            valid_h = np.asarray(valid_d)
+        # the one end-of-wave materialisation: delivering the responses
+        # (deliberately not counted in host_block_pulls, which tracks
+        # unit-stepping traffic)
+        rows_h = np.asarray(rows_d)
+        valid_h = np.asarray(valid_d)
         for j, job in enumerate(jobs):
             if j in retired:
                 continue

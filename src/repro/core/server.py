@@ -389,6 +389,15 @@ BRANCH_EVALUATORS: dict[str, BranchEvaluator] = {
 }
 
 
+def log_factor(n: int) -> int:
+    """``ceil(log2 n)`` floored at 1 — the cost model's binary-search
+    factor.  The single point of truth: the serial evaluator, the
+    scheduler's host accounting and the sharded lowering's static
+    ``logn`` must all derive it identically, or the byte-identity of
+    their cost accounts silently breaks."""
+    return max(1, int(math.ceil(math.log2(max(int(n), 2)))))
+
+
 def eval_unit(dev: StoreArrays, radix: int, plan: UnitPlan,
               const_vec: jnp.ndarray, table: BindingTable,
               owner: tuple[jnp.ndarray, int] | None = None
@@ -410,8 +419,7 @@ def eval_unit(dev: StoreArrays, radix: int, plan: UnitPlan,
     owner-maskable — a scan-first unit expands subjects out of the local
     shard, which owns them by construction.
     """
-    n = dev.key_ps_pso.shape[0]
-    logn = max(1, int(math.ceil(math.log2(max(n, 2)))))
+    logn = log_factor(dev.key_ps_pso.shape[0])
     if owner is not None and not plan.branches[0].case.startswith("probe"):
         owner = None
     ctx = EvalCtx(dev, radix, const_vec, logn, owner)

@@ -9,18 +9,41 @@ where both can reach them without an import cycle (this module imports
 ``distributed`` which imports ``engine``; ``engine`` imports this module
 lazily at call time).
 
+PR 5 collapses the replicated-lane / sharded-lane split into this seam:
+the per-unit ``all_gather``/``psum`` collective that used to live inside
+``DistributedEngine.make_step``'s whole-query lane evaluator
+(``distributed._lane_eval``) is hoisted here as ``eval_unit_sharded`` +
+``gather_merge``, so serial ``run``, ``run_batch``, vmapped waves,
+replicated mesh waves and sharded mesh waves are all instantiations of one
+unit evaluator — the lowering (and its collective schedule, or absence)
+is the only difference.
+
 Contents:
 
 - ``unit_step``        — the scheduler's wave step: per-lane seeded unit
   evaluation with a provenance column (src-row extraction for replayable
   cache deltas) returning per-lane ``(rows, valid, overflow, src, ops,
-  count)``; vmap on one host, replicated-store shard_map across mesh lanes.
-- ``serial_unit_step`` — the engine's ladder step: same evaluation without
+  count, peak)``; vmap on one host, replicated-store shard_map across
+  mesh lanes.
+- ``sharded_unit_step`` — the same wave step over a subject-hash sharded
+  store: each shard evaluates the unit's branches locally
+  (``eval_unit_sharded`` — star locality makes branch joins
+  collective-free), scalar psums recover the exact serial cost account,
+  and one per-unit ``gather_merge`` rebuilds the lane table in *serial row
+  order* (lexicographic sort by provenance + the unit's drawn-value
+  columns), so sharded waves are byte-identical to the vmap/replicated
+  lowerings — including the overflow flag, which is derived from the
+  *global* expansion totals.
+- ``serial_unit_step`` — the engine's ladder step: ``unit_step`` without
   the provenance column (serial ``run`` never inserts into the cache).
 - ``digest_step``      — jitted wave fingerprinting: gathers a unit's read
   columns and hashes every lane's valid prefix on device
   (``kops.fingerprint_rows``), so the fragment cache is consulted with a
   16-byte digest per lane instead of a host round trip of the Omega block.
+- ``replay_step``      — jitted wave-wide device-side cache-hit replay
+  (``kops.replay_delta``): cached fragment deltas are uploaded and
+  scattered onto the lanes' seed prefixes in place, so all-hit waves
+  never materialise Omega blocks on the host.
 - ``reseat``           — capacity regrow/shrink of a compacted table
   (resumable overflow grows exactly one unit's table; the valid prefix is
   preserved, the new tail is UNBOUND-filled).
@@ -44,7 +67,13 @@ from jax.sharding import Mesh
 
 from repro.core.bindings import BindingTable
 from repro.core.distributed import make_batch_step
-from repro.core.server import UnitPlan, eval_unit
+from repro.core.server import (
+    BRANCH_EVALUATORS,
+    EvalCtx,
+    UnitPlan,
+    eval_unit,
+    unit_io,
+)
 from repro.kernels import ops as kops
 
 _STEP_CACHE: dict[tuple, Callable] = {}
@@ -95,6 +124,193 @@ def unit_step(up: UnitPlan, radix: int, mesh: Mesh | None = None,
     return step
 
 
+# --------------------------------------------------------------------------
+# sharded-store unit evaluation (the hoisted _lane_eval collective)
+# --------------------------------------------------------------------------
+
+# branch cases that only filter (their output count never exceeds their
+# input count); every other case is a ragged expansion
+_FILTER_CASES = frozenset({"probe_oconst", "probe_ovar_bound"})
+
+
+def eval_unit_sharded(dev, radix: int, up: UnitPlan, const_vec, table,
+                      *, axis: str, logn: int,
+                      owner=None):
+    """One unit's branches against the local store shard, inside shard_map.
+
+    The input ``table`` is replicated along ``axis`` (the lane state is
+    merged after every unit).  Because the store is subject-hash sharded
+    and all branches of a star share the subject, each row's entire
+    evaluation happens on exactly one shard — non-owner shards simply find
+    empty runs — so the local branch loop needs *no* collectives and the
+    shard-local output tables partition the serial output by subject owner
+    (the paper's "server-side star joins never communicate").
+
+    What does need collectives is the *serial cost account*: a scalar
+    ``psum`` per branch boundary recovers the global row count, from which
+    the exact serial ops/overflow/peak are rebuilt (``engine._execute``'s
+    accounting is a pure function of the branch-boundary counts):
+
+        filter     ops += count_in * 3 * logn
+        expansion  ops += count_in * 2 * logn + min(total_global, cap)
+
+    with ``logn`` the *global* store's log-factor (the local shard's would
+    drift from the serial account) and the expansion's global total the
+    psum of local totals.  Overflow is likewise global: an expansion whose
+    global total exceeds the lane capacity overflows even when every local
+    shard fit — exactly when the serial evaluation would have overflowed,
+    so sharded retries fire in lockstep with the serial ladder.
+
+    Returns ``(local_table, ops, peak, count, overflow)`` with ops /
+    peak / count / overflow replicated along ``axis`` (built from psums
+    and the replicated input) and ``local_table`` the shard-local output
+    partition, to be merged by ``gather_merge``.
+    """
+    cap = table.cap
+    ctx = EvalCtx(dev, radix, const_vec, logn,
+                  owner if up.branches[0].case.startswith("probe") else None)
+    cnt = table.count()  # replicated input: already the global count
+    ops = jnp.int64(0)
+    peak = cnt
+    over = jnp.asarray(False)
+    for b in up.branches:
+        table, _ = BRANCH_EVALUATORS[b.case](ctx, b, table)
+        cnt_new = jax.lax.psum(table.count(), axis)
+        if b.case in _FILTER_CASES:
+            ops = ops + cnt * (3 * logn)
+        else:
+            ops = ops + cnt * (2 * logn) + jnp.minimum(cnt_new, cap)
+            over = over | (cnt_new > cap)
+        cnt = jnp.minimum(cnt_new, cap)
+        peak = jnp.maximum(peak, cnt)
+    # local clamps (a shard whose local total exceeded the lane capacity)
+    # imply a global clamp, but OR them in explicitly so a lost row can
+    # never go unflagged; the input's replicated flag rides along too
+    over = over | (jax.lax.psum(table.overflow.astype(jnp.int32), axis) > 0)
+    return table, ops, peak, cnt, over
+
+
+def shard_trim(cap: int, n_shards: int, headroom: int = 2) -> int:
+    """Per-shard gather budget for a lane capacity of ``cap``.
+
+    A balanced subject hash puts ~``cap / n_shards`` of any lane's rows on
+    each shard, so the per-unit gather ships ``headroom`` times that (skew
+    margin) instead of the full capacity per shard — the "per-shard caps =
+    planner cap / shards" half of the sharded-mode memory story.  Floored
+    at the capacity quantum (``CapacityPlanner.MIN_QUANTUM``): below it
+    the gather is overhead-dominated and trimming buys nothing.  A
+    shard whose local output exceeds the budget flags overflow and the
+    lane retries at 4x — the budget grows with the capacity, so the retry
+    converges exactly like a capacity overflow does.  ``n_shards * trim``
+    always covers ``cap``, so a fitting result is never truncated.
+    """
+    from repro.core.capacity import CapacityPlanner
+
+    if n_shards <= 1:
+        return cap
+    return min(cap, max(headroom * (-(-cap // n_shards)),
+                        CapacityPlanner.MIN_QUANTUM))
+
+
+def gather_merge(rows, valid, sort_cols: tuple[int, ...], axis: str,
+                 out_cap: int, trim: int):
+    """Per-unit collective: gather shard-local outputs and rebuild the lane
+    table in *serial row order* (the sharded parity story).
+
+    Each local table holds a partition of the serial output; the serial
+    order is recoverable because every output row carries its sort key in
+    its own columns: the provenance column (input row index) plus, per
+    expansion branch in branch order, the value that branch drew — runs
+    are sorted by exactly those values in the store layout, and expansions
+    refine the order of their source rows, so the lexicographic sort by
+    ``sort_cols`` over the gathered rows reproduces the serial table
+    byte-for-byte (valid prefix; the invalid tail is never read).  Keys
+    are unique among valid rows (triples are a set, and a subject lives on
+    one shard), so the order is total regardless of how shard blocks
+    interleave.
+
+    ``trim`` bounds the per-shard contribution (``shard_trim``); locally
+    compacted tables lose only rows past the trim, and ``lost`` reports
+    whether THIS shard dropped a valid row.  ``lost`` is shard-local —
+    unlike the merged rows/valid (replicated by the all_gather), it must
+    be psum/OR-reduced over ``axis`` before use, which is what both
+    callers do when folding it into the lane overflow flag.
+    Returns ``(rows[out_cap], valid[out_cap], lost)``.
+    """
+    cap, width = rows.shape
+    lost = jnp.asarray(False)
+    if trim < cap:
+        lost = jnp.any(valid[trim:])
+        rows, valid = rows[:trim], valid[:trim]
+    rows_g = jax.lax.all_gather(rows, axis)
+    n_shards = rows_g.shape[0]  # static, from the gathered leading axis
+    rows_g = rows_g.reshape(n_shards * trim, width)
+    valid_g = jax.lax.all_gather(valid, axis).reshape(n_shards * trim)
+    n = rows_g.shape[0]
+    # stable lexsort: least-significant key first, validity last (valid
+    # rows to the front), so the final permutation is (~valid, *sort_cols)
+    perm = jnp.arange(n, dtype=jnp.int32)
+    for c in reversed(sort_cols):
+        perm = perm[jnp.argsort(rows_g[:, c][perm], stable=True)]
+    perm = perm[jnp.argsort(~valid_g[perm], stable=True)]
+    rows_m = rows_g[perm]
+    valid_m = valid_g[perm]
+    if n >= out_cap:
+        return rows_m[:out_cap], valid_m[:out_cap], lost
+    pad = out_cap - n
+    return (jnp.concatenate(
+                [rows_m, jnp.full((pad, width), -1, rows_m.dtype)]),
+            jnp.concatenate([valid_m, jnp.zeros((pad,), valid_m.dtype)]),
+            lost)
+
+
+def sharded_unit_step(up: UnitPlan, radix: int, mesh: Mesh, data_axis: str,
+                      lane_axes: tuple[str, ...], n_shards: int, logn: int,
+                      headroom: int = 2):
+    """Jitted one-unit wave step over a subject-hash sharded store.
+
+    The third instantiation of the shared lane evaluator (vmap /
+    replicated shard_map / THIS): the store carries a leading shard axis
+    split along ``data_axis``, wave lanes split along ``lane_axes``, and
+    each unit step is local branch evaluation + one order-restoring
+    collective (``eval_unit_sharded`` + ``gather_merge``) — the same
+    per-unit collective ``DistributedEngine``'s whole-query lane evaluator
+    uses, hoisted into the step machinery.  Outputs mirror ``unit_step``'s
+    7-tuple and are byte-identical to it: same rows in the same order,
+    same ops/count/peak (exact via scalar psums), same overflow flag
+    (derived from global totals).  ``logn`` is the *global* store's
+    log-factor (static — shapes inside the step only see the shard).
+    """
+    key = ("shard", _branch_statics(up), radix, kops.FORCE, mesh,
+           data_axis, lane_axes, n_shards, logn, headroom)
+    step = _STEP_CACHE.get(key)
+    if step is None:
+        io = unit_io(up)
+        write_cols = tuple(io.write_cols)
+
+        def lane_fn(dev, const_vec, rows, valid, overflow):
+            cap, n_vars = rows.shape
+            prov = jnp.arange(cap, dtype=jnp.int32)[:, None]
+            table = BindingTable(jnp.concatenate([rows, prov], axis=1),
+                                 valid, overflow)
+            table, ops, peak, cnt, ovf = eval_unit_sharded(
+                dev, radix, up, const_vec, table, axis=data_axis, logn=logn)
+            # serial order: provenance first, then each expansion branch's
+            # drawn value(s) — write_cols is exactly those, in branch order
+            sort_cols = (n_vars,) + write_cols
+            trim = shard_trim(cap, n_shards, headroom)
+            rows_m, valid_m, lost = gather_merge(
+                table.rows, table.valid, sort_cols, data_axis, cap, trim)
+            ovf = ovf | (jax.lax.psum(lost.astype(jnp.int32), data_axis) > 0)
+            return (rows_m[:, :-1], valid_m, ovf, rows_m[:, -1], ops, cnt,
+                    peak)
+
+        step = make_batch_step(lane_fn, out_proto=(0,) * 7, mesh=mesh,
+                               data_axis=data_axis, lane_axes=lane_axes)
+        _STEP_CACHE[key] = step
+    return step
+
+
 def serial_unit_step(up: UnitPlan, radix: int):
     """The serial engine's ladder step: ``unit_step`` without the
     provenance column (``run`` checkpoints tables, not cache deltas).
@@ -134,6 +350,33 @@ def digest_step(read_cols: tuple[int, ...]):
     return fn
 
 
+def replay_step(write_cols: tuple[int, ...]):
+    """Jitted wave-wide device-side cache-hit replay.
+
+    ``(rows[B, cap, V], src[B, M], written[B, M, W], n_out[B]) ->
+    (rows[B, cap, V], valid[B, cap])``: every lane's cached fragment delta
+    is scattered onto its seed prefix in place (``kops.replay_delta`` —
+    Pallas broadcast-compare gather on TPU, jnp oracle elsewhere, numpy
+    twin ``fragcache.replay``).  Lanes with ``n_out == 0`` (padding,
+    retired, negative fragments) come out empty.  This is what keeps
+    all-hit waves off the host: the uploaded delta is the small object,
+    the Omega block never moves.
+    """
+    key = ("replay", tuple(write_cols), kops.FORCE)
+    fn = _STEP_CACHE.get(key)
+    if fn is None:
+        cols = tuple(write_cols)
+
+        @jax.jit
+        def fn(rows, src, written, n_out):
+            return jax.vmap(
+                lambda r, s, w, n: kops.replay_delta(r, s, w, n, cols)
+            )(rows, src, written, n_out)
+
+        _STEP_CACHE[key] = fn
+    return fn
+
+
 @partial(jax.jit, static_argnames=("new_cap",))
 def reseat(rows: jnp.ndarray, valid: jnp.ndarray, new_cap: int):
     """Re-home a compacted table at a new capacity.
@@ -163,13 +406,16 @@ def endpoint_totals(cfg, n_results: int, n_vars: int) -> tuple[int, int]:
 
 
 def unit_cost(cfg, k: int, up: UnitPlan, in_count: int, out_count: int,
-              ops: int, logn: int) -> tuple[int, int, int, int]:
+              ops: int, probe_ops: int) -> tuple[int, int, int, int]:
     """(nrs, ntb, server_ops, client_ops) deltas for one unit, in ints.
 
     Mirrors the traced accounting in ``engine._execute`` exactly; the
     scheduler/serial stats-parity tests pin the two together.  ``k`` is
     the unit's absolute position in the plan (resumed executions keep
-    their original indices).
+    their original indices).  ``probe_ops`` is the dispatched per-probe
+    cost of the TPF fragment-location path (``kops.probe_op_cost`` — the
+    active kernel's model, not an analytic logn), unused by the other
+    interfaces.
     """
     tb = cfg.term_bytes
     matched = out_count * up.n_triple_patterns
@@ -192,7 +438,7 @@ def unit_cost(cfg, k: int, up: UnitPlan, in_count: int, out_count: int,
     recv = matched * 3 * tb + (pages + meta) * cfg.page_header_bytes
     ntb_d = sent + recv
     if cfg.interface == "tpf":
-        server_d = blocks * 2 * logn + matched
+        server_d = blocks * probe_ops + matched
         client_d = ops
     else:
         server_d = ops

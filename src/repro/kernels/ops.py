@@ -48,13 +48,23 @@ Join/probe primitives (the SPF server's hot path)
                             block's valid rows (the scheduler's
                             digest-first fragment-cache keys; host twin
                             ``ref.fingerprint_prefix_np``).
+- ``replay_delta``        — device-side fragment replay: scatter a cached
+                            delta onto a lane's seed prefix in place
+                            (Pallas broadcast-compare gather; numpy twin
+                            ``fragcache.replay``), so all-hit scheduler
+                            waves never materialise Omega blocks on host.
 - ``max_run_length_per_segment`` — per-predicate max equal-key run length
                             (the capacity planner's degree oracle; jnp
                             segment ops on both backends — one-shot per
                             store epoch, no kernel needed).
+- ``probe_op_cost``       — host-side cost model of one dispatched point
+                            probe (the TPF page-accounting path charges
+                            the *active* primitive, not an analytic logn).
 """
 
 from __future__ import annotations
+
+import math
 
 import jax
 import jax.numpy as jnp
@@ -210,6 +220,55 @@ def fingerprint_rows(block: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
         from repro.kernels.fingerprint import fingerprint_rows_pallas
         return fingerprint_rows_pallas(block, valid, interpret=_interpret())
     return ref.fingerprint_rows_ref(block, valid)
+
+
+def replay_delta(seed_rows: jnp.ndarray, src: jnp.ndarray,
+                 written: jnp.ndarray, n_out: jnp.ndarray,
+                 write_cols: tuple[int, ...] = ()
+                 ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Scatter a cached fragment delta onto a lane's seed prefix, on device.
+
+    ``seed_rows`` int32[cap, V] (valid prefix = the unit's input Omega
+    block), ``src`` int32[M] source-row indices (entries past ``n_out``
+    are padding), ``written`` int32[M, W] values for the static
+    ``write_cols``, ``n_out`` the true output row count.  Returns the
+    replayed full-capacity ``(rows, valid)`` — bit-identical on the valid
+    prefix to the host twin ``fragcache.replay`` (pinned by the kernel
+    parity tests).  vmap-safe: the scheduler replays whole waves at once.
+    """
+    if _use_pallas() and seed_rows.shape[1] > 0:
+        from repro.kernels.replay import replay_delta_pallas
+        return replay_delta_pallas(seed_rows, src, written, n_out,
+                                   write_cols=tuple(write_cols),
+                                   interpret=_interpret())
+    return ref.replay_delta_ref(seed_rows, src, written, n_out,
+                                tuple(write_cols))
+
+
+def probe_op_cost(n: int) -> int:
+    """Per-probe op count of the *dispatched* point-probe primitive against
+    a sorted column of length ``n`` — the TPF page-accounting cost model.
+
+    The TPF interface's server work is locating each instantiated fragment
+    (one ``eqrange`` per request block); until PR 5 the engine charged an
+    analytic ``2 * ceil(log2 n)`` for it regardless of backend.  This ties
+    the charge to the primitive the dispatch layer actually runs:
+
+    - jnp-oracle path: two-sided binary search — ``2 * ceil(log2 n)``
+      dependent scalar steps (the historical analytic model, unchanged);
+    - Pallas path: the fused ``sorted_probe`` kernel streams the column in
+      ``DEFAULT_K_TILE``-wide tiles past each query tile and emits both
+      rank sides in one pass — amortized ``ceil(n / K_TILE)`` tile passes
+      per probe, no 2x.
+
+    Host-side and read at plan/trace time like ``FORCE`` itself: engines
+    bake it into jitted cost accounting, so flip ``FORCE`` before building
+    an engine (or clear its jit cache), never mid-run.
+    """
+    if _use_pallas():
+        from repro.kernels.sorted_probe import DEFAULT_K_TILE
+        return max(1, -(-int(n) // DEFAULT_K_TILE))
+    return 2 * max(1, math.ceil(math.log2(max(int(n), 2))))
 
 
 def max_run_length_per_segment(sorted_keys: jnp.ndarray,

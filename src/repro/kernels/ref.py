@@ -219,6 +219,39 @@ def fingerprint_prefix_np(block: "np.ndarray") -> tuple[int, int, int, int]:
     return tuple(int(x) for x in out)
 
 
+# --------------------------------------------------------------------------
+# fragment replay (the scheduler's device-side cache-hit path)
+# --------------------------------------------------------------------------
+
+def replay_delta_ref(seed_rows: jnp.ndarray, src: jnp.ndarray,
+                     written: jnp.ndarray, n_out: jnp.ndarray,
+                     write_cols: tuple[int, ...]
+                     ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Scatter a cached fragment delta onto a lane's seed prefix, on device.
+
+    ``seed_rows`` is the lane's full-capacity table ``int32[cap, n_vars]``
+    whose valid prefix is the unit's input Omega block; ``src`` the delta's
+    source-row indices ``int32[M]`` (entries past ``n_out`` are padding),
+    ``written`` the values for the unit's write columns ``int32[M, W]``,
+    ``n_out`` the true output row count (traced scalar).  Returns the
+    replayed ``(rows, valid)`` at full capacity with the invalid region
+    UNBOUND-filled — the device twin of ``fragcache.replay`` (bit-identical
+    on the valid prefix; pinned by the kernel parity tests).  vmap-safe:
+    the scheduler replays whole waves in one call.
+    """
+    cap, n_vars = seed_rows.shape
+    m = src.shape[0]
+    live = jnp.arange(m, dtype=jnp.int32) < n_out
+    take = jnp.where(live, src, 0)
+    out = seed_rows[take]  # [M, n_vars]
+    for w, c in enumerate(write_cols):
+        out = out.at[:, c].set(written[:, w])
+    out = jnp.where(live[:, None], out, jnp.int32(-1))
+    rows = jnp.full((cap, n_vars), -1, jnp.int32).at[:m].set(out)
+    valid = jnp.arange(cap, dtype=jnp.int32) < n_out
+    return rows, valid
+
+
 def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                   causal: bool = True, scale: float | None = None
                   ) -> jnp.ndarray:

@@ -230,3 +230,70 @@ def test_planner_hint_sharing_across_schedulers(watdiv_small):
     assert second.metrics.retries == 0
     assert all(int(st.cache_misses) == 0 and int(st.cache_hits) > 0
                for st in stats)
+
+
+def test_hourglass_capacity_shrink(monkeypatch):
+    """Capacity shrink after a fat intermediate collapses (the PR 4
+    follow-up, landed in PR 5): an hourglass-shaped plan — a 3000-row
+    fan-out, a collapse to 2 rows, a small tail expansion — no longer
+    drags the fat unit's chained bound through its tail.  The tail unit's
+    cold cap restarts from the *observed* seed prefix
+    (``planner.unit_start_cap``), dropping to the snug floor where the
+    chained bound would have kept ~18k rows; byte-identity to the blind
+    ladder is preserved (capacity-independence)."""
+    from repro.core import stepper
+
+    fan = 3000
+    s, p, o = [0], [0], [1]                        # x0 -A-> c0   (card 1)
+    for i in range(fan):                           # x0 -F-> y_i  (card 3000)
+        s.append(0), p.append(1), o.append(10 + i)
+    s += [10, 10]
+    p += [2, 2]
+    o += [5000, 5001]                              # y0 -G-> z0, z1
+    for z in (5000, 5001):                         # z  -H-> w0..w2
+        for w in (6000, 6001, 6002):
+            s.append(z), p.append(3), o.append(w)
+    store = TripleStore.build(np.asarray(s), np.asarray(p), np.asarray(o))
+    cfg = EngineConfig(interface="spf", cap=256)
+    # (?x A c0)(?x F ?y)(?y G ?z)(?z H ?w): fan out, collapse, fan out
+    q = BGP((TriplePattern(V(0), C(0), C(1)),
+             TriplePattern(V(0), C(1), V(1)),
+             TriplePattern(V(1), C(2), V(2)),
+             TriplePattern(V(2), C(3), V(3))), n_vars=4)
+
+    seen_caps = []
+    orig_step = stepper.serial_unit_step
+
+    def spy(up, radix):
+        step = orig_step(up, radix)
+
+        def wrapped(dev, const_vec, rows, valid, ovf):
+            seen_caps.append(rows.shape[1])
+            return step(dev, const_vec, rows, valid, ovf)
+
+        return wrapped
+
+    monkeypatch.setattr(stepper, "serial_unit_step", spy)
+
+    planned = QueryEngine(store, cfg)
+    plan = planned.plan(q)
+    chained = [planned.planner.snug(b)
+               for b in planned.planner.unit_bounds(plan)]
+    assert chained == [3072, 6144, 18432]  # monotone: never shrinks
+    out = planned.run(q)
+    # cold caps: fat fan-out, same through the collapse's 3000-row input,
+    # then the tail RESTARTS from the observed 2-row prefix: 1024 floor
+    assert seen_caps == [3072, 6144, 1024]
+    assert seen_caps[2] < chained[2]
+    assert int(out[1].n_results) == 6
+
+    blind = QueryEngine(store, EngineConfig(interface="spf", cap=256,
+                                            capacity_planner=False))
+    _assert_run_parity(blind.run(q), out, "hourglass-cold")
+
+    # warm: HWMs (true peaks) take over — the collapse unit's 3000-row
+    # input keeps its table at the peak rung, the tail stays snug
+    seen_caps.clear()
+    out2 = planned.run(q)
+    assert seen_caps == [3072, 3072, 1024]
+    _assert_run_parity(blind.run(q), out2, "hourglass-warm")

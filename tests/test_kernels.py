@@ -244,6 +244,102 @@ def test_fingerprint_dispatch_vmap():
         kops.FORCE = old
 
 
+# --------------------------------------------------------------- replay delta
+
+@pytest.mark.parametrize("n_in,n_out,cap,n_vars,n_w,m_pad", [
+    (1, 0, 8, 1, 0, 1),       # negative fragment: empty delta
+    (1, 3, 16, 2, 1, 4),      # fresh-seed expansion
+    (5, 5, 32, 3, 0, 8),      # pure filter unit: no write cols
+    (7, 19, 64, 4, 2, 32),    # fan-out with two written columns
+    (100, 257, 512, 5, 3, 512),
+])
+def test_replay_delta_three_way_parity(n_in, n_out, cap, n_vars, n_w, m_pad,
+                                       rng):
+    """The device-replay contract: the jnp oracle, the Pallas kernel
+    (interpret mode) and the numpy host twin (``fragcache.replay``) must
+    reconstruct bit-identical valid prefixes from the same cached delta —
+    including padded delta widths (the scheduler pow2-pads per wave) and
+    UNBOUND-filled dead regions."""
+    from repro.core.fragcache import FragmentEntry, replay
+    from repro.kernels.replay import replay_delta_pallas
+
+    write_cols = tuple(range(n_w))
+    seed = np.full((cap, n_vars), -1, np.int32)
+    seed[:n_in] = rng.integers(0, 1000, (n_in, n_vars)).astype(np.int32)
+    src = rng.integers(0, n_in, n_out).astype(np.int32)
+    written = rng.integers(0, 1000, (n_out, max(n_w, 0))).astype(np.int32)
+    entry = FragmentEntry(src_row=src,
+                          written=written if n_w else
+                          np.zeros((n_out, 0), np.int32),
+                          overflow=False, ops=0)
+
+    want_rows, want_valid = replay(entry, seed[:n_in], cap, n_vars,
+                                   write_cols)
+
+    # pad the delta like the scheduler does (pow2 wave width)
+    src_p = np.zeros((m_pad,), np.int32)
+    src_p[:n_out] = src
+    wr_p = np.zeros((m_pad, n_w), np.int32)
+    if n_w:
+        wr_p[:n_out] = written
+
+    got_ref = ref.replay_delta_ref(jnp.asarray(seed), jnp.asarray(src_p),
+                                   jnp.asarray(wr_p), jnp.int32(n_out),
+                                   write_cols)
+    np.testing.assert_array_equal(np.asarray(got_ref[0]), want_rows)
+    np.testing.assert_array_equal(np.asarray(got_ref[1]), want_valid)
+
+    got_pal = replay_delta_pallas(jnp.asarray(seed), jnp.asarray(src_p),
+                                  jnp.asarray(wr_p), jnp.int32(n_out),
+                                  write_cols=write_cols, j_tile=16,
+                                  i_tile=32, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got_pal[0]), want_rows)
+    np.testing.assert_array_equal(np.asarray(got_pal[1]), want_valid)
+
+
+def test_replay_delta_dispatch_vmap():
+    """kops.replay_delta under vmap (the scheduler's whole-wave replay
+    call) matches the host twin on both FORCE settings."""
+    import jax
+
+    from repro.core.fragcache import FragmentEntry, replay
+    from repro.kernels import ops as kops
+
+    rng = np.random.default_rng(5)
+    b, cap, n_vars = 3, 24, 3
+    write_cols = (1,)
+    rows = np.full((b, cap, n_vars), -1, np.int32)
+    n_ins = [2, 5, 1]
+    n_outs = [4, 0, 3]
+    m = 4
+    src = np.zeros((b, m), np.int32)
+    wr = np.zeros((b, m, 1), np.int32)
+    want = []
+    for j in range(b):
+        rows[j, :n_ins[j]] = rng.integers(0, 99, (n_ins[j], n_vars))
+        src[j, :n_outs[j]] = rng.integers(0, n_ins[j], n_outs[j])
+        wr[j, :n_outs[j], 0] = rng.integers(0, 99, n_outs[j])
+        entry = FragmentEntry(
+            src_row=src[j, :n_outs[j]].copy(),
+            written=wr[j, :n_outs[j]].copy(), overflow=False, ops=0)
+        want.append(replay(entry, rows[j, :n_ins[j]], cap, n_vars,
+                           write_cols))
+    old = kops.FORCE
+    try:
+        for force in ("ref", "pallas"):
+            kops.FORCE = force
+            r_o, v_o = jax.vmap(
+                lambda r, s, w, n: kops.replay_delta(r, s, w, n, write_cols)
+            )(jnp.asarray(rows), jnp.asarray(src), jnp.asarray(wr),
+              jnp.asarray(np.asarray(n_outs, np.int32)))
+            for j in range(b):
+                np.testing.assert_array_equal(np.asarray(r_o[j]), want[j][0],
+                                              err_msg=f"{force} lane {j}")
+                np.testing.assert_array_equal(np.asarray(v_o[j]), want[j][1])
+    finally:
+        kops.FORCE = old
+
+
 # ------------------------------------------------------- segment run lengths
 
 def test_max_run_length_per_segment_matches_bruteforce(rng):

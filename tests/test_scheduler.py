@@ -273,6 +273,140 @@ def test_mesh_pod_shared_cache_and_run_load(watdiv_small):
     assert all(int(s.nrs_saved) == int(s.nrs) for s in stats2)
 
 
+# --------------------------------------------------------------------------
+# sharded-store waves (run `-k shard`; multi-shard counts need multiple
+# devices — the CI dist-sched job forces 8; bare tier-1 covers n_shards=1)
+# --------------------------------------------------------------------------
+
+def _shard_meshes():
+    """(n_shards, lane_slots, mesh) for every shard count in {1, 2, 4} the
+    visible device count supports: the store shards along ``data`` and
+    wave lanes span ``model``."""
+    n_dev = len(jax.devices())
+    out = []
+    for s in (1, 2, 4):
+        if s <= n_dev and n_dev % s == 0:
+            out.append((s, n_dev // s,
+                        jax.make_mesh((s, n_dev // s), ("data", "model"))))
+    return out
+
+
+@pytest.mark.parametrize("interface", INTERFACES)
+def test_sharded_waves_byte_identical_to_serial(watdiv_small, all_queries,
+                                                serial_results, interface):
+    """Sharded scheduler waves (store subject-hash sharded along ``data``,
+    lanes along ``model``) must return byte-identical valid rows and gross
+    stats to the serial path — across shard counts, cache on and off.
+    The stream is interleaved wide enough to cover the lane slots so the
+    sharded lowering actually engages."""
+    _, store = watdiv_small
+    qs = all_queries[:4]
+    cfg = EngineConfig(interface=interface, cap=2048)
+    for n_shards, slots, mesh in _shard_meshes():
+        for use_cache in (False, True):
+            sched = QueryScheduler(
+                store, cfg,
+                SchedulerConfig(lanes=8, use_cache=use_cache,
+                                collapse_duplicates=False),
+                mesh=mesh, data_axis="data")
+            served = sched.serve(interleave_clients(qs, slots))
+            serial = [serial_results[interface][i // slots]
+                      for i in range(len(served))]
+            _assert_equivalent(serial, [t for t, _ in served],
+                               [s for _, s in served],
+                               ("shard", interface, n_shards, use_cache))
+            assert sched.metrics.shard_steps > 0 or sched.metrics.steps == 0
+            if not use_cache:
+                assert sched.metrics.shard_steps == sched.metrics.steps > 0
+                assert sched.metrics.gather_bytes > 0
+
+
+def test_sharded_overflow_resume_byte_identical(watdiv_small):
+    """Forced overflow on the sharded lowering: a tiny starting capacity
+    drives resumable 4x retries (re-entering at the failing unit with the
+    checkpointed seed), and the retry sequence's final results must match
+    the serial blind ladder byte-for-byte.  Overflow on the sharded step
+    is derived from *global* expansion totals, so retries fire in
+    lockstep with the serial path even when every local shard fit."""
+    g, store = watdiv_small
+    qs = generate_query_load(g, store, "2-stars", QueryLoadConfig(n_queries=3))
+    cfg = EngineConfig(interface="spf", cap=4, capacity_planner=False)
+    eng = QueryEngine(store, cfg)
+    serial = [eng.run(q) for q in qs]
+    for n_shards, slots, mesh in _shard_meshes():
+        for use_cache in (False, True):
+            sched = QueryScheduler(
+                store, cfg,
+                SchedulerConfig(lanes=8, use_cache=use_cache,
+                                collapse_duplicates=False),
+                mesh=mesh, data_axis="data")
+            served = sched.serve(interleave_clients(qs, slots))
+            serial_ref = [serial[i // slots] for i in range(len(served))]
+            _assert_equivalent(serial_ref, [t for t, _ in served],
+                               [s for _, s in served],
+                               ("shard-ovf", n_shards, use_cache))
+            assert sched.metrics.retries > 0
+
+
+def test_shard_count_invariant_digests_share_cache(watdiv_small, all_queries,
+                                                   serial_results):
+    """``fingerprint_rows`` digests are a pure function of the valid
+    prefix, which is byte-identical across lowerings and shard counts —
+    so a cache filled by a vmap scheduler fully serves sharded schedulers
+    at every shard count (zero misses), and vice versa."""
+    from repro.core import FragmentCache
+
+    _, store = watdiv_small
+    qs = all_queries[:4]
+    cfg = EngineConfig(interface="spf", cap=2048)
+    cache = FragmentCache()
+    filler = QueryScheduler(store, cfg,
+                            SchedulerConfig(lanes=8, cap_hints=False),
+                            cache=cache)
+    filler.run_queries(qs)
+    assert cache.stats.insertions + cache.stats.neg_insertions > 0
+    for n_shards, _, mesh in _shard_meshes():
+        sched = QueryScheduler(store, cfg,
+                               SchedulerConfig(lanes=8, cap_hints=False),
+                               cache=cache, mesh=mesh, data_axis="data")
+        tables, stats = sched.run_queries(qs)
+        assert all(int(s.cache_misses) == 0 and int(s.cache_hits) > 0
+                   for s in stats), n_shards
+        for i, tbl in enumerate(tables):
+            assert np.array_equal(
+                results_as_numpy(tbl),
+                results_as_numpy(serial_results["spf"][i][0])), (n_shards, i)
+
+
+def test_all_hit_wave_zero_host_materializations(watdiv_small, all_queries):
+    """The device-replay invariant: re-serving an identical load through a
+    warm scheduler serves every unit step from the cache, replays the
+    deltas on device, and performs ZERO host Omega-block materialisations
+    (``SchedMetrics.host_block_pulls`` — the counting hook; the only
+    end-of-wave pull is the response delivery, which is not counted)."""
+    _, store = watdiv_small
+    qs = all_queries[:4]
+    cfg = EngineConfig(interface="spf", cap=2048)
+    # cap_hints off: stable capacities keep the cache keys identical
+    # across passes, so the second pass is all-hit by construction
+    sched = QueryScheduler(store, cfg,
+                           SchedulerConfig(lanes=8, cap_hints=False))
+    first_tables, _ = sched.run_queries(qs)
+    assert sched.metrics.host_block_pulls > 0  # misses recorded deltas
+    steps0 = sched.metrics.steps
+    pulls0 = sched.metrics.host_block_pulls
+    skipped0 = sched.metrics.steps_skipped
+    tables, stats = sched.run_queries(qs)
+    assert sched.metrics.steps == steps0, "all-hit pass dispatched steps"
+    assert sched.metrics.host_block_pulls == pulls0, \
+        "all-hit pass materialised Omega blocks on the host"
+    assert sched.metrics.steps_skipped > skipped0
+    assert all(int(s.cache_misses) == 0 and int(s.cache_hits) > 0
+               for s in stats)
+    for a, b in zip(first_tables, tables):
+        assert np.array_equal(results_as_numpy(a), results_as_numpy(b))
+
+
 def test_mixed_signature_distributed_batch(watdiv_small):
     """run_batch no longer refuses plan-heterogeneous batches: it buckets
     by signature internally (1x1 mesh keeps this in-process)."""

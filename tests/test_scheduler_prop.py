@@ -34,6 +34,9 @@ from repro.rdf.queries import QueryLoadConfig
 
 INTERFACES = ["tpf", "brtpf", "spf", "endpoint"]
 LANES = [1, 2, 4, 8]
+# wave lowerings under test: single-host vmap, replicated mesh lanes, and
+# the PR 5 sharded-store mesh (subject-hash sharded along "data")
+LOWERINGS = ["vmap", "mesh", "shard"]
 CAP = 512  # small enough that some 2-star queries exercise the retry ladder
 
 
@@ -69,15 +72,25 @@ def _mesh():
     return jax.make_mesh((len(jax.devices()),), ("model",))
 
 
-def _check_stream(stream, interface, lanes, use_cache, collapse, use_mesh):
+@lru_cache(maxsize=1)
+def _shard_mesh():
+    """data x model mesh: 2 shards when the device count allows, else the
+    1-shard degenerate (still exercises the sharded lowering end to end)."""
+    n_dev = len(jax.devices())
+    s = 2 if n_dev % 2 == 0 else 1
+    return jax.make_mesh((s, n_dev // s), ("data", "model"))
+
+
+def _check_stream(stream, interface, lanes, use_cache, collapse, lowering):
     """Serve ``stream`` (list of (client, query_idx)) and compare every
     response to the serial engine."""
     store, queries = _env()
+    mesh = {"vmap": None, "mesh": _mesh(), "shard": _shard_mesh()}[lowering]
     sched = QueryScheduler(
         store, EngineConfig(interface=interface, cap=CAP),
         SchedulerConfig(lanes=lanes, use_cache=use_cache,
                         collapse_duplicates=collapse),
-        mesh=_mesh() if use_mesh else None)
+        mesh=mesh, data_axis="data" if lowering == "shard" else None)
     served = sched.serve([(c, queries[qi]) for c, qi in stream])
     for (c, qi), (table, stats) in zip(stream, served):
         ref_rows, ref_gross = _serial(interface, qi)
@@ -87,27 +100,32 @@ def _check_stream(stream, interface, lanes, use_cache, collapse, use_mesh):
         assert tuple(int(x) for x in stats)[:6] == ref_gross
     if not use_cache:
         assert sched.cache.stats.total_hits == 0
-    if use_mesh and sched._mesh_slots == 1:
+    if lowering == "mesh" and sched._mesh_slots == 1:
         # a 1-slot mesh covers every wave width: all steps route through it
         assert sched.metrics.mesh_steps == sched.metrics.steps
+    if lowering == "shard" and sched.metrics.steps:
+        # every dispatched step took some lowering; sharded waves engage
+        # whenever width covers the lane slots and the wave is below the
+        # overflow-latch rung (latched give-up waves fall back by design)
+        assert sched.metrics.shard_steps <= sched.metrics.steps
 
 
 # --------------------------------------------------------------------------
 # deterministic cases (always run, even without hypothesis)
 # --------------------------------------------------------------------------
 
-@pytest.mark.parametrize("use_mesh", [False, True])
-def test_fixed_random_stream_parity(use_mesh):
-    """A fixed-seed random interleaving across clients, queries and both
-    wave lowerings stays byte-identical to the serial path."""
+@pytest.mark.parametrize("lowering", LOWERINGS)
+def test_fixed_random_stream_parity(lowering):
+    """A fixed-seed random interleaving across clients, queries and all
+    three wave lowerings stays byte-identical to the serial path."""
     rng = np.random.default_rng(0)
     _, queries = _env()
     stream = [(int(rng.integers(0, 4)), int(rng.integers(0, len(queries))))
               for _ in range(12)]
     _check_stream(stream, "spf", lanes=4, use_cache=True, collapse=True,
-                  use_mesh=use_mesh)
+                  lowering=lowering)
     _check_stream(stream, "spf", lanes=4, use_cache=False, collapse=False,
-                  use_mesh=use_mesh)
+                  lowering=lowering)
 
 
 def test_hypothesis_shim_mode_is_consistent():
@@ -130,25 +148,29 @@ def test_hypothesis_shim_mode_is_consistent():
                 min_size=1, max_size=10),
        st.sampled_from(INTERFACES),
        st.sampled_from(LANES),
-       st.booleans(), st.booleans(), st.booleans())
+       st.booleans(), st.booleans(), st.sampled_from(LOWERINGS))
 @settings(max_examples=12, deadline=None)
 def test_scheduler_parity_over_random_streams(stream, interface, lanes,
-                                              use_cache, collapse, use_mesh):
-    """Random client interleavings x bucket widths x cache x lowering:
-    byte-identical valid rows and gross stats vs serial ``run``."""
-    _check_stream(stream, interface, lanes, use_cache, collapse, use_mesh)
+                                              use_cache, collapse, lowering):
+    """Random client interleavings x bucket widths x cache x lowering
+    (vmap / replicated mesh / sharded): byte-identical valid rows and
+    gross stats vs serial ``run``."""
+    _check_stream(stream, interface, lanes, use_cache, collapse, lowering)
 
 
 @given(st.lists(st.integers(0, 5), min_size=1, max_size=8),
-       st.sampled_from(LANES), st.booleans())
+       st.sampled_from(LANES), st.sampled_from(LOWERINGS))
 @settings(max_examples=10, deadline=None)
-def test_warm_cache_stream_parity(qis, lanes, use_mesh):
+def test_warm_cache_stream_parity(qis, lanes, lowering):
     """Serving the same queries repeatedly through one scheduler (warm
-    fragment cache, replay path) never drifts from the serial results."""
+    fragment cache, device-side replay path) never drifts from the serial
+    results — under any lowering."""
     store, queries = _env()
+    mesh = {"vmap": None, "mesh": _mesh(), "shard": _shard_mesh()}[lowering]
     sched = QueryScheduler(store, EngineConfig(interface="spf", cap=CAP),
                            SchedulerConfig(lanes=lanes),
-                           mesh=_mesh() if use_mesh else None)
+                           mesh=mesh,
+                           data_axis="data" if lowering == "shard" else None)
     for _ in range(2):
         tables, stats = sched.run_queries([queries[qi] for qi in qis])
         for qi, table, st_ in zip(qis, tables, stats):
