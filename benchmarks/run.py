@@ -29,6 +29,13 @@ Figures covered:
                         gather traffic fed through the throughput model
                         (run with 8 forced host devices in CI); writes
                         BENCH_shard_sched.json
+  fig_kernels           calibrated kernel microbench: prefetch vs dense
+                        run_probe, point-probe calibration fit (what
+                        kops.probe_op_cost charges per tile pass),
+                        fingerprint/replay, k-way merge vs lexsort at
+                        shard counts {2,4,8}; writes BENCH_kernels.json
+                        (CI uploads it; CPU runs in interpret mode at
+                        reduced sizes and keep the guess constant)
   kernels               sorted_probe / run_probe / flash_attention microbench
 """
 
@@ -346,6 +353,227 @@ def fig_shard_sched() -> None:
     print(f"# wrote {out} ({len(records)} records)", file=sys.stderr)
 
 
+# ------------------------------------------------- calibrated kernel bench
+
+def fig_kernels() -> None:
+    """Kernel-level microbench + the cost-model calibration artifact.
+
+    Times the PR 6 kernel set through their real entry points — the
+    scalar-prefetch vs dense ``run_probe`` variants on dense- and
+    clustered-window workloads, the fused point probe across column
+    lengths (the calibration fit), the wave fingerprint and cache-replay
+    primitives, and the k-way shard merge against the replicated-lexsort
+    baseline at several shard counts (single-process: the merge schedule
+    one device executes, partner blocks prebuilt) — and writes
+    ``BENCH_kernels.json``.
+
+    The artifact's ``calibration.tile_pass_ops`` is what
+    ``kops.probe_op_cost`` charges per probe tile pass
+    (``repro.kernels.calibration`` is the read side): on a real TPU
+    pipeline it is the fitted per-pass wall slope divided by
+    ``CostModel.op_s`` with ``"source": "measured"``; interpret-mode
+    (CPU) runs deliberately keep the historical guess with
+    ``"source": "guess"`` — interpreter walls measure Python, not the
+    pipeline — so CI's artifact never perturbs modeled costs.
+
+    Runs on CPU CI in Pallas interpret mode at reduced sizes (the
+    defaults below scale down off-TPU).  Environment knobs:
+      BENCH_KERNELS_KEYS     sorted-column length (default 1M TPU / 128k)
+      BENCH_KERNELS_QUERIES  probe rows           (default 4k TPU / 512)
+      BENCH_KERNELS_TRIM     per-shard merge rows (default 4k TPU / 1k)
+      BENCH_KERNELS_SHARDS   comma list, default "2,4,8"
+      BENCH_KERNELS_REPEATS  timing repeats (default 10 TPU / 3)
+      BENCH_KERNELS_JSON     output path, default BENCH_kernels.json
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro import benchlib
+    from repro.core import stepper
+    from repro.kernels import calibration, ops, ref
+    from repro.kernels.run_probe import (DEFAULT_R_TILE, DEFAULT_V_TILE,
+                                         run_probe_pallas,
+                                         run_probe_prefetch_pallas)
+    from repro.kernels.sorted_probe import DEFAULT_K_TILE, sorted_probe_pallas
+
+    backend = jax.default_backend()
+    interp = ops._interpret()
+    on_tpu = backend == "tpu"
+    n_keys = int(os.environ.get("BENCH_KERNELS_KEYS",
+                                1_000_000 if on_tpu else 131_072))
+    n_q = int(os.environ.get("BENCH_KERNELS_QUERIES",
+                             4096 if on_tpu else 512))
+    trim = int(os.environ.get("BENCH_KERNELS_TRIM", 4096 if on_tpu else 1024))
+    repeats = int(os.environ.get("BENCH_KERNELS_REPEATS",
+                                 10 if on_tpu else 3))
+    shard_counts = tuple(
+        int(s) for s in os.environ.get("BENCH_KERNELS_SHARDS",
+                                       "2,4,8").split(",") if s)
+    records: list[dict] = []
+
+    def timed(fn, *args):
+        out = fn(*args)
+        jax.tree_util.tree_leaves(out)[0].block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            out = fn(*args)
+            jax.tree_util.tree_leaves(out)[0].block_until_ready()
+        return (time.perf_counter() - t0) / repeats, out
+
+    def record(name: str, wall_s: float, derived: str, **extra) -> None:
+        emit(f"fig_kernels/{name}", 1e6 * wall_s, derived)
+        records.append({"name": name, "us_per_call": 1e6 * wall_s,
+                        "derived": derived, **extra})
+
+    rng = np.random.default_rng(0)
+    values = jnp.asarray(np.sort(rng.integers(0, 4 * n_keys, n_keys))
+                         .astype(np.int64))
+
+    # --- run_probe: prefetch vs dense on two window shapes --------------
+    # dense windows: each row's run spans ~1/8 of the column, scattered —
+    # the prefetch window per row block covers most value tiles, so both
+    # variants stream nearly everything.  clustered windows: short runs,
+    # sorted starts (how the engine actually probes: runs of one
+    # predicate segment) — a row block's union window is a few tiles and
+    # the prefetch grid skips the rest.
+    lo_dense = rng.integers(0, n_keys, n_q)
+    hi_dense = np.minimum(n_keys, lo_dense + rng.integers(0, n_keys // 8, n_q))
+    lo_clust = np.sort(rng.integers(0, n_keys, n_q))
+    hi_clust = np.minimum(n_keys, lo_clust + rng.integers(0, 64, n_q))
+    targets = jnp.asarray(rng.integers(0, 4 * n_keys, n_q).astype(np.int64))
+    n_v_tiles = -(-n_keys // DEFAULT_V_TILE)
+    for case, lo64, hi64 in (("densewin", lo_dense, hi_dense),
+                             ("clustwin", lo_clust, hi_clust)):
+        lo = jnp.asarray(lo64.astype(np.int64))
+        hi = jnp.asarray(hi64.astype(np.int64))
+        pos_ref, hit_ref = ref.run_probe_ref(values, lo, hi, targets)
+        # fraction of value tiles a prefetch row block actually streams
+        blk_lo = (lo64 // DEFAULT_V_TILE).reshape(-1, DEFAULT_R_TILE) \
+            if n_q % DEFAULT_R_TILE == 0 else (lo64 // DEFAULT_V_TILE)[None]
+        blk_hi = (np.maximum(hi64 - 1, 0) // DEFAULT_V_TILE).reshape(
+            blk_lo.shape)
+        tile_frac = float(np.mean(np.maximum(
+            blk_hi.max(1) - blk_lo.min(1) + 1, 0)) / n_v_tiles)
+        for variant, fn in (("dense", run_probe_pallas),
+                            ("prefetch", run_probe_prefetch_pallas)):
+            wall, (pos, hit) = timed(
+                lambda v, l, h, t, fn=fn: fn(v, l, h, t, interpret=interp),
+                values, lo, hi, targets)
+            same = bool(np.array_equal(np.asarray(pos), np.asarray(pos_ref))
+                        and np.array_equal(np.asarray(hit),
+                                           np.asarray(hit_ref)))
+            record(f"run_probe_{variant}/{case}", wall,
+                   f"backend={backend};interpret={int(interp)};"
+                   f"window_tile_frac={tile_frac:.3f};identical={int(same)}",
+                   identical=same, window_tile_frac=tile_frac)
+
+    # --- point probe across column lengths: the calibration fit ---------
+    cal_sizes = sorted({max(DEFAULT_K_TILE, n_keys // 4), n_keys // 2,
+                        n_keys})
+    q_cal = jnp.asarray(rng.integers(0, 4 * n_keys, n_q).astype(np.int64))
+    passes, walls = [], []
+    for size in cal_sizes:
+        wall, _ = timed(lambda k, q: sorted_probe_pallas(k, q,
+                                                         interpret=interp),
+                        values[:size], q_cal)
+        passes.append(max(1, -(-size // DEFAULT_K_TILE)))
+        walls.append(wall)
+        record(f"sorted_probe/n{size}", wall,
+               f"backend={backend};tile_passes={passes[-1]}")
+    fitted = benchlib.fit_tile_pass_ops(passes, walls)
+    if on_tpu and not interp and ops._use_pallas():
+        tile_pass_ops, source = fitted, "measured"
+    else:
+        tile_pass_ops = float(calibration.DEFAULT_TILE_PASS_OPS)
+        source = "guess"
+    record("probe_calibration", sum(walls),
+           f"tile_pass_ops={tile_pass_ops:.3g};source={source};"
+           f"fitted_ops={fitted:.3g}")
+
+    # --- wave fingerprint + cache replay --------------------------------
+    block = jnp.asarray(rng.integers(0, 1 << 20, (trim, 4)).astype(np.int32))
+    valid = jnp.asarray(np.arange(trim) < trim * 3 // 4)
+    wall, _ = timed(jax.jit(ops.fingerprint_rows), block, valid)
+    record(f"fingerprint/{trim}x4", wall, f"backend={backend}")
+    m = trim // 2
+    src = jnp.asarray(rng.integers(0, trim * 3 // 4, m).astype(np.int32))
+    written = jnp.asarray(rng.integers(0, 1 << 20, (m, 2)).astype(np.int32))
+    n_out = jnp.asarray(m, jnp.int32)
+    replay = jax.jit(lambda s, sr, w, n: ops.replay_delta(s, sr, w, n,
+                                                          (2, 3)))
+    wall, _ = timed(replay, block, src, written, n_out)
+    record(f"replay/{trim}x4", wall, f"backend={backend}")
+
+    # --- k-way merge vs replicated lexsort ------------------------------
+    # single-process: the merge schedule ONE device runs in the
+    # recursive-doubling collective (log2(S) pairwise merges of doubling
+    # size, partner blocks prebuilt untimed) against that device's
+    # alternative under all_gather — one lexsort of the full S*trim block.
+    sort_cols = (0, 1)
+    for S in shard_counts:
+        if S < 2 or S & (S - 1):
+            print(f"# skipping shards{S}: k-way needs a power of two >= 2",
+                  file=sys.stderr)
+            continue
+        n_valid = S * trim * 3 // 5
+        g = np.full((S * trim, 4), -1, np.int32)
+        g[:n_valid, 0] = np.sort(rng.integers(0, n_valid // 4, n_valid))
+        g[:n_valid, 1] = np.arange(n_valid)  # (c0, c1) unique + lexsorted
+        g[:n_valid, 2:] = rng.integers(0, 1 << 20, (n_valid, 2))
+        owner = rng.integers(0, S, n_valid)
+        blocks, valids = [], []
+        for s in range(S):
+            mine = g[:n_valid][owner == s][:trim]
+            b = np.full((trim, 4), -1, np.int32)
+            b[:len(mine)] = mine
+            blocks.append(jnp.asarray(b))
+            valids.append(jnp.asarray(np.arange(trim) < len(mine)))
+        gathered = jnp.concatenate(blocks)
+        valid_g = jnp.concatenate(valids)
+        wall_lex, (r_lex, v_lex) = timed(
+            jax.jit(lambda r, v: stepper.lexsort_rows(r, v, sort_cols)),
+            gathered, valid_g)
+        # device 0's partners: the merged block of shards [2^r, 2^(r+1))
+        partners = []
+        for r in range(S.bit_length() - 1):
+            d = 1 << r
+            p_r, p_v = blocks[d], valids[d]
+            for s in range(d + 1, 2 * d):
+                p_r, p_v = stepper.merge_sorted_blocks(p_r, p_v, blocks[s],
+                                                       valids[s], sort_cols)
+            partners.append((p_r, p_v))
+
+        def kway_chain(mine_r, mine_v, *flat):
+            for i in range(0, len(flat), 2):
+                mine_r, mine_v = stepper.merge_sorted_blocks(
+                    mine_r, mine_v, flat[i], flat[i + 1], sort_cols)
+            return mine_r, mine_v
+
+        flat = [x for p in partners for x in p]
+        wall_kway, (r_kw, v_kw) = timed(jax.jit(kway_chain), blocks[0],
+                                        valids[0], *flat)
+        same = bool(np.array_equal(np.asarray(r_kw), np.asarray(r_lex))
+                    and np.array_equal(np.asarray(v_kw), np.asarray(v_lex)))
+        record(f"gather_merge/shards{S}", wall_kway,
+               f"lexsort_us={1e6 * wall_lex:.1f};"
+               f"kway_us={1e6 * wall_kway:.1f};"
+               f"speedup={wall_lex / max(wall_kway, 1e-12):.2f};"
+               f"identical={int(same)}", identical=same,
+               lexsort_us=1e6 * wall_lex, kway_us=1e6 * wall_kway)
+
+    out = os.environ.get("BENCH_KERNELS_JSON", calibration.DEFAULT_FILENAME)
+    with open(out, "w") as f:
+        json.dump({"figure": "fig_kernels", "backend": backend,
+                   "interpret": interp,
+                   "sizes": {"keys": n_keys, "queries": n_q, "trim": trim},
+                   "calibration": {"tile_pass_ops": tile_pass_ops,
+                                   "source": source, "fitted_ops": fitted,
+                                   "k_tile": DEFAULT_K_TILE,
+                                   "op_s": CostModel().op_s},
+                   "records": records}, f, indent=2)
+    print(f"# wrote {out} ({len(records)} records)", file=sys.stderr)
+
+
 # ----------------------------------------------------------------- kernels
 
 def kernels() -> None:
@@ -404,7 +632,10 @@ def kernels() -> None:
 
 FIGS = [fig4_loadstats, fig5_throughput, fig5f_timeouts, fig6_server_load,
         fig7_network, fig8_latency, fig_sched_throughput, fig_capacity,
-        fig_dist_sched, fig_shard_sched, kernels]
+        fig_dist_sched, fig_shard_sched, fig_kernels, kernels]
+
+# figures that never touch the WatDiv bench instance
+_STORELESS = (fig_kernels, kernels)
 
 
 def main() -> None:
@@ -419,7 +650,7 @@ def main() -> None:
         raise SystemExit(f"unknown figure(s) {unknown}; "
                          f"choose from {sorted(by_name)}")
     figs = [by_name[n] for n in selected] if selected else FIGS
-    if any(f is not kernels for f in figs):  # only kernels skips the graph
+    if any(f not in _STORELESS for f in figs):
         g, store = bench_graph()
         print(f"# WatDiv bench instance: {store.n_triples} triples, "
               f"{store.n_predicates} predicates")

@@ -104,7 +104,7 @@ def scheduled_load_throughput(store, queries, interface: str, n_clients: int,
     its axes (``fig_shard_sched``); the counts the model consumes are
     byte-identical either way.
 
-    The sharded lowering's per-unit ``all_gather`` is not free: its
+    The sharded lowering's per-unit merge collective is not free: its
     *measured* payload (``SchedMetrics.gather_bytes``) is charged against
     the pod interconnect (``cm.pod_bw_bytes_s``) and spread over the
     stream, so sharded throughput numbers are never silently optimistic
@@ -129,6 +129,44 @@ def scheduled_load_throughput(store, queries, interface: str, n_clients: int,
     mean_s = total_s / max(len(served), 1)
     return (n_clients * 60.0 / mean_s, sched.cache.stats.hit_rate,
             sched.metrics.occupancy)
+
+
+def probe_tile_pass_seconds(cm: CostModel = CostModel()) -> float:
+    """Modeled wall seconds of one Pallas probe tile pass under the
+    current kernel calibration: ``calibration.tile_pass_ops()`` (the
+    ``fig_kernels`` artifact, or the guess of 1 without one) times the
+    cost model's per-op constant.  This is the seam that makes
+    ``kops.probe_op_cost``'s Pallas branch and the wall-clock model
+    agree: the harness fits the constant so that ops x op_s reproduces
+    the measured per-pass slope."""
+    from repro.kernels import calibration
+
+    return calibration.tile_pass_ops() * cm.op_s
+
+
+def fit_tile_pass_ops(passes, walls, cm: CostModel = CostModel()) -> float:
+    """Least-squares per-tile-pass cost of the probe, in cost-model ops.
+
+    ``passes[i]`` tile passes took ``walls[i]`` wall seconds; the linear
+    fit's slope (seconds per pass — the intercept absorbs fixed dispatch
+    overhead) divided by ``cm.op_s`` is the number ``fig_kernels`` writes
+    into ``BENCH_kernels.json`` as ``calibration.tile_pass_ops``.  Falls
+    back to the pre-calibration guess when the fit is degenerate (fewer
+    than two distinct sizes, or a non-positive slope — interpreter noise,
+    never a real pipeline)."""
+    import numpy as np
+
+    from repro.kernels import calibration
+
+    p = np.asarray(passes, float)
+    w = np.asarray(walls, float)
+    if p.size < 2 or np.ptp(p) == 0.0:
+        return float(calibration.DEFAULT_TILE_PASS_OPS)
+    dp = p - p.mean()
+    slope = float((dp * (w - w.mean())).sum() / (dp * dp).sum())
+    if slope <= 0.0:
+        return float(calibration.DEFAULT_TILE_PASS_OPS)
+    return slope / cm.op_s
 
 
 def run_load(store, queries, interface: str,

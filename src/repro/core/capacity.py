@@ -274,6 +274,34 @@ class CapacityPlanner:
         self._put_hwm((plan.signature, plan.consts, "q", self.store.epoch),
                       cap)
 
+    def observe_shard_peak(self, plan: "QueryPlan", k: int, n_shards: int,
+                           peak: int) -> None:
+        """Record the largest per-shard row block unit ``k`` produced on an
+        ``n_shards``-way sharded run (the pmax the sharded step reports).
+
+        Keyed and epoch-swept like every HWM entry — the unit slot is the
+        ``("st", k, n_shards)`` tuple so shard-trim observations can never
+        collide with unit-capacity ones, and the epoch stays at tuple
+        index 3 (``sync_epoch`` sweeps on it).  Kept as a running max:
+        the scheduler feeds it back as the next wave's gather trim
+        (``shard_peak_hint``), replacing the static skew headroom with the
+        measured occupancy — an undershoot is byte-safe (the trim-lost
+        flag rides the normal overflow-retry path).
+        """
+        key = (plan.signature, plan.consts, ("st", k, n_shards),
+               self.store.epoch)
+        prev = self._hwm.get(key)
+        if prev is None or peak > prev:
+            self._put_hwm(key, int(peak))
+
+    def shard_peak_hint(self, plan: "QueryPlan", k: int,
+                        n_shards: int) -> int | None:
+        """Largest observed per-shard block for unit ``k`` at ``n_shards``
+        shards in the current epoch, or None when the unit has never run
+        sharded (callers fall back to the static ``stepper.shard_trim``)."""
+        return self._get_hwm((plan.signature, plan.consts,
+                              ("st", k, n_shards), self.store.epoch))
+
     # --------------------------------------------------------------- epoch
     def sync_epoch(self, epoch: int) -> int:
         """Sweep HWM entries from other epochs on first sight of a new one

@@ -191,6 +191,9 @@ def _lane_eval(plans: tuple, n_vars: int, cfg: DistConfig, radix: int,
     # because the data simply is not there
     owner = (my_shard, n_shards) if cfg.owner_masking else None
     trim = min(cfg.shard_cap, cfg.cap)
+    # k-way merge on power-of-two shard counts, replicated lexsort
+    # otherwise — bit-identical either way (stepper.select_gather_merge)
+    merge_fn = stepper.select_gather_merge("auto", n_shards)
     for up in plans:
         # --- server side: local (collective-free) unit evaluation ---------
         prov = jnp.arange(cfg.cap, dtype=jnp.int32)[:, None]
@@ -204,7 +207,7 @@ def _lane_eval(plans: tuple, n_vars: int, cfg: DistConfig, radix: int,
         # --- network: shard-local results -> client lane (one collective,
         # order-restoring: provenance column + drawn-value columns) --------
         sort_cols = (width,) + tuple(unit_io(up).write_cols)
-        rows_m, valid_m, lost = stepper.gather_merge(
+        rows_m, valid_m, lost = merge_fn(
             local.rows, local.valid, sort_cols, axis, cfg.cap, trim)
         overflow = ovf | (jax.lax.psum(lost.astype(jnp.int32), axis) > 0)
         table = BindingTable(rows_m[:, :-1], valid_m, overflow)

@@ -74,8 +74,13 @@ its ``data`` axis: wide waves run against the subject-hash sharded store
 (1/n_data of the index per device — the memory-scaling mode) with wave
 lanes spread over the remaining axes and one order-restoring collective
 per unit (``stepper.sharded_unit_step`` hoists exactly the per-unit
-``all_gather`` the whole-query lane evaluator uses); narrower waves fall
-back to replicated mesh lanes or vmap.  The sharded step rebuilds the
+merge the whole-query lane evaluator uses — an ``all_gather`` + lexsort
+or a log2(shards)-round pairwise k-way merge, byte-identical either
+way); narrower waves fall back to replicated mesh lanes or vmap.  Waves
+at the overflow-latch rung (``cap == max_cap``) stay sharded too: the
+step's latch mode merges after every branch, so mid-unit truncation
+happens in global serial row order — the one case that used to force a
+whole-table lowering.  The sharded step rebuilds the
 exact serial cost account from scalar psums of the branch-boundary counts
 and sorts its gather by provenance + drawn-value columns back into serial
 row order, so the choice of lowering — and the shard count — is invisible

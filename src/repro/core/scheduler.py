@@ -34,10 +34,14 @@ clients and turns it into device-efficient work:
      of the index per device — the memory-scaling mode) and spreads wave
      lanes over the remaining axes; each unit step is local branch
      evaluation plus one order-restoring collective
-     (``stepper.sharded_unit_step``).  Waves at the overflow-latch rung
-     (``cap == max_cap``) fall back to the replicated/vmap lowerings —
-     latch semantics truncate mid-unit in global row order, which only a
-     whole-table lowering can reproduce.
+     (``stepper.sharded_unit_step``).  The collective is either an
+     ``all_gather`` + lexsort or a log2(n_shards)-round pairwise k-way
+     merge (``SchedulerConfig.shard_merge``), byte-identical.  Waves at
+     the overflow-latch rung (``cap == max_cap``) stay sharded too:
+     latch semantics truncate mid-unit in *global* row order, which the
+     step reproduces by merging after every branch (the merged table is
+     replicated, and re-partitions by store locality on the next
+     branch), instead of falling back to a whole-table lowering.
 
    All three run the same per-lane evaluator, so the pick is pure
    placement — valid rows, gross stats, overflow flags and retry
@@ -132,9 +136,20 @@ class SchedulerConfig:
     # store size for sharding to pay (below it the per-unit collective
     # dominates and replicated lanes win), and the per-shard gather
     # budget's skew margin (stepper.shard_trim: a shard ships at most
-    # headroom * cap / n_shards rows per unit — "per-shard caps")
+    # headroom * cap / n_shards rows per unit — "per-shard caps").  The
+    # static headroom is only the *cold* trim: once a unit has run
+    # sharded, the planner's pod-shared shard-peak high-water mark
+    # replaces it with the measured occupancy (pow2-rounded, floored at
+    # the capacity quantum) — an undershoot is byte-safe because trimmed
+    # rows ride the normal overflow-retry path
     shard_min_triples: int = 0
     shard_headroom: int = 2
+    # order-restoring merge for sharded waves ("auto" | "kway" |
+    # "lexsort"): auto picks the log2(n_shards)-round pairwise k-way
+    # merge on power-of-two shard counts and the all_gather + lexsort
+    # fallback otherwise; both are byte-identical (stepper.
+    # select_gather_merge)
+    shard_merge: str = "auto"
 
 
 class Request(NamedTuple):
@@ -246,11 +261,12 @@ class QueryScheduler:
     it (``TripleStore.stacked_shard_arrays`` — 1/n_shards of the index per
     device) and wave lanes span the remaining axes.  ``_run_wave`` picks
     it for waves wide enough to cover those lane slots whenever the store
-    clears ``scfg.shard_min_triples`` and the wave is below the
-    overflow-latch rung; results stay byte-identical (the sharded step's
-    per-unit gather restores serial row order and its psums rebuild the
-    exact serial cost account).  A ``data_axis`` of extent 1 is valid and
-    exercises the sharded lowering on one device.
+    clears ``scfg.shard_min_triples`` — including waves at the
+    overflow-latch rung, which run the step's latch mode (per-branch
+    global-order merge-and-truncate); results stay byte-identical (the
+    sharded step's per-unit merge restores serial row order and its
+    psums rebuild the exact serial cost account).  A ``data_axis`` of
+    extent 1 is valid and exercises the sharded lowering on one device.
     """
 
     def __init__(self, store: TripleStore, cfg: EngineConfig,
@@ -403,6 +419,32 @@ class QueryScheduler:
                                        []).append(job)
         return results
 
+    def _wave_shard_trim(self, jobs: list[_Job], active: list[int],
+                         k: int, cap: int) -> int:
+        """Per-shard merge budget for this wave's unit ``k``.
+
+        When the planner has observed the unit at this shard count (pod
+        -shared shard-peak HWM, epoch-tagged), the trim is the measured
+        occupancy — the max over the wave's jobs, rounded up to a power
+        of two and floored at the capacity quantum so trims (static step
+        args) stay logarithmically few.  If *any* active job lacks an
+        observation the wave falls back to the static skew-headroom
+        budget (``stepper.shard_trim``) — the cold default, and the
+        parity baseline the tests pin.  An undershoot is byte-safe:
+        trimmed rows set the lost flag, which rides the normal
+        overflow-retry path.
+        """
+        best = 0
+        for j in active:
+            hint = self.planner.shard_peak_hint(jobs[j].plan, k,
+                                                self._n_shards)
+            if hint is None:
+                return stepper.shard_trim(cap, self._n_shards,
+                                          self.scfg.shard_headroom)
+            best = max(best, hint)
+        t = 1 << max(int(best) - 1, 0).bit_length()
+        return min(cap, max(t, CapacityPlanner.MIN_QUANTUM))
+
     # ----------------------------------------------------------------- wave
     def _run_wave(self, jobs: list[_Job],
                   results: dict[int, tuple[BindingTable, QueryStats]]
@@ -415,9 +457,10 @@ class QueryScheduler:
         The lowering is picked per wave (sharded > replicated mesh >
         vmap): with a ``data_axis``, waves wide enough to cover the
         non-data lane slots run against the subject-hash sharded store
-        (unless the store is below the sharding threshold or the wave sits
-        at the overflow-latch rung); waves covering the full mesh run
-        replicated; everything else takes the single-host vmap step.  One
+        (unless the store is below the sharding threshold); waves at the
+        overflow-latch rung stay sharded in the step's latch mode.
+        Waves covering the full mesh run replicated; everything else
+        takes the single-host vmap step.  One
         bucket can mix all three (e.g. a wide sharded first pass and a
         1-job vmap overflow retry) — results are byte-identical across
         them.
@@ -438,8 +481,10 @@ class QueryScheduler:
             B *= 2
         # --- lowering pick: sharded > replicated mesh > vmap --------------
         use_shard = (self._n_shards > 0 and B >= self._shard_slots
-                     and cap < self.cfg.max_cap
                      and self.store.n_triples >= scfg.shard_min_triples)
+        # overflow-latch rung: the sharded step merges after every branch
+        # (global-order truncation) instead of once per unit
+        latch = use_shard and cap >= self.cfg.max_cap
         use_mesh = (not use_shard and self.mesh is not None
                     and B >= self._mesh_slots)
         slots = self._shard_slots if use_shard \
@@ -536,27 +581,37 @@ class QueryScheduler:
             ops_lane: dict[int, int] = {}
             if need_step:
                 if use_shard:
+                    # latch waves merge at the full cap (global truncation
+                    # must see every shard's rows); non-latch waves trim to
+                    # the measured shard occupancy when the planner has
+                    # observed this unit, else the static skew headroom
+                    trim = cap if latch else \
+                        self._wave_shard_trim(jobs, active, k, cap)
                     step = stepper.sharded_unit_step(
                         up, self.store.radix, self.mesh, self.data_axis,
                         self._shard_lane_axes, self._n_shards, self._logn,
-                        scfg.shard_headroom)
+                        trim, latch, scfg.shard_merge)
                     self.metrics.mesh_steps += 1
                     self.metrics.shard_steps += 1
-                    trim = stepper.shard_trim(cap, self._n_shards,
-                                              scfg.shard_headroom)
-                    # the per-unit all_gather's payload (rows incl. the
-                    # provenance column + validity), for the throughput
-                    # model — measured, not assumed
+                    # the per-unit merge collective's payload (rows incl.
+                    # the provenance column + validity), for the
+                    # throughput model — measured, not assumed.  Latch
+                    # waves pay it once per branch (mid-unit merges)
+                    rounds = len(up.branches) if latch else 1
                     self.metrics.gather_bytes += \
-                        B * self._n_shards * trim * ((V + 1) * 4 + 1)
+                        B * self._n_shards * trim * ((V + 1) * 4 + 1) * rounds
                 elif use_mesh:
                     step = stepper.unit_step(up, self.store.radix, self.mesh,
                                              self._lane_axes)
                     self.metrics.mesh_steps += 1
                 else:
                     step = stepper.unit_step(up, self.store.radix)
-                r_o, v_o, o_o, src_o, ops_o, cnt_o, peak_o = step(
-                    dev, consts_dev, rows_d, valid_d, jnp.asarray(ovf))
+                out = step(dev, consts_dev, rows_d, valid_d,
+                           jnp.asarray(ovf))
+                # the sharded step returns an 8th output (the pmax of
+                # per-shard row counts) that feeds the occupancy trims;
+                # the vmap/replicated steps return the common 7
+                r_o, v_o, o_o, src_o, ops_o, cnt_o, peak_o = out[:7]
                 ops_np = np.asarray(ops_o)
                 cnt_np = np.asarray(cnt_o)
                 ovf_np = np.asarray(o_o)
@@ -598,6 +653,19 @@ class QueryScheduler:
                         counts[j] = int(cnt_np[j])
                         jobs[j].peak_seen = max(jobs[j].peak_seen,
                                                 int(peak_np[j]), n_in[j])
+                if use_shard and not latch:
+                    # feed the measured per-shard occupancy back into the
+                    # planner so the next wave of this unit trims its
+                    # merge to what shards actually produced.  Latch
+                    # waves are skipped: their pmax runs post-merge (the
+                    # replicated global count, not a per-shard block), and
+                    # retired lanes are skipped because a clamped table's
+                    # peak understates the true need
+                    sp = np.asarray(out[7])
+                    for j in active:
+                        if j not in retired:
+                            self.planner.observe_shard_peak(
+                                jobs[j].plan, k, self._n_shards, int(sp[j]))
             else:
                 # every active lane hit: replay the cached deltas on the
                 # device (stepper.replay_step / kops.replay_delta).  The

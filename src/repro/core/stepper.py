@@ -29,11 +29,18 @@ Contents:
   store: each shard evaluates the unit's branches locally
   (``eval_unit_sharded`` — star locality makes branch joins
   collective-free), scalar psums recover the exact serial cost account,
-  and one per-unit ``gather_merge`` rebuilds the lane table in *serial row
-  order* (lexicographic sort by provenance + the unit's drawn-value
-  columns), so sharded waves are byte-identical to the vmap/replicated
-  lowerings — including the overflow flag, which is derived from the
-  *global* expansion totals.
+  and a per-unit gather-merge rebuilds the lane table in *serial row
+  order* (key: provenance + the unit's drawn-value columns), so sharded
+  waves are byte-identical to the vmap/replicated lowerings — including
+  the overflow flag, which is derived from the *global* expansion totals.
+  Two bit-identical merge strategies (``select_gather_merge``): the
+  replicated lexsort over the ``all_gather``'d block, and the k-way merge
+  — ``log2(n_shards)`` ``ppermute`` rounds of pairwise
+  ``merge_sorted_blocks``, linear rank-and-scatter work per round instead
+  of a full sort.  Overflow-latch waves (``cap == max_cap``) merge after
+  every branch so mid-unit truncation happens in global serial order —
+  latch-rung waves stay sharded instead of falling back to
+  replicated/vmap.
 - ``serial_unit_step`` — the engine's ladder step: ``unit_step`` without
   the provenance column (serial ``run`` never inserts into the cache).
 - ``digest_step``      — jitted wave fingerprinting: gathers a unit's read
@@ -135,7 +142,7 @@ _FILTER_CASES = frozenset({"probe_oconst", "probe_ovar_bound"})
 
 def eval_unit_sharded(dev, radix: int, up: UnitPlan, const_vec, table,
                       *, axis: str, logn: int,
-                      owner=None):
+                      owner=None, latch_merge=None):
     """One unit's branches against the local store shard, inside shard_map.
 
     The input ``table`` is replicated along ``axis`` (the lane state is
@@ -165,6 +172,23 @@ def eval_unit_sharded(dev, radix: int, up: UnitPlan, const_vec, table,
     peak / count / overflow replicated along ``axis`` (built from psums
     and the replicated input) and ``local_table`` the shard-local output
     partition, to be merged by ``gather_merge``.
+
+    ``latch_merge`` is the overflow-latch mode (``cap == max_cap`` waves,
+    where a too-big expansion truncates at the capacity in *global* serial
+    row order and evaluation continues): a ``(rows, valid) -> (rows,
+    valid, lost)`` gather-merge bound to ``trim = out_cap = cap``, run
+    after every branch.  The merged-then-truncated table IS the serial
+    latch table — a shard's local clamp keeps its local-order prefix,
+    which contains the global prefix's restriction to that shard, so
+    truncating the merge at ``cap`` reproduces the serial truncation
+    exactly.  The replicated result re-partitions on the next branch by
+    store locality (probes find runs only on the owning shard, scans
+    expand only local runs), and the accounting formulas above are
+    latch-exact as-is: ``min(psum(local clamped), cap) ==
+    min(global total, cap)`` in every clamp case, and a local clamp the
+    count psum can't see still ORs in through the overflow-flag psum.
+    When set, the returned table is the *merged, replicated* lane table —
+    the caller must not merge again.
     """
     cap = table.cap
     ctx = EvalCtx(dev, radix, const_vec, logn,
@@ -183,6 +207,9 @@ def eval_unit_sharded(dev, radix: int, up: UnitPlan, const_vec, table,
             over = over | (cnt_new > cap)
         cnt = jnp.minimum(cnt_new, cap)
         peak = jnp.maximum(peak, cnt)
+        if latch_merge is not None:
+            rows_m, valid_m, _ = latch_merge(table.rows, table.valid)
+            table = BindingTable(rows_m, valid_m, table.overflow)
     # local clamps (a shard whose local total exceeded the lane capacity)
     # imply a global clamp, but OR them in explicitly so a lost row can
     # never go unflagged; the input's replicated flag rides along too
@@ -212,10 +239,110 @@ def shard_trim(cap: int, n_shards: int, headroom: int = 2) -> int:
                         CapacityPlanner.MIN_QUANTUM))
 
 
+def lexsort_rows(rows, valid, sort_cols: tuple[int, ...]):
+    """Stable lexicographic sort of a row block by ``(~valid, *sort_cols)``
+    — valid rows first, then the column keys most-significant-first.
+    Returns the sorted ``(rows, valid)``; the replicated-lexsort half of
+    the shard merge (``merge_sorted_blocks`` is the other), kept callable
+    on its own as the k-way merge's parity baseline and bench foil."""
+    n = rows.shape[0]
+    perm = jnp.arange(n, dtype=jnp.int32)
+    for c in reversed(sort_cols):
+        perm = perm[jnp.argsort(rows[:, c][perm], stable=True)]
+    perm = perm[jnp.argsort(~valid[perm], stable=True)]
+    return rows[perm], valid[perm]
+
+
+def _merge_keys(rows, valid, sort_cols: tuple[int, ...]):
+    """Key columns of a block under the merge order ``(~valid, *sort_cols)``,
+    as int32 arrays most-significant-first."""
+    return [(~valid).astype(jnp.int32)] + \
+        [rows[:, c].astype(jnp.int32) for c in sort_cols]
+
+
+def _lex_rank_range(keys_s, keys_q):
+    """Equal ranges of each query row's key tuple within a block sorted by
+    the same key order: per key column, narrow ``[lo, hi)`` by a within-run
+    two-sided search (``kops.searchsorted_in_runs`` — the backend-
+    dispatched primitive, so the merge rides the kernel seam).  Returns
+    ``(lo, hi)`` = (#rows strictly below, #rows at-or-below) per query."""
+    n_s = keys_s[0].shape[0]
+    n_q = keys_q[0].shape[0]
+    lo = jnp.zeros((n_q,), jnp.int32)
+    hi = jnp.full((n_q,), n_s, jnp.int32)
+    for cs, cq in zip(keys_s, keys_q):
+        # left/right insertion of cq within [lo, hi): the block is sorted
+        # by this column inside ties of the earlier ones; +1 turns the
+        # left search into the right one (int32 keys, far from the max)
+        lo_new = kops.searchsorted_in_runs(cs, lo, hi, cq)
+        hi = kops.searchsorted_in_runs(cs, lo, hi, cq + 1)
+        lo = lo_new
+    return lo, hi
+
+
+def merge_sorted_blocks(rows_a, valid_a, rows_b, valid_b,
+                        sort_cols: tuple[int, ...]):
+    """Linear merge of two row blocks, each already sorted by
+    ``(~valid, *sort_cols)``; block A wins ties (stability).
+
+    The merge is rank-based rather than compare-and-advance: each A row's
+    final position is its own index plus the count of strictly-smaller B
+    rows, each B row's its index plus the count of at-or-below A rows —
+    two vectorized lexicographic rank computations
+    (``_lex_rank_range``) and one scatter, no serial loop.  Together the
+    positions are a permutation of the output, so the scatter is exact.
+    Returns the merged ``(rows, valid)`` of length ``len(A) + len(B)``.
+    """
+    n_a = rows_a.shape[0]
+    n_b, width = rows_b.shape
+    keys_a = _merge_keys(rows_a, valid_a, sort_cols)
+    keys_b = _merge_keys(rows_b, valid_b, sort_cols)
+    b_below_a, _ = _lex_rank_range(keys_b, keys_a)
+    _, a_at_or_below_b = _lex_rank_range(keys_a, keys_b)
+    pos_a = jnp.arange(n_a, dtype=jnp.int32) + b_below_a
+    pos_b = jnp.arange(n_b, dtype=jnp.int32) + a_at_or_below_b
+    rows_m = jnp.zeros((n_a + n_b, width), rows_a.dtype)
+    rows_m = rows_m.at[pos_a].set(rows_a).at[pos_b].set(rows_b)
+    valid_m = jnp.zeros((n_a + n_b,), valid_a.dtype)
+    valid_m = valid_m.at[pos_a].set(valid_a).at[pos_b].set(valid_b)
+    return rows_m, valid_m
+
+
+def _trim_block(rows, valid, trim: int):
+    """Clip a local block to its gather budget and blank the invalid tail.
+
+    Invalid rows are overwritten with -1 so both merge strategies see (and
+    emit) identical bytes outside the valid prefix: all-(-1) rows sorted
+    to the back — without this, lexsort and k-way would order the
+    invalid-tail garbage differently (harmless downstream, but it would
+    reduce "byte-identical" to "byte-identical where it matters").
+    Returns ``(rows, valid, lost)`` with ``lost`` = this shard dropped a
+    valid row past the trim (shard-local; callers psum/OR it).
+    """
+    cap = rows.shape[0]
+    lost = jnp.asarray(False)
+    if trim < cap:
+        lost = jnp.any(valid[trim:])
+        rows, valid = rows[:trim], valid[:trim]
+    return jnp.where(valid[:, None], rows, -1), valid, lost
+
+
+def _pad_to_cap(rows, valid, out_cap: int, lost):
+    width = rows.shape[1]
+    n = rows.shape[0]
+    if n >= out_cap:
+        return rows[:out_cap], valid[:out_cap], lost
+    pad = out_cap - n
+    return (jnp.concatenate([rows, jnp.full((pad, width), -1, rows.dtype)]),
+            jnp.concatenate([valid, jnp.zeros((pad,), valid.dtype)]), lost)
+
+
 def gather_merge(rows, valid, sort_cols: tuple[int, ...], axis: str,
                  out_cap: int, trim: int):
     """Per-unit collective: gather shard-local outputs and rebuild the lane
-    table in *serial row order* (the sharded parity story).
+    table in *serial row order* (the sharded parity story) — the
+    replicated-lexsort strategy: one ``all_gather``, then every device
+    sorts the full ``n_shards * trim`` block.
 
     Each local table holds a partition of the serial output; the serial
     order is recoverable because every output row carries its sort key in
@@ -224,10 +351,9 @@ def gather_merge(rows, valid, sort_cols: tuple[int, ...], axis: str,
     are sorted by exactly those values in the store layout, and expansions
     refine the order of their source rows, so the lexicographic sort by
     ``sort_cols`` over the gathered rows reproduces the serial table
-    byte-for-byte (valid prefix; the invalid tail is never read).  Keys
-    are unique among valid rows (triples are a set, and a subject lives on
-    one shard), so the order is total regardless of how shard blocks
-    interleave.
+    byte-for-byte.  Keys are unique among valid rows (triples are a set,
+    and a subject lives on one shard), so the order is total regardless of
+    how shard blocks interleave.
 
     ``trim`` bounds the per-shard contribution (``shard_trim``); locally
     compacted tables lose only rows past the trim, and ``lost`` reports
@@ -236,76 +362,153 @@ def gather_merge(rows, valid, sort_cols: tuple[int, ...], axis: str,
     be psum/OR-reduced over ``axis`` before use, which is what both
     callers do when folding it into the lane overflow flag.
     Returns ``(rows[out_cap], valid[out_cap], lost)``.
+
+    ``gather_merge_kway`` is the k-way strategy with the same contract and
+    bit-identical outputs; ``select_gather_merge`` picks between them.
     """
-    cap, width = rows.shape
-    lost = jnp.asarray(False)
-    if trim < cap:
-        lost = jnp.any(valid[trim:])
-        rows, valid = rows[:trim], valid[:trim]
+    rows, valid, lost = _trim_block(rows, valid, trim)
+    trim = rows.shape[0]
+    width = rows.shape[1]
     rows_g = jax.lax.all_gather(rows, axis)
     n_shards = rows_g.shape[0]  # static, from the gathered leading axis
     rows_g = rows_g.reshape(n_shards * trim, width)
     valid_g = jax.lax.all_gather(valid, axis).reshape(n_shards * trim)
-    n = rows_g.shape[0]
-    # stable lexsort: least-significant key first, validity last (valid
-    # rows to the front), so the final permutation is (~valid, *sort_cols)
-    perm = jnp.arange(n, dtype=jnp.int32)
-    for c in reversed(sort_cols):
-        perm = perm[jnp.argsort(rows_g[:, c][perm], stable=True)]
-    perm = perm[jnp.argsort(~valid_g[perm], stable=True)]
-    rows_m = rows_g[perm]
-    valid_m = valid_g[perm]
-    if n >= out_cap:
-        return rows_m[:out_cap], valid_m[:out_cap], lost
-    pad = out_cap - n
-    return (jnp.concatenate(
-                [rows_m, jnp.full((pad, width), -1, rows_m.dtype)]),
-            jnp.concatenate([valid_m, jnp.zeros((pad,), valid_m.dtype)]),
-            lost)
+    rows_m, valid_m = lexsort_rows(rows_g, valid_g, sort_cols)
+    return _pad_to_cap(rows_m, valid_m, out_cap, lost)
+
+
+def gather_merge_kway(rows, valid, sort_cols: tuple[int, ...], axis: str,
+                      out_cap: int, trim: int, n_shards: int):
+    """``gather_merge`` as a k-way merge over pre-sorted shard blocks.
+
+    Every shard's local block is already in serial order (the valid prefix
+    is the serial table restricted to the shard; the blanked invalid tail
+    is a run of -1 rows), so the replicated ``n_shards * trim`` lexsort is
+    redundant work: ``log2(n_shards)`` recursive-doubling rounds of
+    pairwise ``merge_sorted_blocks`` — partner exchange via
+    ``ppermute(j <-> j ^ 2**r)``, lower-index block on the left — leave
+    every device holding the fully merged block, replicated exactly like
+    the all_gather result.  Each round is linear-plus-rank work instead of
+    a full sort, and the rank computations ride the dispatched
+    ``searchsorted_in_runs`` primitive (Pallas on TPU).
+
+    Same contract and bit-identical outputs as ``gather_merge`` (pinned by
+    the shard-merge parity tests); requires a power-of-two ``n_shards``
+    (``select_gather_merge`` enforces the fallback).
+    """
+    if n_shards & (n_shards - 1):
+        raise ValueError(f"k-way merge needs a power-of-two shard count, "
+                         f"got {n_shards}")
+    rows, valid, lost = _trim_block(rows, valid, trim)
+    idx = jax.lax.axis_index(axis)
+    for r in range(n_shards.bit_length() - 1):
+        d = 1 << r
+        perm = [(j, j ^ d) for j in range(n_shards)]
+        o_rows = jax.lax.ppermute(rows, axis, perm)
+        o_valid = jax.lax.ppermute(valid, axis, perm)
+        am_left = (idx & d) == 0
+        rows_a = jnp.where(am_left, rows, o_rows)
+        rows_b = jnp.where(am_left, o_rows, rows)
+        valid_a = jnp.where(am_left, valid, o_valid)
+        valid_b = jnp.where(am_left, o_valid, valid)
+        rows, valid = merge_sorted_blocks(rows_a, valid_a, rows_b, valid_b,
+                                          sort_cols)
+    return _pad_to_cap(rows, valid, out_cap, lost)
+
+
+def select_gather_merge(merge: str, n_shards: int):
+    """Resolve a merge policy name to a gather-merge callable with the
+    ``gather_merge`` signature.  ``"auto"`` takes the k-way merge on
+    power-of-two shard counts and the replicated lexsort otherwise;
+    ``"kway"`` / ``"lexsort"`` force a strategy (``"kway"`` raises on a
+    non-power-of-two count).  Outputs are bit-identical either way — the
+    policy is pure placement of the merge work."""
+    pow2 = n_shards >= 1 and not (n_shards & (n_shards - 1))
+    if merge == "lexsort" or (merge == "auto" and not pow2):
+        return gather_merge
+    if merge not in ("auto", "kway"):
+        raise ValueError(f"merge must be 'auto', 'kway' or 'lexsort'; "
+                         f"got {merge!r}")
+    return partial(_kway_with_shards, n_shards=n_shards)
+
+
+def _kway_with_shards(rows, valid, sort_cols, axis, out_cap, trim, *,
+                      n_shards):
+    return gather_merge_kway(rows, valid, sort_cols, axis, out_cap, trim,
+                             n_shards)
 
 
 def sharded_unit_step(up: UnitPlan, radix: int, mesh: Mesh, data_axis: str,
                       lane_axes: tuple[str, ...], n_shards: int, logn: int,
-                      headroom: int = 2):
+                      trim: int, latch: bool = False, merge: str = "auto"):
     """Jitted one-unit wave step over a subject-hash sharded store.
 
     The third instantiation of the shared lane evaluator (vmap /
     replicated shard_map / THIS): the store carries a leading shard axis
     split along ``data_axis``, wave lanes split along ``lane_axes``, and
-    each unit step is local branch evaluation + one order-restoring
-    collective (``eval_unit_sharded`` + ``gather_merge``) — the same
-    per-unit collective ``DistributedEngine``'s whole-query lane evaluator
-    uses, hoisted into the step machinery.  Outputs mirror ``unit_step``'s
-    7-tuple and are byte-identical to it: same rows in the same order,
-    same ops/count/peak (exact via scalar psums), same overflow flag
-    (derived from global totals).  ``logn`` is the *global* store's
-    log-factor (static — shapes inside the step only see the shard).
+    each unit step is local branch evaluation + an order-restoring
+    collective (``eval_unit_sharded`` + ``select_gather_merge``) — the
+    same per-unit collective ``DistributedEngine``'s whole-query lane
+    evaluator uses, hoisted into the step machinery.  Outputs extend
+    ``unit_step``'s 7-tuple and are byte-identical to it on those seven:
+    same rows in the same order, same ops/count/peak (exact via scalar
+    psums), same overflow flag (derived from global totals); the eighth
+    output is ``shard_peak`` — the pmax over shards of the largest local
+    pre-merge row count any branch produced, which the scheduler feeds
+    back into the next wave's ``trim`` (occupancy-fed gather budgets via
+    ``CapacityPlanner.observe_shard_peak``).  ``logn`` is the *global*
+    store's log-factor (static — shapes inside the step only see the
+    shard).
+
+    ``trim`` is the static per-shard gather budget (``shard_trim`` cold,
+    an observed-peak hint warm); ``latch = True`` is the overflow-latch
+    rung (``cap == max_cap``): the merge runs after *every* branch at
+    ``trim = cap`` so mid-unit truncation happens in global serial row
+    order — what used to force latch waves onto the replicated/vmap
+    lowerings.  ``merge`` picks the gather-merge strategy
+    (``select_gather_merge``).
     """
     key = ("shard", _branch_statics(up), radix, kops.FORCE, mesh,
-           data_axis, lane_axes, n_shards, logn, headroom)
+           data_axis, lane_axes, n_shards, logn, trim, latch, merge)
     step = _STEP_CACHE.get(key)
     if step is None:
         io = unit_io(up)
         write_cols = tuple(io.write_cols)
+        merge_fn = select_gather_merge(merge, n_shards)
 
         def lane_fn(dev, const_vec, rows, valid, overflow):
             cap, n_vars = rows.shape
             prov = jnp.arange(cap, dtype=jnp.int32)[:, None]
             table = BindingTable(jnp.concatenate([rows, prov], axis=1),
                                  valid, overflow)
-            table, ops, peak, cnt, ovf = eval_unit_sharded(
-                dev, radix, up, const_vec, table, axis=data_axis, logn=logn)
             # serial order: provenance first, then each expansion branch's
-            # drawn value(s) — write_cols is exactly those, in branch order
+            # drawn value(s) — write_cols is exactly those, in branch
+            # order.  Valid mid-unit too: unwritten columns are uniformly
+            # UNBOUND, so they never perturb an earlier merge's order.
             sort_cols = (n_vars,) + write_cols
-            trim = shard_trim(cap, n_shards, headroom)
-            rows_m, valid_m, lost = gather_merge(
-                table.rows, table.valid, sort_cols, data_axis, cap, trim)
-            ovf = ovf | (jax.lax.psum(lost.astype(jnp.int32), data_axis) > 0)
+            latch_merge = None
+            if latch:
+                def latch_merge(r, v):
+                    return merge_fn(r, v, sort_cols, data_axis, cap, cap)
+            table, ops, peak, cnt, ovf = eval_unit_sharded(
+                dev, radix, up, const_vec, table, axis=data_axis, logn=logn,
+                latch_merge=latch_merge)
+            # the trim budget the NEXT wave of this unit actually needs:
+            # the biggest local block any shard tried to ship
+            shard_peak = jax.lax.pmax(table.count().astype(jnp.int32),
+                                      data_axis)
+            if latch:
+                rows_m, valid_m = table.rows, table.valid  # already merged
+            else:
+                rows_m, valid_m, lost = merge_fn(
+                    table.rows, table.valid, sort_cols, data_axis, cap,
+                    min(trim, cap))
+                ovf = ovf | (jax.lax.psum(lost.astype(jnp.int32),
+                                          data_axis) > 0)
             return (rows_m[:, :-1], valid_m, ovf, rows_m[:, -1], ops, cnt,
-                    peak)
+                    peak, shard_peak)
 
-        step = make_batch_step(lane_fn, out_proto=(0,) * 7, mesh=mesh,
+        step = make_batch_step(lane_fn, out_proto=(0,) * 8, mesh=mesh,
                                data_axis=data_axis, lane_axes=lane_axes)
         _STEP_CACHE[key] = step
     return step

@@ -1,0 +1,70 @@
+"""Measured kernel-cost constants, fed from the kernel bench harness.
+
+``kops.probe_op_cost`` charges the Pallas point probe ``ceil(n / K_TILE)``
+tile passes — a *shape* model.  How many abstract cost-model "ops" one
+tile pass is worth was a guessed constant of 1 until the ``fig_kernels``
+benchmark (``benchmarks/run.py``) started measuring it: the harness times
+the fused probe across column lengths, fits the per-tile-pass slope of
+the wall clock, divides by ``benchlib.CostModel.op_s`` and writes the
+result into ``BENCH_kernels.json`` under ``calibration.tile_pass_ops``.
+
+This module is the read side.  ``tile_pass_ops()`` loads the harness
+output once per process (env override ``REPRO_BENCH_KERNELS_JSON``, else
+``BENCH_kernels.json`` at the repo root) and falls back to the historical
+guess when no artifact exists — CI and fresh checkouts behave exactly as
+before, and the jnp-oracle branch of ``probe_op_cost`` never consults it,
+so ref-backend costs are value-identical with or without a calibration
+file.  Interpret-mode (CPU) harness runs deliberately write the guess
+constant with ``"source": "guess"`` — interpreter walls measure Python,
+not the TPU pipeline — so only real-hardware runs ever move the number.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from pathlib import Path
+
+ENV_VAR = "REPRO_BENCH_KERNELS_JSON"
+DEFAULT_FILENAME = "BENCH_kernels.json"
+# the pre-calibration guess: one cost-model op per tile pass per probe
+DEFAULT_TILE_PASS_OPS = 1
+
+_cache: dict[str, float] = {}
+
+
+def _artifact_path() -> Path:
+    env = os.environ.get(ENV_VAR)
+    if env:
+        return Path(env)
+    # repo root = three levels above src/repro/kernels/
+    return Path(__file__).resolve().parents[3] / DEFAULT_FILENAME
+
+
+def tile_pass_ops() -> float:
+    """Cost-model ops charged per probe tile pass (>= calibrated or guess).
+
+    Cached after the first read; call ``reset()`` (tests) after swapping
+    the artifact or the env override.
+    """
+    if "tile_pass_ops" not in _cache:
+        _cache["tile_pass_ops"] = _load_tile_pass_ops()
+    return _cache["tile_pass_ops"]
+
+
+def _load_tile_pass_ops() -> float:
+    path = _artifact_path()
+    try:
+        with open(path) as f:
+            data = json.load(f)
+        val = float(data["calibration"]["tile_pass_ops"])
+        if val > 0:
+            return val
+    except (OSError, ValueError, KeyError, TypeError):
+        pass
+    return float(DEFAULT_TILE_PASS_OPS)
+
+
+def reset() -> None:
+    """Drop the cached constant (re-read on next ``tile_pass_ops()``)."""
+    _cache.clear()

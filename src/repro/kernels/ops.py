@@ -31,11 +31,19 @@ Join/probe primitives (the SPF server's hot path)
                             Pallas path: one fused ``sorted_probe`` pass
                             emitting both rank sides.
 - ``run_probe``           — rank + membership of targets within per-row
-                            sorted runs; Pallas path: the fused
-                            ``run_probe`` window-masked compare-reduce
-                            kernel (replaces serial bisection).
+                            sorted runs; Pallas path: the scalar-prefetch
+                            windowed ``run_probe`` kernel (per-row-block
+                            ``min(lo)/max(hi)`` tile windows — value tiles
+                            no row in the block touches never stream from
+                            HBM), with the dense full-column kernel kept
+                            behind ``PROBE_VARIANT = "dense"``.
 - ``run_contains``        — membership-only view of ``run_probe``.
-- ``searchsorted_in_runs`` — rank-only view of ``run_probe``.
+- ``searchsorted_in_runs`` — rank-only view of ``run_probe``; also the
+                            per-column primitive under the k-way shard
+                            merge (``stepper.merge_sorted_blocks`` ranks
+                            pre-sorted blocks into each other through this
+                            seam, so the distributed gather-merge rides
+                            the same backend dispatch).
 - ``sorted_probe``        — rank-left + membership in one sorted array.
 - ``searchsorted``        — one-sided rank in one sorted array (the ragged
                             expansion's cumulative-degree bookkeeping in
@@ -44,6 +52,11 @@ Join/probe primitives (the SPF server's hot path)
                             masking (the distributed runtime's
                             ``owner_masking``): non-owned rows get an
                             empty run instead of a separate mask pass.
+                            Pallas path: the ``owned_probe`` kernel with
+                            the subject hash *inside* the tile loop
+                            (32-bit-limb splitmix64 on the VPU) — non-
+                            owned rows short-circuit to the empty run in
+                            kernel, no post-hoc mask.
 - ``fingerprint_rows``    — 4x32-bit on-device digest of a binding-table
                             block's valid rows (the scheduler's
                             digest-first fragment-cache keys; host twin
@@ -71,10 +84,20 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.run_probe import run_probe_pallas
+from repro.kernels.owned_probe import MAX_SHARDS, eqrange_owned_pallas
+from repro.kernels.run_probe import (
+    run_probe_pallas,
+    run_probe_prefetch_pallas,
+)
 from repro.kernels.sorted_probe import sorted_probe_pallas
 
 FORCE: str | None = None  # None | "pallas" | "ref"
+
+# which run_probe kernel the Pallas path dispatches: the scalar-prefetch
+# windowed variant (default — skips value tiles outside each row block's
+# touched window) or the dense full-column-stream kernel.  Read at trace
+# time like FORCE: flip it before building an engine, not mid-run.
+PROBE_VARIANT: str = "prefetch"  # "prefetch" | "dense"
 
 
 def _use_pallas() -> bool:
@@ -169,9 +192,19 @@ def eqrange_owned(sorted_keys: jnp.ndarray, query_keys: jnp.ndarray,
 
     Returns ``(lo, hi, owned)``; ``owned`` is exposed so cost accounting
     can count only the rows the local shard actually probed.  The Pallas
-    path masks around the fused probe kernel; pushing the hash into the
-    kernel body itself is a hardware follow-up (see ROADMAP).
+    path runs the ``owned_probe`` kernel — the subject hash lives *inside*
+    the tile loop (32-bit-limb splitmix64, bit-exact vs the uint64
+    reference) and non-owned rows accumulate the left rank on both sides,
+    so the empty run falls out of the kernel with no mask pass.  Small
+    batches and shard counts past the kernel's fold-mod bound stay on the
+    jnp masking path (same auto-dispatch policy as ``eqrange``).
     """
+    if _use_pallas() and n_shards <= MAX_SHARDS \
+            and (FORCE == "pallas"
+                 or query_keys.shape[0] >= MIN_PALLAS_QUERIES):
+        return eqrange_owned_pallas(sorted_keys, query_keys, subjects,
+                                    my_shard, n_shards,
+                                    interpret=_interpret())
     owned = ref.subject_shard_ref(subjects, n_shards) == my_shard
     lo, hi = eqrange(sorted_keys, query_keys)
     return lo, jnp.where(owned, hi, lo), owned
@@ -183,6 +216,12 @@ def run_probe(values: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray,
     ``values[lo[i]:hi[i]]``; ``pos`` is the absolute "left" insertion point.
     """
     if _use_pallas():
+        if PROBE_VARIANT == "prefetch":
+            return run_probe_prefetch_pallas(values, lo, hi, targets,
+                                             interpret=_interpret())
+        if PROBE_VARIANT != "dense":
+            raise ValueError(f"ops.PROBE_VARIANT must be 'prefetch' or "
+                             f"'dense'; got {PROBE_VARIANT!r}")
         return run_probe_pallas(values, lo, hi, targets,
                                 interpret=_interpret())
     return ref.run_probe_ref(values, lo, hi, targets)
@@ -259,15 +298,21 @@ def probe_op_cost(n: int) -> int:
     - Pallas path: the fused ``sorted_probe`` kernel streams the column in
       ``DEFAULT_K_TILE``-wide tiles past each query tile and emits both
       rank sides in one pass — amortized ``ceil(n / K_TILE)`` tile passes
-      per probe, no 2x.
+      per probe, no 2x.  How many ops one tile pass is worth comes from
+      ``kernels.calibration``: the ``fig_kernels`` bench harness fits it
+      from measured walls on real hardware and writes it to
+      ``BENCH_kernels.json``; without an artifact the historical guess of
+      1 applies, so a fresh checkout charges exactly what it always did.
 
     Host-side and read at plan/trace time like ``FORCE`` itself: engines
     bake it into jitted cost accounting, so flip ``FORCE`` before building
     an engine (or clear its jit cache), never mid-run.
     """
     if _use_pallas():
+        from repro.kernels import calibration
         from repro.kernels.sorted_probe import DEFAULT_K_TILE
-        return max(1, -(-int(n) // DEFAULT_K_TILE))
+        passes = max(1, -(-int(n) // DEFAULT_K_TILE))
+        return max(1, math.ceil(calibration.tile_pass_ops() * passes))
     return 2 * max(1, math.ceil(math.log2(max(int(n), 2))))
 
 

@@ -26,6 +26,23 @@ Grid: (num_r_tiles, num_v_tiles); TPU grids iterate the last axis fastest
 and sequentially, so partial ranks accumulate in the output block across
 value-tile steps (init at j == 0).  ``broadcasted_iota`` is 2D — TPU
 rejects 1D iota.
+
+Scalar-prefetch variant (``run_probe_prefetch_pallas``): the dense grid
+streams the *entire* value column past every row tile, but a binding
+row's run is tiny relative to the column — most tiles intersect no run of
+the block.  The prefetch variant computes, per row block, the index of
+the first and last value tile any non-empty run touches (two int32 arrays
+of length ``num_r_tiles``, handed to ``PrefetchScalarGridSpec`` so they
+are resident before the pipeline starts) and maps the value-tile axis
+*through* that window: the BlockSpec index map returns
+``base[i] + min(j, nwin[i]-1)``, so grid steps past the window re-request
+the window's last tile — and Pallas skips the copy when consecutive block
+indices are equal, so value tiles no row in the block touches are never
+streamed from HBM.  A ``pl.when(j < nwin[i])`` guard keeps the repeated
+tile out of the accumulation, so the contract is bit-identical to the
+dense kernel.  Empty runs (``hi <= lo`` — including the sharded path's
+non-owned rows, which ``eqrange_owned`` collapses to ``[lo, lo)``)
+contribute nothing to the window, so a block of them streams zero tiles.
 """
 
 from __future__ import annotations
@@ -35,6 +52,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 DEFAULT_R_TILE = 256
@@ -88,20 +106,22 @@ def run_probe_pallas(values: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray,
     Each run ``values[lo_i:hi_i)`` must be individually sorted ascending
     (the PSO/POS store layout guarantees this).  Empty runs
     (``lo[i] == hi[i]``) yield ``pos == lo`` and ``contains == False``.
-    Value padding uses +max and row padding the empty run ``[0, 0)``; the
-    in-run window mask keeps both inert.
+    Value padding uses the +max of the *promoted* dtype — promotion must
+    happen before padding, or an int32 column probed by int64 targets
+    would pad with int32-max values that promoted targets can exceed —
+    and row padding the empty run ``[0, 0)``; the in-run window mask
+    keeps both inert.
     """
     n = values.shape[0]
     r = lo.shape[0]
-    maxval = jnp.iinfo(values.dtype).max
-    n_pad = -n % v_tile
+    dt = jnp.promote_types(values.dtype, targets.dtype)
+    maxval = jnp.iinfo(dt).max
+    n_pad = -n % v_tile if n else v_tile
     r_pad = -r % r_tile
-    values_p = jnp.pad(values, (0, n_pad), constant_values=maxval)
+    values_p = jnp.pad(values.astype(dt), (0, n_pad), constant_values=maxval)
     lo_p = jnp.pad(lo.astype(jnp.int32), (0, r_pad))
     hi_p = jnp.pad(hi.astype(jnp.int32), (0, r_pad))
-    dt = jnp.promote_types(values.dtype, targets.dtype)
     targets_p = jnp.pad(targets.astype(dt), (0, r_pad))
-    values_p = values_p.astype(dt)
 
     grid = (lo_p.shape[0] // r_tile, values_p.shape[0] // v_tile)
     pos, contains = pl.pallas_call(
@@ -123,4 +143,110 @@ def run_probe_pallas(values: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray,
         ],
         interpret=interpret,
     )(values_p, lo_p, hi_p, targets_p)
+    return pos[:r], contains[:r]
+
+
+def _run_probe_prefetch_kernel(base_ref, nwin_ref, values_ref, lo_ref,
+                               hi_ref, targets_ref, pos_ref, contains_ref):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    lo = lo_ref[...]  # [R_TILE] int32
+    hi = hi_ref[...]  # [R_TILE] int32
+    targets = targets_ref[...]  # [R_TILE]
+    values = values_ref[...]  # [V_TILE] — the window's (base+min(j,nwin-1))th
+    r_tile = lo.shape[0]
+    v_tile = values.shape[0]
+    nwin = nwin_ref[i]
+    # the value tile actually resident: the index map clamps steps past the
+    # window onto its last tile (whose copy Pallas then skips) — recompute
+    # the same tile id here for the absolute-position arithmetic
+    t = base_ref[i] + jnp.minimum(j, jnp.maximum(nwin - 1, 0))
+
+    @pl.when(j == 0)
+    def _init():
+        pos_ref[...] = lo
+        contains_ref[...] = jnp.zeros((r_tile,), jnp.bool_)
+
+    @pl.when(j < nwin)
+    def _accum():
+        k_abs = (t * v_tile
+                 + jax.lax.broadcasted_iota(jnp.int32, (r_tile, v_tile), 1))
+        in_run = (k_abs >= lo[:, None]) & (k_abs < hi[:, None])
+        lt = in_run & (values[None, :] < targets[:, None])
+        eq = in_run & (values[None, :] == targets[:, None])
+        pos_ref[...] = pos_ref[...] + jnp.sum(lt, axis=1, dtype=jnp.int32)
+        contains_ref[...] = contains_ref[...] | jnp.any(eq, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("r_tile", "v_tile", "interpret"))
+def run_probe_prefetch_pallas(values: jnp.ndarray, lo: jnp.ndarray,
+                              hi: jnp.ndarray, targets: jnp.ndarray,
+                              r_tile: int = DEFAULT_R_TILE,
+                              v_tile: int = DEFAULT_V_TILE,
+                              interpret: bool = False
+                              ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """``run_probe_pallas`` with scalar-prefetched per-block tile windows.
+
+    Same ``(pos, contains)`` contract, bit-identical results.  The grid
+    stays the dense ``(num_r_tiles, num_v_tiles)`` — the windows are
+    traced values, and the grid must be static — but the value-tile axis
+    is mapped through the prefetched window, so steps outside a block's
+    window neither stream a tile from HBM (the index map repeats the last
+    window tile, which the pipeline recognises and skips) nor touch the
+    VPU (the ``j < nwin`` guard).  The win is proportional to how sparse
+    the touched windows are — the engine's common case, where a wave's
+    runs cluster in a sliver of the column.
+    """
+    n = values.shape[0]
+    r = lo.shape[0]
+    dt = jnp.promote_types(values.dtype, targets.dtype)
+    maxval = jnp.iinfo(dt).max
+    n_pad = -n % v_tile if n else v_tile
+    r_pad = -r % r_tile
+    values_p = jnp.pad(values.astype(dt), (0, n_pad), constant_values=maxval)
+    lo_p = jnp.pad(lo.astype(jnp.int32), (0, r_pad))
+    hi_p = jnp.pad(hi.astype(jnp.int32), (0, r_pad))
+    targets_p = jnp.pad(targets.astype(dt), (0, r_pad))
+
+    n_r_tiles = lo_p.shape[0] // r_tile
+    n_v_tiles = values_p.shape[0] // v_tile
+
+    # per row-block window of touched value tiles, over NON-empty runs
+    # only: empty runs (hi <= lo — row padding, filtered rows, non-owned
+    # rows under sharding) contribute nothing, so an all-empty block gets
+    # nwin == 0 and streams zero value tiles
+    nonempty = hi_p > lo_p
+    lo_t = jnp.where(nonempty, lo_p // v_tile, jnp.int32(n_v_tiles))
+    hi_t = jnp.where(nonempty, (hi_p - 1) // v_tile, jnp.int32(-1))
+    blk_lo = jnp.min(lo_t.reshape(n_r_tiles, r_tile), axis=1)
+    blk_hi = jnp.max(hi_t.reshape(n_r_tiles, r_tile), axis=1)
+    base = jnp.where(blk_hi >= blk_lo, blk_lo, 0).astype(jnp.int32)
+    nwin = jnp.maximum(blk_hi - blk_lo + 1, 0).astype(jnp.int32)
+
+    def value_map(i, j, base, nwin):
+        return (base[i] + jnp.minimum(j, jnp.maximum(nwin[i] - 1, 0)),)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n_r_tiles, n_v_tiles),
+        in_specs=[
+            pl.BlockSpec((v_tile,), value_map),
+            pl.BlockSpec((r_tile,), lambda i, j, b, w: (i,)),
+            pl.BlockSpec((r_tile,), lambda i, j, b, w: (i,)),
+            pl.BlockSpec((r_tile,), lambda i, j, b, w: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((r_tile,), lambda i, j, b, w: (i,)),
+            pl.BlockSpec((r_tile,), lambda i, j, b, w: (i,)),
+        ],
+    )
+    pos, contains = pl.pallas_call(
+        _run_probe_prefetch_kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((lo_p.shape[0],), jnp.int32),
+            jax.ShapeDtypeStruct((lo_p.shape[0],), jnp.bool_),
+        ],
+        interpret=interpret,
+    )(base, nwin, values_p, lo_p, hi_p, targets_p)
     return pos[:r], contains[:r]

@@ -8,7 +8,10 @@ from _hyp import given, settings, st
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.run_probe import run_probe_pallas
+from repro.kernels.owned_probe import (MAX_SHARDS, eqrange_owned_pallas,
+                                       shard_of_limbs)
+from repro.kernels.run_probe import (run_probe_pallas,
+                                     run_probe_prefetch_pallas)
 from repro.kernels.sorted_probe import sorted_probe_pallas
 
 
@@ -169,6 +172,160 @@ def test_run_probe_property(data):
     hi = np.minimum(n, lo + rng.integers(0, n + 1, r))
     targets = rng.integers(-10, 110, r).astype(np.int64)
     _check_run_probe(vals, lo, hi, targets, r_tile=32, v_tile=64)
+
+
+# ------------------------------------------------- run_probe (prefetch grid)
+
+def _check_run_probe_variants(vals, lo, hi, targets, **tiles):
+    """Three-way pin: numpy truth, dense kernel, scalar-prefetch kernel."""
+    args = (jnp.asarray(vals), jnp.asarray(lo), jnp.asarray(hi),
+            jnp.asarray(targets))
+    want_p, want_c = _run_probe_truth(vals, lo, hi, targets)
+    for fn in (run_probe_pallas, run_probe_prefetch_pallas):
+        p, c = fn(*args, interpret=True, **tiles)
+        np.testing.assert_array_equal(np.asarray(p), want_p,
+                                      err_msg=fn.__name__)
+        np.testing.assert_array_equal(np.asarray(c), want_c,
+                                      err_msg=fn.__name__)
+
+
+@pytest.mark.parametrize("n,r,dt", [
+    (1000, 77, np.int32), (5000, 300, np.int64), (131, 513, np.int32),
+    (2048, 256, np.int64), (1, 1, np.int32), (10, 4096, np.int64),
+])
+def test_run_probe_prefetch_sweep(n, r, dt, rng):
+    vals = np.sort(rng.integers(0, max(n * 3, 10), n)).astype(dt)
+    lo = rng.integers(0, n + 1, r)
+    hi = np.minimum(n, lo + rng.integers(0, n + 1, r))
+    targets = rng.integers(-5, max(n * 3, 10) + 5, r).astype(dt)
+    _check_run_probe_variants(vals, lo, hi, targets)
+
+
+def test_run_probe_prefetch_window_shapes(rng):
+    """The prefetch grid's block windows at their edge shapes: all-empty
+    row blocks (zero value tiles streamed), a block whose runs sit inside
+    one value tile, runs spanning tile boundaries, and a full-column run
+    — each must agree with the dense kernel and the numpy truth."""
+    n = 512
+    vals = np.sort(rng.integers(0, 2000, n)).astype(np.int64)
+    cases = []
+    # every run empty: the prefetch kernel streams nothing and must still
+    # initialise pos = lo, contains = False
+    lo = rng.integers(0, n + 1, 64)
+    cases.append((lo, lo.copy()))
+    # all runs inside one value tile (v_tile=64 below): window = 1 tile
+    lo = rng.integers(128, 160, 64)
+    cases.append((lo, np.minimum(192, lo + rng.integers(0, 30, 64))))
+    # runs straddling tile boundaries + a mixed batch with empties
+    lo = np.asarray([0, 60, 63, 64, 120, 200, 200, 511] * 8)
+    hi = np.minimum(n, lo + np.asarray([5, 10, 2, 65, 200, 0, 312, 1] * 8))
+    cases.append((lo, hi))
+    # one full-column run per block
+    cases.append((np.zeros(64, np.int64), np.full(64, n, np.int64)))
+    for lo, hi in cases:
+        targets = rng.integers(-5, 2005, lo.shape[0]).astype(np.int64)
+        _check_run_probe_variants(vals, lo, hi, targets, r_tile=32,
+                                  v_tile=64)
+
+
+def test_run_probe_prefetch_tile_sizes_equivalent(rng):
+    """Tile sizes only reshape the prefetch grid — results must not move."""
+    n, r = 500, 100
+    vals = np.sort(rng.integers(0, 1000, n)).astype(np.int64)
+    lo = rng.integers(0, n + 1, r)
+    hi = np.minimum(n, lo + rng.integers(0, 200, r))
+    targets = rng.integers(0, 1000, r).astype(np.int64)
+    outs = [run_probe_prefetch_pallas(jnp.asarray(vals), jnp.asarray(lo),
+                                      jnp.asarray(hi), jnp.asarray(targets),
+                                      r_tile=rt, v_tile=vt, interpret=True)
+            for rt, vt in [(32, 64), (128, 256), (256, 2048)]]
+    for p, c in outs[1:]:
+        np.testing.assert_array_equal(np.asarray(outs[0][0]), np.asarray(p))
+        np.testing.assert_array_equal(np.asarray(outs[0][1]), np.asarray(c))
+
+
+@pytest.mark.parametrize("tiles", [dict(r_tile=32, v_tile=64),
+                                   dict(r_tile=256, v_tile=2048)])
+def test_run_probe_mixed_dtype_promotion(tiles, rng):
+    """int32 values probed with int64 targets (and vice versa) at
+    non-tile-multiple shapes: both kernels must promote before padding —
+    a +max pad in the narrow dtype would be a real value under the wide
+    compare — and stay three-way parity-pinned at both tile sizes."""
+    n, r = 333, 101  # neither a multiple of any tile size used
+    for vdt, tdt in [(np.int32, np.int64), (np.int64, np.int32)]:
+        vals = np.sort(rng.integers(0, 1000, n)).astype(vdt)
+        lo = rng.integers(0, n + 1, r)
+        hi = np.minimum(n, lo + rng.integers(0, 150, r))
+        targets = rng.integers(-5, 1005, r).astype(tdt)
+        # include the narrow dtype's max as a live target: under int64
+        # promotion it must NOT match the int32 +max padding
+        targets[0] = np.iinfo(np.int32).max
+        _check_run_probe_variants(vals, lo, hi, targets, **tiles)
+
+
+# ---------------------------------------------------------------- owned probe
+
+@pytest.mark.parametrize("n_shards", [1, 2, 3, 7, 8, 64, 4095, MAX_SHARDS])
+def test_shard_of_limbs_bit_exact(n_shards, rng):
+    """The kernel-side 32-bit-limb splitmix64 shard hash must be bit-exact
+    vs the uint64 reference for every shard count the kernel accepts —
+    including extreme ids (0, int64 max) where limb carries matter."""
+    subjects = np.concatenate([
+        rng.integers(0, 1 << 62, 500),
+        np.array([0, 1, 2**31 - 1, 2**31, 2**32 - 1, 2**32,
+                  (1 << 62) - 1, np.iinfo(np.int64).max])]).astype(np.int64)
+    u = subjects.astype(np.uint64)
+    s_lo = jnp.asarray((u & np.uint64(0xFFFFFFFF)).astype(np.uint32))
+    s_hi = jnp.asarray((u >> np.uint64(32)).astype(np.uint32))
+    got = np.asarray(shard_of_limbs(s_lo, s_hi, n_shards))
+    want = np.asarray(ref.subject_shard_ref(jnp.asarray(subjects), n_shards))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("n_shards,my_shard", [(1, 0), (2, 1), (4, 0),
+                                               (4, 3), (8, 5)])
+def test_eqrange_owned_pallas_matches_masking_path(n_shards, my_shard, rng):
+    """The in-kernel ownership test vs the jnp mask-around-the-probe path:
+    identical (lo, hi, owned) — non-owned rows degenerate to the empty
+    run [lo, lo) inside the kernel."""
+    n, q = 800, 257  # non-tile-multiple query count
+    keys = np.sort(rng.integers(0, 3000, n)).astype(np.int64)
+    queries = rng.integers(-5, 3005, q).astype(np.int64)
+    subjects = rng.integers(0, 1 << 40, q).astype(np.int64)
+    lo_p, hi_p, own_p = eqrange_owned_pallas(
+        jnp.asarray(keys), jnp.asarray(queries), jnp.asarray(subjects),
+        my_shard, n_shards, interpret=True)
+    owned = np.asarray(ref.subject_shard_ref(jnp.asarray(subjects),
+                                             n_shards)) == my_shard
+    want_lo = np.searchsorted(keys, queries, "left")
+    want_hi = np.where(owned, np.searchsorted(keys, queries, "right"),
+                       want_lo)
+    np.testing.assert_array_equal(np.asarray(lo_p), want_lo)
+    np.testing.assert_array_equal(np.asarray(hi_p), want_hi)
+    np.testing.assert_array_equal(np.asarray(own_p), owned)
+
+
+def test_eqrange_owned_dispatch_parity(rng):
+    """kops.eqrange_owned on both FORCE settings returns identical bytes
+    (the seam the owner-masking distributed config rides)."""
+    from repro.kernels import ops as kops
+
+    n, q = 500, 128
+    keys = np.sort(rng.integers(0, 2000, n)).astype(np.int64)
+    queries = rng.integers(0, 2000, q).astype(np.int64)
+    subjects = rng.integers(0, 1 << 40, q).astype(np.int64)
+    outs = {}
+    old = kops.FORCE
+    try:
+        for force in ("ref", "pallas"):
+            kops.FORCE = force
+            outs[force] = [np.asarray(x) for x in kops.eqrange_owned(
+                jnp.asarray(keys), jnp.asarray(queries),
+                jnp.asarray(subjects), jnp.int32(2), 4)]
+    finally:
+        kops.FORCE = old
+    for a, b in zip(outs["ref"], outs["pallas"]):
+        np.testing.assert_array_equal(a, b)
 
 
 # ---------------------------------------------------------------- fingerprint

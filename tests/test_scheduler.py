@@ -348,6 +348,156 @@ def test_sharded_overflow_resume_byte_identical(watdiv_small):
             assert sched.metrics.retries > 0
 
 
+def _shard_meshes_wide():
+    """_shard_meshes plus the all-devices-sharded extreme (8 shards x 1
+    lane slot in the CI dist-sched job)."""
+    n_dev = len(jax.devices())
+    out = list(_shard_meshes())
+    if n_dev >= 8 and n_dev % 8 == 0:
+        out.append((8, n_dev // 8,
+                    jax.make_mesh((8, n_dev // 8), ("data", "model"))))
+    return out
+
+
+def test_sharded_merge_strategies_byte_identical(watdiv_small, all_queries,
+                                                 serial_results):
+    """The k-way shard merge vs the replicated lexsort (and the auto
+    pick): identical bytes to each other AND to the serial path at every
+    shard count in {1, 2, 4, 8} the device count supports.  The merge is
+    pure placement of the order-restoring work — nothing downstream may
+    be able to tell which one ran."""
+    _, store = watdiv_small
+    qs = all_queries[:4]
+    cfg = EngineConfig(interface="spf", cap=2048)
+    for n_shards, slots, mesh in _shard_meshes_wide():
+        outs = {}
+        for merge in ("kway", "lexsort", "auto"):
+            sched = QueryScheduler(
+                store, cfg,
+                SchedulerConfig(lanes=8, collapse_duplicates=False,
+                                shard_merge=merge),
+                mesh=mesh, data_axis="data")
+            served = sched.serve(interleave_clients(qs, slots))
+            outs[merge] = served
+            serial = [serial_results["spf"][i // slots]
+                      for i in range(len(served))]
+            _assert_equivalent(serial, [t for t, _ in served],
+                               [s for _, s in served],
+                               ("shard-merge", merge, n_shards))
+        for merge in ("lexsort", "auto"):
+            for (t_k, _), (t_o, _) in zip(outs["kway"], outs[merge]):
+                assert np.array_equal(results_as_numpy(t_k),
+                                      results_as_numpy(t_o)), \
+                    (merge, n_shards)
+
+
+def test_sharded_latch_rung_waves_byte_identical(watdiv_small):
+    """Waves AT the overflow-latch rung (cap == max_cap) now stay on the
+    sharded lowering: the step's latch mode merges in global serial row
+    order after every branch, so the truncated table, latched overflow
+    flag and gross stats must match the serial give-up rung byte-for-byte
+    — under both merge strategies and shard counts up to 8."""
+    g, store = watdiv_small
+    from repro.rdf import generate_query_load
+    from repro.rdf.queries import QueryLoadConfig
+
+    qs = generate_query_load(g, store, "2-stars",
+                             QueryLoadConfig(n_queries=3))
+    cfg = EngineConfig(interface="spf", cap=8, max_cap=32,
+                       capacity_planner=False)
+    eng = QueryEngine(store, cfg)
+    serial = [eng.run(q) for q in qs]
+    assert any(bool(s.overflow) for _, s in serial), \
+        "fixture queries must actually latch for this test to bite"
+    for n_shards, slots, mesh in _shard_meshes_wide():
+        for merge in ("kway", "lexsort"):
+            sched = QueryScheduler(
+                store, cfg,
+                SchedulerConfig(lanes=8, collapse_duplicates=False,
+                                shard_merge=merge),
+                mesh=mesh, data_axis="data")
+            served = sched.serve(interleave_clients(qs, slots))
+            serial_ref = [serial[i // slots] for i in range(len(served))]
+            _assert_equivalent(serial_ref, [t for t, _ in served],
+                               [s for _, s in served],
+                               ("shard-latch", merge, n_shards))
+            # the latch waves themselves must have run sharded
+            assert sched.metrics.shard_steps == sched.metrics.steps > 0
+
+
+def test_sharded_occupancy_trim_warm_waves_byte_identical(watdiv_small,
+                                                          all_queries,
+                                                          serial_results):
+    """Occupancy-fed gather trims: a warm re-serve consults the planner's
+    observed shard peaks (pow2-rounded) instead of the static headroom
+    budget, and the results must stay byte-identical — an observed peak
+    is exact for a deterministic re-run, and any undershoot would ride
+    the overflow-retry path rather than corrupt bytes."""
+    _, store = watdiv_small
+    qs = all_queries[:4]
+    cfg = EngineConfig(interface="spf", cap=2048)
+    for n_shards, slots, mesh in _shard_meshes():
+        sched = QueryScheduler(
+            store, cfg,
+            SchedulerConfig(lanes=8, use_cache=False,
+                            collapse_duplicates=False),
+            mesh=mesh, data_axis="data")
+        for _ in range(2):  # pass 2 runs with warm shard-peak hints
+            served = sched.serve(interleave_clients(qs, slots))
+            serial = [serial_results["spf"][i // slots]
+                      for i in range(len(served))]
+            _assert_equivalent(serial, [t for t, _ in served],
+                               [s for _, s in served],
+                               ("shard-trim", n_shards))
+        if sched.metrics.shard_steps:
+            # the sharded units were observed: hints exist for unit 0
+            plan = sched._plan(qs[0])
+            assert sched.planner.shard_peak_hint(plan, 0, n_shards) \
+                is not None
+
+
+def test_shard_merge_blocks_kway_matches_lexsort():
+    """Unit-level pin of the merge mechanics (no mesh): pairwise
+    rank-based merges of pre-sorted blocks — including trim-truncated
+    blocks with blanked invalid tails — reproduce the full lexsort
+    byte-for-byte, invalid regions included."""
+    from repro.core import stepper
+
+    rng = np.random.default_rng(7)
+    sort_cols = (0, 1)
+    for n_blocks, trim_frac in [(2, 1.0), (4, 1.0), (8, 1.0), (4, 0.5)]:
+        cap = 64
+        trim = int(cap * trim_frac)
+        blocks = []
+        base = 0
+        for _ in range(n_blocks):
+            n_valid = int(rng.integers(0, cap + 1))
+            rows = np.full((cap, 3), -1, np.int32)
+            # unique (c0, c1) keys, sorted within the block
+            rows[:n_valid, 0] = np.sort(rng.integers(0, 40, n_valid))
+            rows[:n_valid, 1] = base + np.arange(n_valid)
+            rows[:n_valid, 2] = rng.integers(0, 1000, n_valid)
+            base += n_valid
+            valid = np.arange(cap) < n_valid
+            blocks.append((rows, valid))
+        trimmed = [stepper._trim_block(jax.numpy.asarray(r),
+                                       jax.numpy.asarray(v), trim)
+                   for r, v in blocks]
+        lost_any = any(bool(l) for _, _, l in trimmed)
+        assert lost_any == any(v[trim:].any() for _, v in blocks)
+        gathered_r = np.concatenate([np.asarray(r) for r, _, _ in trimmed])
+        gathered_v = np.concatenate([np.asarray(v) for _, v, _ in trimmed])
+        want_r, want_v = stepper.lexsort_rows(jax.numpy.asarray(gathered_r),
+                                              jax.numpy.asarray(gathered_v),
+                                              sort_cols)
+        acc_r, acc_v, _ = trimmed[0]
+        for r, v, _ in trimmed[1:]:
+            acc_r, acc_v = stepper.merge_sorted_blocks(acc_r, acc_v, r, v,
+                                                       sort_cols)
+        np.testing.assert_array_equal(np.asarray(acc_r), np.asarray(want_r))
+        np.testing.assert_array_equal(np.asarray(acc_v), np.asarray(want_v))
+
+
 def test_shard_count_invariant_digests_share_cache(watdiv_small, all_queries,
                                                    serial_results):
     """``fingerprint_rows`` digests are a pure function of the valid

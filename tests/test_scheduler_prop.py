@@ -105,8 +105,9 @@ def _check_stream(stream, interface, lanes, use_cache, collapse, lowering):
         assert sched.metrics.mesh_steps == sched.metrics.steps
     if lowering == "shard" and sched.metrics.steps:
         # every dispatched step took some lowering; sharded waves engage
-        # whenever width covers the lane slots and the wave is below the
-        # overflow-latch rung (latched give-up waves fall back by design)
+        # whenever width covers the lane slots — including waves at the
+        # overflow-latch rung, which run the sharded step's latch mode
+        # (per-branch global-order merge) instead of falling back
         assert sched.metrics.shard_steps <= sched.metrics.steps
 
 
@@ -156,6 +157,45 @@ def test_scheduler_parity_over_random_streams(stream, interface, lanes,
     (vmap / replicated mesh / sharded): byte-identical valid rows and
     gross stats vs serial ``run``."""
     _check_stream(stream, interface, lanes, use_cache, collapse, lowering)
+
+
+LATCH_CAP, LATCH_MAX_CAP = 8, 32  # tiny rungs: overflow latches quickly
+
+
+@lru_cache(maxsize=None)
+def _serial_latch(qi: int):
+    """Serial reference at a tiny latch rung (cap 8, max_cap 32): queries
+    whose true need exceeds 32 rows truncate-and-latch."""
+    store, queries = _env()
+    eng = QueryEngine(store, EngineConfig(interface="spf", cap=LATCH_CAP,
+                                          max_cap=LATCH_MAX_CAP,
+                                          capacity_planner=False))
+    table, stats = eng.run(queries[qi])
+    return results_as_numpy(table), tuple(int(x) for x in stats)[:6]
+
+
+@given(st.lists(st.integers(0, 5), min_size=1, max_size=6),
+       st.sampled_from(LANES), st.booleans(),
+       st.sampled_from(["auto", "kway", "lexsort"]))
+@settings(max_examples=10, deadline=None)
+def test_sharded_latch_stream_parity(qis, lanes, use_cache, merge):
+    """Sharded waves AT the overflow-latch rung (tiny max_cap forces the
+    retry ladder to the give-up rung): the step's latch mode — a
+    global-order merge after every branch — must reproduce the serial
+    latch truncation byte-for-byte under both merge strategies, with
+    cache on and off."""
+    store, queries = _env()
+    sched = QueryScheduler(
+        store, EngineConfig(interface="spf", cap=LATCH_CAP,
+                            max_cap=LATCH_MAX_CAP, capacity_planner=False),
+        SchedulerConfig(lanes=lanes, use_cache=use_cache,
+                        shard_merge=merge),
+        mesh=_shard_mesh(), data_axis="data")
+    tables, stats = sched.run_queries([queries[qi] for qi in qis])
+    for qi, table, st_ in zip(qis, tables, stats):
+        ref_rows, ref_gross = _serial_latch(qi)
+        assert np.array_equal(results_as_numpy(table), ref_rows)
+        assert tuple(int(x) for x in st_)[:6] == ref_gross
 
 
 @given(st.lists(st.integers(0, 5), min_size=1, max_size=8),
