@@ -75,18 +75,21 @@ def sched_vs_serial(load: str, n_clients: int, interface: str = "spf",
     replay of the union load would take the better part of an hour).
 
     Returns a dict with wall seconds for the stream on both paths, the
-    fragment-cache hit rate, measured occupancy, and the byte-identity
-    flag the acceptance gate checks.  Compile cost is paid before timing
-    on both paths (one warm pass each; the scheduler's cache and metrics
-    are reset after its warm pass so measured hit rates come from the
-    measured epoch only — the capacity-hint memo, which is scheduler
-    state rather than cache content, stays warm like the serial engine's
-    jit cache does).
+    fragment-cache hit rate, measured occupancy, per-query latency
+    quantiles (from the registry's ``sched.query_latency_s`` histogram,
+    observed with registry-only observability enabled around the measured
+    pass — no tracer, so no fences perturb the wall), and the
+    byte-identity flag the acceptance gate checks.  Compile cost is paid
+    before timing on both paths (one warm pass each; measured rates come
+    from a registry snapshot diff over the measured pass only, so the
+    warm pass never leaks into them — the capacity-hint memo, which is
+    scheduler state rather than cache content, stays warm like the
+    serial engine's jit cache does).
     """
     import numpy as np
 
+    from repro import obs
     from repro.core import results_as_numpy
-    from repro.core.scheduler import SchedMetrics
 
     qs = bench_load(load)
     stream = interleave_clients(list(qs), n_clients)
@@ -108,21 +111,30 @@ def sched_vs_serial(load: str, n_clients: int, interface: str = "spf",
                            SchedulerConfig(lanes=lanes))
     sched.serve(stream)  # warm compile of the unit steps
     sched.cache.clear()
-    sched.metrics = SchedMetrics()
-    t0 = time.perf_counter()
-    sched_out = sched.serve(stream)
-    sched_s = time.perf_counter() - t0
+    base = sched.snapshot()
+    with obs.tracing(trace=False):  # registry-only: latency, no fences
+        t0 = time.perf_counter()
+        sched_out = sched.serve(stream)
+        sched_s = time.perf_counter() - t0
+    diff = sched.snapshot() - base
 
     identical = all(
         np.array_equal(results_as_numpy(serial_out[i // n_clients][0]),
                        results_as_numpy(tbl))
         for i, (tbl, _) in enumerate(sched_out))
+    hits = diff.scalar("cache.hits") + diff.scalar("cache.shared_hits")
+    probes = hits + diff.scalar("cache.misses")
+    steps = diff.scalar("sched.steps")
+    lat = diff.get("sched.query_latency_s", {})
     return {
         "load": load, "interface": interface, "clients": n_clients,
         "requests": len(stream), "serial_s": serial_s, "sched_s": sched_s,
         "speedup": serial_s / sched_s if sched_s else float("inf"),
-        "hit_rate": sched.cache.stats.hit_rate,
-        "occupancy": sched.metrics.occupancy,
+        "hit_rate": hits / probes if probes else 0.0,
+        "occupancy": diff.scalar("sched.active_lane_steps") / steps
+        if steps else 0.0,
+        "latency_p50_s": lat.get("p50", 0.0),
+        "latency_p99_s": lat.get("p99", 0.0),
         "byte_identical": bool(identical),
         "stats": [st for _, st in sched_out],
     }
@@ -203,17 +215,17 @@ def sched_mesh_vs_vmap(load: str, n_clients: int, interface: str = "spf",
     reaches the mesh's lane-slot count and the per-wave mesh-vs-vmap pick
     actually engages (with collapsing on, duplicate requests fold onto
     one lane and buckets stay narrow).  Compile cost is paid by a warm
-    pass on each path; the fragment cache and metrics are reset before
-    the measured pass.  Returns a record with wall seconds for both
-    paths, the mesh-wave fraction, cache hit rate, occupancy and the
-    byte-identity flag between the two paths' results (the acceptance
-    invariant: mesh routing changes placement, never bytes).
+    pass on each path; the fragment cache is cleared and all measured
+    rates come from a registry snapshot diff over the measured pass.
+    Returns a record with wall seconds for both paths, the mesh-wave
+    fraction, cache hit rate, occupancy and the byte-identity flag
+    between the two paths' results (the acceptance invariant: mesh
+    routing changes placement, never bytes).
     """
     import jax
     import numpy as np
 
     from repro.core import results_as_numpy
-    from repro.core.scheduler import SchedMetrics
 
     qs = bench_load(load)
     _, store = bench_graph()
@@ -223,37 +235,42 @@ def sched_mesh_vs_vmap(load: str, n_clients: int, interface: str = "spf",
     mesh = jax.make_mesh((n_dev,), ("model",))
     lanes = max(lanes, n_dev)
 
-    out, wall, sched_of = {}, {}, {}
+    out, wall, diff_of = {}, {}, {}
     for name, m in (("vmap", None), ("mesh", mesh)):
         sched = QueryScheduler(
             store, cfg,
             SchedulerConfig(lanes=lanes, collapse_duplicates=False), mesh=m)
         sched.serve(stream)  # warm compile of this lowering's unit steps
         sched.cache.clear()
-        sched.metrics = SchedMetrics()
+        base = sched.snapshot()
         t0 = time.perf_counter()
         out[name] = sched.serve(stream)
         wall[name] = time.perf_counter() - t0
-        sched_of[name] = sched
+        diff_of[name] = sched.snapshot() - base
 
     identical = all(
         np.array_equal(results_as_numpy(a), results_as_numpy(b))
         and tuple(int(x) for x in sa)[:6] == tuple(int(x) for x in sb)[:6]
         for (a, sa), (b, sb) in zip(out["vmap"], out["mesh"]))
-    m = sched_of["mesh"].metrics
+    d = diff_of["mesh"]
+    steps = d.scalar("sched.steps")
+    hits = d.scalar("cache.hits") + d.scalar("cache.shared_hits")
+    probes = hits + d.scalar("cache.misses")
     return {
         "load": load, "interface": interface, "clients": n_clients,
         "requests": len(stream), "n_devices": n_dev, "lanes": lanes,
         "vmap_s": wall["vmap"], "mesh_s": wall["mesh"],
         "mesh_vs_vmap": wall["vmap"] / wall["mesh"] if wall["mesh"]
         else float("inf"),
-        "mesh_wave_fraction": m.mesh_steps / m.steps if m.steps else 0.0,
-        "hit_rate": sched_of["mesh"].cache.stats.hit_rate,
-        "occupancy": m.occupancy,
+        "mesh_wave_fraction": d.scalar("sched.mesh_steps") / steps
+        if steps else 0.0,
+        "hit_rate": hits / probes if probes else 0.0,
+        "occupancy": d.scalar("sched.active_lane_steps") / steps
+        if steps else 0.0,
         # replicated lanes move no per-unit gather traffic; recorded so
         # the artifact schema matches the sharded figure's records and
         # the transfer models stay comparable
-        "gather_bytes": m.gather_bytes,
+        "gather_bytes": d.scalar("sched.gather_bytes"),
         "byte_identical": bool(identical),
         "stats": [st for _, st in out["mesh"]],
     }
@@ -279,7 +296,6 @@ def sched_shard_vs_replicated(load: str, n_clients: int, n_shards: int,
     import numpy as np
 
     from repro.core import results_as_numpy
-    from repro.core.scheduler import SchedMetrics
 
     qs = bench_load(load)
     _, store = bench_graph()
@@ -294,7 +310,7 @@ def sched_shard_vs_replicated(load: str, n_clients: int, n_shards: int,
                             ("data", "model"))
     lanes = max(lanes, n_dev)
 
-    out, wall, sched_of = {}, {}, {}
+    out, wall, sched_of, diff_of = {}, {}, {}, {}
     for name, m, ax in (("replicated", mesh_rep, None),
                         ("sharded", mesh_sh, "data")):
         sched = QueryScheduler(
@@ -303,17 +319,18 @@ def sched_shard_vs_replicated(load: str, n_clients: int, n_shards: int,
             mesh=m, data_axis=ax)
         sched.serve(stream)  # warm compile of this lowering's unit steps
         sched.cache.clear()
-        sched.metrics = SchedMetrics()
+        base = sched.snapshot()
         t0 = time.perf_counter()
         out[name] = sched.serve(stream)
         wall[name] = time.perf_counter() - t0
         sched_of[name] = sched
+        diff_of[name] = sched.snapshot() - base
 
     identical = all(
         np.array_equal(results_as_numpy(a), results_as_numpy(b))
         and tuple(int(x) for x in sa)[:6] == tuple(int(x) for x in sb)[:6]
         for (a, sa), (b, sb) in zip(out["replicated"], out["sharded"]))
-    m = sched_of["sharded"].metrics
+    d = diff_of["sharded"]
     full_bytes = sum(int(np.asarray(a).nbytes) for a in store.device)
     stacked = sched_of["sharded"]._stacked
     shard_bytes = sum(int(np.asarray(a).nbytes) for a in stacked) // n_shards
@@ -328,10 +345,14 @@ def sched_shard_vs_replicated(load: str, n_clients: int, n_shards: int,
         "store_bytes_per_device_sharded": shard_bytes,
         "store_bytes_shrink": full_bytes / shard_bytes if shard_bytes
         else float("inf"),
-        "shard_wave_fraction": m.shard_steps / m.steps if m.steps else 0.0,
-        "gather_bytes": m.gather_bytes,
-        "hit_rate": sched_of["sharded"].cache.stats.hit_rate,
-        "occupancy": m.occupancy,
+        "shard_wave_fraction": d.scalar("sched.shard_steps")
+        / d.scalar("sched.steps") if d.scalar("sched.steps") else 0.0,
+        "gather_bytes": d.scalar("sched.gather_bytes"),
+        "hit_rate": (d.scalar("cache.hits") + d.scalar("cache.shared_hits"))
+        / max(d.scalar("cache.hits") + d.scalar("cache.shared_hits")
+              + d.scalar("cache.misses"), 1),
+        "occupancy": d.scalar("sched.active_lane_steps")
+        / d.scalar("sched.steps") if d.scalar("sched.steps") else 0.0,
         "byte_identical": bool(identical),
         "stats": [st for _, st in out["sharded"]],
     }

@@ -16,8 +16,14 @@ Figures covered:
   fig8_latency          QET / QRT per load (64 clients)
   fig_sched_throughput  scheduler vs serial serving: measured wall time,
                         fragment-cache hit rate and batch occupancy per
-                        load at 16/64/128 simulated clients; also writes
-                        the BENCH_sched.json artifact (CI uploads it)
+                        load at 16/64/128 simulated clients, with p50/p99
+                        per-query latency from the registry histogram;
+                        also writes the BENCH_sched.json artifact (CI
+                        uploads it)
+  fig_sched_trace       traced serving smoke: one multi-client stream
+                        with full observability on, exported as a
+                        Perfetto-loadable Chrome trace
+                        (TRACE_sched_smoke.json; CI uploads it)
   fig_capacity          warm-run wall with the capacity planner on vs off
                         on the union load (blind 4x ladder baseline);
                         writes BENCH_capacity.json (CI uploads it)
@@ -33,7 +39,8 @@ Figures covered:
                         run_probe, point-probe calibration fit (what
                         kops.probe_op_cost charges per tile pass),
                         fingerprint/replay, k-way merge vs lexsort at
-                        shard counts {2,4,8}; writes BENCH_kernels.json
+                        shard counts {2,4,6,8} (6 exercises the non-pow2
+                        padded schedule); writes BENCH_kernels.json
                         (CI uploads it; CPU runs in interpret mode at
                         reduced sizes and keep the guess constant)
   kernels               sorted_probe / run_probe / flash_attention microbench
@@ -181,12 +188,18 @@ def fig_sched_throughput() -> None:
             mean_s = np.mean([modeled_query_seconds(s, c, occupancy=max(
                 r["occupancy"], 1.0)) for s in per_q])
             r["modeled_queries_per_min"] = c * 60.0 / mean_s
+            # per-query latency quantiles, straight from the registry's
+            # sched.query_latency_s histogram over the measured pass
+            r["latency_p50_ms"] = 1e3 * r.pop("latency_p50_s")
+            r["latency_p99_ms"] = 1e3 * r.pop("latency_p99_s")
             records.append(r)
             emit(f"fig_sched_throughput/{load}/clients{c}",
                  1e6 * r["sched_s"] / max(r["requests"], 1),
                  f"serial_s={r['serial_s']:.3f};sched_s={r['sched_s']:.3f};"
                  f"speedup={r['speedup']:.2f};hit_rate={r['hit_rate']:.3f};"
                  f"occupancy={r['occupancy']:.2f};"
+                 f"p50_ms={r['latency_p50_ms']:.2f};"
+                 f"p99_ms={r['latency_p99_ms']:.2f};"
                  f"identical={int(r['byte_identical'])}")
     out = os.environ.get("BENCH_SCHED_JSON", "BENCH_sched.json")
     with open(out, "w") as f:
@@ -381,7 +394,8 @@ def fig_kernels() -> None:
       BENCH_KERNELS_KEYS     sorted-column length (default 1M TPU / 128k)
       BENCH_KERNELS_QUERIES  probe rows           (default 4k TPU / 512)
       BENCH_KERNELS_TRIM     per-shard merge rows (default 4k TPU / 1k)
-      BENCH_KERNELS_SHARDS   comma list, default "2,4,8"
+      BENCH_KERNELS_SHARDS   comma list, default "2,4,6,8" (non-pow2
+                             counts run the padded fold pre-round)
       BENCH_KERNELS_REPEATS  timing repeats (default 10 TPU / 3)
       BENCH_KERNELS_JSON     output path, default BENCH_kernels.json
     """
@@ -408,7 +422,7 @@ def fig_kernels() -> None:
                                  10 if on_tpu else 3))
     shard_counts = tuple(
         int(s) for s in os.environ.get("BENCH_KERNELS_SHARDS",
-                                       "2,4,8").split(",") if s)
+                                       "2,4,6,8").split(",") if s)
     records: list[dict] = []
 
     def timed(fn, *args):
@@ -506,13 +520,15 @@ def fig_kernels() -> None:
 
     # --- k-way merge vs replicated lexsort ------------------------------
     # single-process: the merge schedule ONE device runs in the
-    # recursive-doubling collective (log2(S) pairwise merges of doubling
-    # size, partner blocks prebuilt untimed) against that device's
-    # alternative under all_gather — one lexsort of the full S*trim block.
+    # recursive-doubling collective (non-pow2 counts add the fold
+    # pre-round — ``stepper.gather_merge_kway``'s padded schedule — then
+    # log2(base) pairwise merges of doubling size, partner blocks
+    # prebuilt untimed) against that device's alternative under
+    # all_gather: one lexsort of the full S*trim block.
     sort_cols = (0, 1)
     for S in shard_counts:
-        if S < 2 or S & (S - 1):
-            print(f"# skipping shards{S}: k-way needs a power of two >= 2",
+        if S < 2:
+            print(f"# skipping shards{S}: merge needs >= 2 blocks",
                   file=sys.stderr)
             continue
         n_valid = S * trim * 3 // 5
@@ -533,14 +549,29 @@ def fig_kernels() -> None:
         wall_lex, (r_lex, v_lex) = timed(
             jax.jit(lambda r, v: stepper.lexsort_rows(r, v, sort_cols)),
             gathered, valid_g)
-        # device 0's partners: the merged block of shards [2^r, 2^(r+1))
+        base_n = 1 << (S.bit_length() - 1)
+        rem = S - base_n
+        # effective blocks after the fold pre-round: extras base+i folded
+        # into i, everyone else padded by an empty-block merge (the
+        # uniform-shape SPMD schedule)
+        empty_r = jnp.full((trim, 4), -1, jnp.int32)
+        empty_v = jnp.zeros((trim,), bool)
+        if rem:
+            eff = [stepper.merge_sorted_blocks(
+                blocks[i], valids[i],
+                blocks[base_n + i] if i < rem else empty_r,
+                valids[base_n + i] if i < rem else empty_v,
+                sort_cols) for i in range(base_n)]
+        else:
+            eff = [(blocks[i], valids[i]) for i in range(base_n)]
+        # device 0's partners: the merged effective block of [2^r, 2^(r+1))
         partners = []
-        for r in range(S.bit_length() - 1):
+        for r in range(base_n.bit_length() - 1):
             d = 1 << r
-            p_r, p_v = blocks[d], valids[d]
+            p_r, p_v = eff[d]
             for s in range(d + 1, 2 * d):
-                p_r, p_v = stepper.merge_sorted_blocks(p_r, p_v, blocks[s],
-                                                       valids[s], sort_cols)
+                p_r, p_v = stepper.merge_sorted_blocks(p_r, p_v, eff[s][0],
+                                                       eff[s][1], sort_cols)
             partners.append((p_r, p_v))
 
         def kway_chain(mine_r, mine_v, *flat):
@@ -549,11 +580,20 @@ def fig_kernels() -> None:
                     mine_r, mine_v, flat[i], flat[i + 1], sort_cols)
             return mine_r, mine_v
 
-        flat = [x for p in partners for x in p]
+        # device 0 runs the fold pre-round itself (timed), then the
+        # partner merges
+        pre = [blocks[base_n], valids[base_n]] if rem else []
+        flat = pre + [x for p in partners for x in p]
         wall_kway, (r_kw, v_kw) = timed(jax.jit(kway_chain), blocks[0],
                                         valids[0], *flat)
-        same = bool(np.array_equal(np.asarray(r_kw), np.asarray(r_lex))
-                    and np.array_equal(np.asarray(v_kw), np.asarray(v_lex)))
+        # non-pow2 schedules end at 2*base*trim rows (>= S*trim): the
+        # valid prefix must match the lexsort bytes, the overhang must be
+        # all invalid padding
+        n_g = S * trim
+        r_kw, v_kw = np.asarray(r_kw), np.asarray(v_kw)
+        same = bool(np.array_equal(r_kw[:n_g], np.asarray(r_lex))
+                    and np.array_equal(v_kw[:n_g], np.asarray(v_lex))
+                    and not v_kw[n_g:].any())
         record(f"gather_merge/shards{S}", wall_kway,
                f"lexsort_us={1e6 * wall_lex:.1f};"
                f"kway_us={1e6 * wall_kway:.1f};"
@@ -630,9 +670,50 @@ def kernels() -> None:
          f"backend={backend}-jnp-oracle")
 
 
+# ------------------------------------------------- traced serving smoke
+
+def fig_sched_trace() -> None:
+    """Serve one interleaved multi-client stream with full observability
+    on and export the span timeline as a Chrome trace-event file
+    (Perfetto / ``chrome://tracing`` loadable): per-query async spans
+    over the ``sched.drain`` → ``wave`` → ``unit`` → ``unit.step`` /
+    ``cache.probe`` / ``cache.replay_device`` hierarchy, plus
+    ``kernel.*`` dispatch instants from the trace-time backend picks.
+
+    Environment knobs (CI smoke uses the defaults):
+      BENCH_TRACE_LOAD     one load name, default "union"
+      BENCH_TRACE_CLIENTS  int, default 8
+      BENCH_TRACE_JSON     output path, default "TRACE_sched_smoke.json"
+    """
+    from repro import obs
+    from repro.core.scheduler import (QueryScheduler, SchedulerConfig,
+                                      interleave_clients)
+    from repro.core.engine import EngineConfig
+
+    load = os.environ.get("BENCH_TRACE_LOAD", "union")
+    n_clients = int(os.environ.get("BENCH_TRACE_CLIENTS", "8"))
+    out = os.environ.get("BENCH_TRACE_JSON", "TRACE_sched_smoke.json")
+    qs = bench_load(load)
+    _, store = bench_graph()
+    stream = interleave_clients(list(qs), n_clients)
+    sched = QueryScheduler(store, EngineConfig(interface="spf"),
+                           SchedulerConfig())
+    with obs.tracing() as tracer:
+        t0 = time.perf_counter()
+        sched.serve(stream)
+        wall = time.perf_counter() - t0
+        tracer.export_chrome(out)
+    emit(f"fig_sched_trace/{load}/clients{n_clients}", 1e6 * wall,
+         f"events={len(tracer.events)};"
+         f"waves={tracer.count('wave', 'X')};"
+         f"units={tracer.count('unit', 'X')};"
+         f"queries={tracer.count('query', 'b')}")
+    print(f"# wrote {out} ({len(tracer.events)} events)", file=sys.stderr)
+
+
 FIGS = [fig4_loadstats, fig5_throughput, fig5f_timeouts, fig6_server_load,
-        fig7_network, fig8_latency, fig_sched_throughput, fig_capacity,
-        fig_dist_sched, fig_shard_sched, fig_kernels, kernels]
+        fig7_network, fig8_latency, fig_sched_throughput, fig_sched_trace,
+        fig_capacity, fig_dist_sched, fig_shard_sched, fig_kernels, kernels]
 
 # figures that never touch the WatDiv bench instance
 _STORELESS = (fig_kernels, kernels)

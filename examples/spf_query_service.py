@@ -76,8 +76,7 @@ def main() -> None:
     sched = QueryScheduler(store, cfg)
     sched.serve(interleave_clients(qs, args.clients))  # warm (compiles)
     sched.cache.clear()
-    from repro.core.scheduler import SchedMetrics
-    sched.metrics = SchedMetrics()
+    sched.registry.reset()  # measured pass only: zero every instrument
     t0 = time.perf_counter()
     sched.serve(interleave_clients(qs, args.clients))
     sched_s = time.perf_counter() - t0

@@ -105,11 +105,12 @@ def scheduled_load_throughput(store, queries, interface: str, n_clients: int,
     byte-identical either way.
 
     The sharded lowering's per-unit merge collective is not free: its
-    *measured* payload (``SchedMetrics.gather_bytes``) is charged against
-    the pod interconnect (``cm.pod_bw_bytes_s``) and spread over the
-    stream, so sharded throughput numbers are never silently optimistic
-    relative to the replicated step's transfer model (where the term is
-    zero, reproducing the old formula exactly).
+    *measured* payload (the ``sched.gather_bytes`` instrument, read as a
+    registry snapshot diff over exactly this call's serving window) is
+    charged against the pod interconnect (``cm.pod_bw_bytes_s``) and
+    spread over the stream, so sharded throughput numbers are never
+    silently optimistic relative to the replicated step's transfer model
+    (where the term is zero, reproducing the old formula exactly).
     """
     from repro.core.scheduler import QueryScheduler, interleave_clients
 
@@ -120,10 +121,11 @@ def scheduled_load_throughput(store, queries, interface: str, n_clients: int,
     cfg = cfg or EngineConfig(interface=interface)
     sched = scheduler or QueryScheduler(store, cfg, mesh=mesh,
                                         data_axis=data_axis)
-    gather0 = sched.metrics.gather_bytes
+    base = sched.snapshot()
     served = sched.serve(interleave_clients(list(queries), n_clients))
     occ = max(sched.metrics.occupancy, 1.0)
-    gather_s = (sched.metrics.gather_bytes - gather0) / cm.pod_bw_bytes_s
+    diff = sched.snapshot() - base
+    gather_s = diff.scalar("sched.gather_bytes") / cm.pod_bw_bytes_s
     total_s = sum(modeled_query_seconds(st, n_clients, cm, occupancy=occ)
                   for _, st in served) + gather_s
     mean_s = total_s / max(len(served), 1)

@@ -52,6 +52,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops as kops
+from repro.obs.registry import RegistryView
 from repro.rdf.store import TripleStore
 
 if TYPE_CHECKING:  # EngineConfig lives in engine.py; engine imports us
@@ -65,12 +66,18 @@ _EXPANDING = {"probe_ovar_free": "ps",  # objects within each (p, s) run
               "scan_ovar_free": "pred"}  # the whole predicate run
 
 
-@dataclass
-class PlannerStats:
-    oracle_caps: int = 0  # capacities served from the degree oracle
-    hwm_caps: int = 0  # capacities served from the high-water-mark memory
-    observations: int = 0
-    swept: int = 0  # HWM entries dropped on an epoch sweep
+class PlannerStats(RegistryView):
+    """Planner tallies as ``planner.*`` registry instruments — attribute
+    API unchanged from the old dataclass, snapshot/diffable through the
+    backing ``MetricsRegistry`` (``obs.registry.RegistryView``)."""
+
+    _PREFIX = "planner"
+    _FIELDS = (
+        "oracle_caps",  # capacities served from the degree oracle
+        "hwm_caps",  # capacities served from the high-water-mark memory
+        "observations",
+        "swept",  # HWM entries dropped on an epoch sweep
+    )
 
 
 @dataclass
@@ -84,12 +91,20 @@ class CapacityPlanner:
     store: TripleStore
     cfg: "EngineConfig"
     max_entries: int = 65536
-    stats: PlannerStats = field(default_factory=PlannerStats)
+    # shared MetricsRegistry to mount the planner.* instruments on (the
+    # scheduler passes its own so planner stats land in the same snapshot
+    # as SchedMetrics/CacheStats); None = private registry
+    registry: object = None
+    stats: PlannerStats = None
     _hwm: OrderedDict = field(default_factory=OrderedDict, repr=False)
     _deg_epoch: int = field(default=-1, repr=False)
     _max_ps: np.ndarray | None = field(default=None, repr=False)
     _max_po: np.ndarray | None = field(default=None, repr=False)
     _swept_epoch: int = field(default=0, repr=False)
+
+    def __post_init__(self):
+        if self.stats is None:
+            self.stats = PlannerStats(self.registry)
 
     # -------------------------------------------------------------- sizing
     def rung(self, need: int) -> int:

@@ -93,10 +93,23 @@ Cost accounting: the TPF page path charges fragment location at the
 steps on the jnp oracle, column-stream tile passes on Pallas), so
 TPF-vs-SPF server-op comparisons track the kernel layer actually serving
 the requests.
+
+Observability: with ``repro.obs`` enabled, this execution model is
+recorded live as a span hierarchy — ``sched.drain`` → ``wave``
+(lowering, width, cap) → ``unit`` → ``cache.probe`` / ``wave.lower`` /
+``unit.step`` / ``cache.replay_device`` / ``gather.merge`` /
+``overflow.resume``, plus per-query ``query`` async spans riding across
+waves, ``engine.query`` → ``unit`` → ``unit.step`` on the single-query
+path, and ``kernel.*`` instants marking trace-time backend dispatch.
+``obs.tracer.export_chrome`` writes a Perfetto-loadable timeline; every
+counter in this module's components is a named instrument in the same
+registry (``QueryScheduler.snapshot``).  Off by default at zero
+overhead — the traced and untraced executions are byte-identical.
 """
 
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, replace
 from functools import partial
 from typing import NamedTuple
@@ -105,6 +118,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.bindings import BindingTable, unit_table
 from repro.core.capacity import CapacityPlanner
 from repro.core.patterns import BGP, StarPattern, star_decomposition
@@ -332,6 +346,24 @@ class QueryEngine:
         fits.  Both return identical valid rows and gross stats — the
         planner changes how fast the answer is reached, never the answer.
         """
+        if not obs.enabled:
+            return self._run(bgp)
+        tr = obs.tracer
+        sp = tr.begin("engine.query",
+                      interface=self.cfg.interface) if tr else None
+        t0 = time.perf_counter()
+        table, stats = self._run(bgp)
+        # the latency histogram lives in the *global* obs registry (the
+        # engine has no per-instance registry); obs-gated, so the
+        # disabled path never mutates it
+        obs.registry.observe("engine.query_latency_s",
+                             time.perf_counter() - t0)
+        if sp:
+            tr.end(sp, fence=(table.rows, table.valid),
+                   n_results=stats.n_results)
+        return table, stats
+
+    def _run(self, bgp: BGP) -> tuple[BindingTable, QueryStats]:
         plan = self.plan(bgp)
         if not self.cfg.capacity_planner:
             return self._run_blind(plan)
@@ -379,6 +411,7 @@ class QueryEngine:
         through their tail; byte-safe by capacity-independence)."""
         from repro.core import stepper
 
+        tr = obs.tracer
         cfg = self.cfg
         store = self.store
         dev = store.device
@@ -397,6 +430,7 @@ class QueryEngine:
         max_peak = 1
         nrs = ntb = server = client = 0
         for k, up in enumerate(plan.units):
+            usp = tr.begin("unit", k=k) if tr else None
             # once overflow latches (at max_cap) the blind ladder's give-up
             # rung runs everything at max_cap on the truncated table — do
             # exactly that for byte-identity
@@ -407,15 +441,22 @@ class QueryEngine:
                 cap = want
             while True:
                 step = stepper.serial_unit_step(up, store.radix)
+                ssp = tr.begin("unit.step", k=k, cap=cap) if tr else None
                 r_o, v_o, o_o, ops_o, cnt_o, peak_o = step(
                     dev, const_vec, rows[None], valid[None],
                     jnp.asarray([overflow]))
+                if ssp:
+                    tr.end(ssp, fence=(r_o, v_o))
                 unit_ovf = bool(np.asarray(o_o)[0])
                 if unit_ovf and not overflow and cap < cfg.max_cap:
                     # resumable overflow: regrow only this unit's table,
                     # seeded with the checkpointed (pre-step) prefix
+                    rsp = tr.begin("overflow.resume", unit=k,
+                                   cap=cap) if tr else None
                     cap = min(cap * 4, cfg.max_cap)
                     rows, valid = stepper.reseat(rows, valid, cap)
+                    if rsp:
+                        tr.end(rsp)
                     continue
                 break
             rows, valid, ovf_dev = r_o[0], v_o[0], o_o[0]
@@ -438,6 +479,8 @@ class QueryEngine:
                 max_peak = max(max_peak, peak, n_in)
             overflow = unit_ovf
             n_in = out_count
+            if usp:
+                tr.end(usp, fence=(rows, valid), n_out=out_count)
 
         n_results = n_in
         if cfg.interface == "endpoint":

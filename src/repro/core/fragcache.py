@@ -87,6 +87,8 @@ from typing import NamedTuple
 
 import numpy as np
 
+from repro.obs.registry import RegistryView
+
 
 # --------------------------------------------------------------------------
 # frequency sketches (TinyLFU admission support)
@@ -206,18 +208,26 @@ _EMPTY_SRC = np.zeros((0,), np.int32)
 _EMPTY_WRITTEN = np.zeros((0, 0), np.int32)
 
 
-@dataclass
-class CacheStats:
-    hits: int = 0  # lookups served from a stored entry (incl. negative)
-    neg_hits: int = 0  # the subset of hits served by the negative table
-    shared_hits: int = 0  # requests collapsed onto an identical in-flight one
-    misses: int = 0
-    insertions: int = 0
-    neg_insertions: int = 0
-    evictions: int = 0
-    stale_evictions: int = 0  # entries dropped because their epoch lapsed
-    admission_rejects: int = 0  # freq policy kept the victim, refused the new
-    bytes_stored: int = 0
+class CacheStats(RegistryView):
+    """Cache tallies as ``cache.*`` registry instruments (``obs.registry.
+    RegistryView``): same attribute API as the old dataclass — every
+    ``stats.x += 1`` site below is unchanged — but snapshot-able/diffable
+    through the backing ``MetricsRegistry`` alongside the scheduler's and
+    planner's instruments when the three share one registry."""
+
+    _PREFIX = "cache"
+    _FIELDS = (
+        "hits",  # lookups served from a stored entry (incl. negative)
+        "neg_hits",  # the subset of hits served by the negative table
+        "shared_hits",  # requests collapsed onto an identical in-flight one
+        "misses",
+        "insertions",
+        "neg_insertions",
+        "evictions",
+        "stale_evictions",  # entries dropped because their epoch lapsed
+        "admission_rejects",  # freq policy kept the victim, refused the new
+        "bytes_stored",
+    )
 
     @property
     def total_hits(self) -> int:
@@ -249,11 +259,15 @@ class FragmentCache:
     neg_capacity: int = 16384
     policy: str = "freq"  # "freq" | "lru"
     sketch: str = "cms"  # "cms" | "exact"
+    # shared MetricsRegistry to mount the cache.* instruments on (a
+    # scheduler that builds its own cache passes its registry so cache
+    # stats land in the same snapshot as SchedMetrics); None = private
+    registry: object = None
     _entries: OrderedDict = field(default_factory=OrderedDict, repr=False)
     _neg: OrderedDict = field(default_factory=OrderedDict, repr=False)
     _sketch: object = field(default=None, repr=False)
     _swept_epoch: int = field(default=0, repr=False)
-    stats: CacheStats = field(default_factory=CacheStats)
+    stats: CacheStats = None
 
     def __post_init__(self):
         if self.policy not in ("freq", "lru"):
@@ -262,6 +276,8 @@ class FragmentCache:
             raise ValueError(f"unknown frequency sketch {self.sketch!r}")
         self._sketch = CountMinSketch(self.capacity) if self.sketch == "cms" \
             else ExactFreqSketch(self.capacity)
+        if self.stats is None:
+            self.stats = CacheStats(self.registry)
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -396,7 +412,7 @@ class FragmentCache:
         self._entries.clear()
         self._neg.clear()
         self._sketch.clear()
-        self.stats = CacheStats()
+        self.stats.reset()
 
 
 def replay(entry: FragmentEntry, in_rows_valid: np.ndarray, cap: int,

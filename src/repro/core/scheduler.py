@@ -96,6 +96,7 @@ exactly on the gross fields (``stepper.unit_cost`` mirrors
 from __future__ import annotations
 
 import math
+import time
 from collections import OrderedDict
 from dataclasses import dataclass, replace
 from typing import Iterable, NamedTuple
@@ -104,6 +105,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
+from repro import obs
 from repro.core import stepper
 from repro.core.bindings import BindingTable
 from repro.core.capacity import CapacityPlanner
@@ -145,10 +147,12 @@ class SchedulerConfig:
     shard_min_triples: int = 0
     shard_headroom: int = 2
     # order-restoring merge for sharded waves ("auto" | "kway" |
-    # "lexsort"): auto picks the log2(n_shards)-round pairwise k-way
-    # merge on power-of-two shard counts and the all_gather + lexsort
-    # fallback otherwise; both are byte-identical (stepper.
-    # select_gather_merge)
+    # "lexsort"): auto picks the recursive-doubling pairwise k-way merge
+    # at every shard count (non-power-of-two counts run the padded
+    # schedule — empty partner blocks, +2 rounds); "lexsort" forces the
+    # all_gather + full-sort strategy and is the only remaining fallback,
+    # counted in SchedMetrics.merge_lexsort_steps so it is never silent.
+    # All strategies are byte-identical (stepper.select_gather_merge)
     shard_merge: str = "auto"
 
 
@@ -179,26 +183,45 @@ class _Job:
     peak_seen: int = 1
 
 
-@dataclass
-class SchedMetrics:
-    requests: int = 0
-    jobs: int = 0  # distinct executions after collapsing
-    waves: int = 0
-    steps: int = 0  # device unit-steps dispatched
-    mesh_steps: int = 0  # the subset routed through mesh shard_map steps
-    shard_steps: int = 0  # ...and the subset of THOSE on the sharded store
-    steps_skipped: int = 0  # unit-steps fully served by the cache
-    lane_steps: int = 0  # lanes x dispatched steps (incl. padding)
-    active_lane_steps: int = 0  # non-padding lanes among those
-    retries: int = 0  # jobs requeued (resumably) at 4x cap
-    # Omega-block device->host pulls during unit stepping (miss-insertion
-    # prefix pulls + overflow-retire checkpoints; finalize excluded).  The
-    # device-replay invariant the tests pin: an all-hit wave adds zero.
-    host_block_pulls: int = 0
-    # bytes moved by the sharded lowering's per-unit gather collectives
-    # (benchlib folds these into the modeled throughput so sharded BENCH
-    # numbers are not silently optimistic)
-    gather_bytes: int = 0
+class SchedMetrics(obs.RegistryView):
+    """Scheduler tallies as ``sched.*`` instruments in one
+    ``MetricsRegistry`` (``obs.registry``): the attribute API is the old
+    dataclass's — every ``metrics.x += 1`` site below is unchanged, and
+    the fields stay the public read surface — but the registry is the
+    source of truth, so ``QueryScheduler.snapshot()`` diffs
+    (``snap_b - snap_a``) replace hand-subtracted before/after reads in
+    ``benchlib`` and the BENCH figures.  A scheduler's cache and planner
+    mount their ``cache.*`` / ``planner.*`` instruments on the same
+    registry, so one snapshot covers the whole serving stack.
+    """
+
+    _PREFIX = "sched"
+    _FIELDS = (
+        "requests",
+        "jobs",  # distinct executions after collapsing
+        "waves",
+        "steps",  # device unit-steps dispatched
+        "mesh_steps",  # the subset routed through mesh shard_map steps
+        "shard_steps",  # ...and the subset of THOSE on the sharded store
+        "steps_skipped",  # unit-steps fully served by the cache
+        "lane_steps",  # lanes x dispatched steps (incl. padding)
+        "active_lane_steps",  # non-padding lanes among those
+        "retries",  # jobs requeued (resumably) at 4x cap
+        # Omega-block device->host pulls during unit stepping
+        # (miss-insertion prefix pulls + overflow-retire checkpoints;
+        # finalize excluded).  The device-replay invariant the tests pin:
+        # an all-hit wave adds zero.
+        "host_block_pulls",
+        # bytes moved by the sharded lowering's per-unit gather
+        # collectives (benchlib folds these into the modeled throughput
+        # so sharded BENCH numbers are not silently optimistic)
+        "gather_bytes",
+        # sharded steps that ran the all_gather+lexsort merge strategy —
+        # the k-way fallback that remains after padded non-pow2 support
+        # (explicit shard_merge="lexsort" only), counted so it is never
+        # a silent performance cliff
+        "merge_lexsort_steps",
+    )
 
     @property
     def occupancy(self) -> float:
@@ -274,14 +297,23 @@ class QueryScheduler:
                  cache: FragmentCache | None = None,
                  mesh: Mesh | None = None,
                  planner: CapacityPlanner | None = None,
-                 data_axis: str | None = None):
+                 data_axis: str | None = None,
+                 registry: obs.MetricsRegistry | None = None):
         self.store = store
         self.cfg = cfg
         self.scfg = scfg or SchedulerConfig()
+        # one registry per scheduler: SchedMetrics plus the cache./
+        # planner. instruments of components this scheduler constructs
+        # itself all mount here, so snapshot() covers the serving stack.
+        # Pod-shared caches/planners passed in keep their own registries
+        # (their stats aggregate across schedulers by design).
+        self.registry = registry if registry is not None \
+            else obs.MetricsRegistry()
         self.cache = cache if cache is not None else \
-            FragmentCache(capacity=self.scfg.cache_entries)
+            FragmentCache(capacity=self.scfg.cache_entries,
+                          registry=self.registry)
         self.planner = planner if planner is not None \
-            else CapacityPlanner(store, cfg)
+            else CapacityPlanner(store, cfg, registry=self.registry)
         self.mesh = mesh
         if mesh is not None and data_axis is not None \
                 and data_axis not in mesh.axis_names:
@@ -313,7 +345,8 @@ class QueryScheduler:
             self._n_shards = 0
             self._shard_lane_axes = ()
             self._shard_slots = 0
-        self.metrics = SchedMetrics()
+        self.metrics = SchedMetrics(self.registry)
+        self._t_submit: dict[int, float] = {}  # obs-only request walls
         self._plan_memo: dict[BGP, QueryPlan] = {}
         self._cap_hints: dict[tuple, int] = {}  # legacy memo (planner off)
         self._pending: list[Request] = []
@@ -332,7 +365,16 @@ class QueryScheduler:
         self._next_rid += 1
         self._pending.append(Request(rid, client, query))
         self.metrics.requests += 1
+        if obs.enabled:
+            self._t_submit[rid] = time.perf_counter()
         return rid
+
+    def snapshot(self) -> obs.Snapshot:
+        """Plain-dict snapshot of this scheduler's registry (sched.* +
+        cache.* / planner.* of self-constructed components); diff two
+        snapshots (``after - before``) for interval metrics instead of
+        hand-subtracting field values."""
+        return self.registry.snapshot()
 
     def run_queries(self, queries: Iterable[BGP], client: int = 0
                     ) -> tuple[list[BindingTable], list[QueryStats]]:
@@ -383,6 +425,14 @@ class QueryScheduler:
         requests, self._pending = self._pending, []
         results: dict[int, tuple[BindingTable, QueryStats]] = {}
 
+        tr = obs.tracer
+        if tr:
+            dspan = tr.begin("sched.drain", requests=len(requests))
+            for req in requests:
+                # per-query lifetime as an async span (queries overlap
+                # waves freely); closed at finalize in _run_wave
+                tr.begin_async("query", req.rid, client=req.client)
+
         # store mutated since the cache/planner last swept: drop stale
         # fragments and high-water marks now (keys are epoch-tagged, so
         # they could never alias — this just reclaims their memory eagerly
@@ -417,6 +467,10 @@ class QueryScheduler:
                 for job in retries:
                     buckets.setdefault((sig, job.cap, job.resume_k),
                                        []).append(job)
+        if tr:
+            tr.end(dspan)
+        if obs.enabled:
+            self._t_submit.clear()
         return results
 
     def _wave_shard_trim(self, jobs: list[_Job], active: list[int],
@@ -473,6 +527,7 @@ class QueryScheduler:
         to deliver the responses.
         """
         scfg = self.scfg
+        tr = obs.tracer
         plan, cap = jobs[0].plan, jobs[0].cap
         k0 = jobs[0].resume_k
         n_active = len(jobs)
@@ -487,6 +542,7 @@ class QueryScheduler:
         latch = use_shard and cap >= self.cfg.max_cap
         use_mesh = (not use_shard and self.mesh is not None
                     and B >= self._mesh_slots)
+        lowering = "shard" if use_shard else "mesh" if use_mesh else "vmap"
         slots = self._shard_slots if use_shard \
             else self._mesh_slots if use_mesh else 0
         if slots and B % slots:
@@ -521,6 +577,9 @@ class QueryScheduler:
         acc = [job.acc if job.acc is not None else _LaneAcc()
                for job in jobs]
         self.metrics.waves += 1
+        wsp = tr.begin("wave", lowering=lowering, latch=bool(latch),
+                       cap=cap, width=B, jobs=n_active, resume_k=k0,
+                       units=len(plan.units) - k0) if tr else None
 
         # wave state is device-resident for the whole wave; host numpy
         # exists only in the seeds above and the finalize pull below
@@ -530,15 +589,23 @@ class QueryScheduler:
         retired: set[int] = set()
         retries: list[_Job] = []
 
-        def _retire(j: int, k: int, seed: np.ndarray) -> None:
+        def _retire(j: int, k: int) -> None:
             job = jobs[j]
-            self.metrics.host_block_pulls += 1  # the checkpointed seed
+            rsp = tr.begin("overflow.resume", unit=k, cap=cap,
+                           rid=job.rids[0]) if tr else None
+            # the checkpointed seed: this lane's pre-step valid prefix
+            # (rows_d still holds the unit's input state at both call
+            # sites) — one counted Omega-block pull
+            seed = np.asarray(rows_d[j, :n_in[j]])
+            self.metrics.host_block_pulls += 1
             retries.append(_Job(job.plan, job.consts,
                                 min(cap * 4, self.cfg.max_cap), job.rids,
                                 resume_k=k, seed=seed, acc=acc[j],
                                 peak_seen=job.peak_seen))
             retired.add(j)
             self.metrics.retries += 1
+            if rsp:
+                tr.end(rsp)
 
         for k in range(k0, len(plan.units)):
             up = plan.units[k]
@@ -552,9 +619,11 @@ class QueryScheduler:
             # the digest is a pure function of the valid prefix, which is
             # byte-identical across lowerings and shard counts, so sharded
             # waves hit fragments recorded by vmap waves and vice versa
+            usp = tr.begin("unit", k=k, lanes=len(active)) if tr else None
             status: dict[int, tuple[str, object]] = {}
             keys: dict[int, tuple] = {}
             if scfg.use_cache:
+                csp = tr.begin("cache.probe") if tr else None
                 d = np.asarray(
                     stepper.digest_step(io.read_cols)(rows_d, valid_d))
                 digs = {j: tuple(int(x) for x in d[j]) for j in active}
@@ -574,12 +643,17 @@ class QueryScheduler:
                         status[j] = ("miss", None)
                     else:
                         status[j] = ("hit", entry)
+                if csp:
+                    tr.end(csp, lanes=len(active),
+                           hits=sum(1 for s, _ in status.values()
+                                    if s != "miss"))
             else:
                 status = {j: ("miss", None) for j in active}
 
             need_step = any(s == "miss" for s, _ in status.values())
             ops_lane: dict[int, int] = {}
             if need_step:
+                lsp = tr.begin("wave.lower", lowering=lowering) if tr else None
                 if use_shard:
                     # latch waves merge at the full cap (global truncation
                     # must see every shard's rows); non-latch waves trim to
@@ -598,16 +672,30 @@ class QueryScheduler:
                     # throughput model — measured, not assumed.  Latch
                     # waves pay it once per branch (mid-unit merges)
                     rounds = len(up.branches) if latch else 1
-                    self.metrics.gather_bytes += \
-                        B * self._n_shards * trim * ((V + 1) * 4 + 1) * rounds
+                    g_bytes = (B * self._n_shards * trim
+                               * ((V + 1) * 4 + 1) * rounds)
+                    self.metrics.gather_bytes += g_bytes
+                    if scfg.shard_merge == "lexsort":
+                        self.metrics.merge_lexsort_steps += 1
+                    if tr:
+                        tr.instant("gather.merge",
+                                   strategy=("lexsort"
+                                             if scfg.shard_merge == "lexsort"
+                                             else "kway"),
+                                   bytes=g_bytes, trim=trim, rounds=rounds)
                 elif use_mesh:
                     step = stepper.unit_step(up, self.store.radix, self.mesh,
                                              self._lane_axes)
                     self.metrics.mesh_steps += 1
                 else:
                     step = stepper.unit_step(up, self.store.radix)
+                if lsp:
+                    tr.end(lsp)
+                ssp = tr.begin("unit.step", k=k) if tr else None
                 out = step(dev, consts_dev, rows_d, valid_d,
                            jnp.asarray(ovf))
+                if ssp:
+                    tr.end(ssp, fence=out)
                 # the sharded step returns an 8th output (the pmax of
                 # per-shard row counts) that feeds the occupancy trims;
                 # the vmap/replicated steps return the common 7
@@ -626,7 +714,7 @@ class QueryScheduler:
                         # resumable overflow: checkpoint this unit's input
                         # prefix (still the pre-step device state) and
                         # requeue at 4x — units 0..k-1 are never re-run
-                        _retire(j, k, np.asarray(rows_d[j, :n_in[j]]))
+                        _retire(j, k)
                         continue
                     if status[j][0] == "miss" and scfg.use_cache \
                             and not bool(ovf[j]):
@@ -683,10 +771,12 @@ class QueryScheduler:
                             and cap < self.cfg.max_cap:
                         # the cached unit overflowed at this cap: resume
                         # from the checkpointed seed like a computed one
-                        _retire(j, k, np.asarray(rows_d[j, :n_in[j]]))
+                        _retire(j, k)
                         continue
                     live[j] = entry
                 if not live:  # every hit lane retired on a cached overflow
+                    if usp:
+                        tr.end(usp, path="replay", live=0)
                     continue
                 n_w = len(io.write_cols)
                 m = 1
@@ -703,9 +793,13 @@ class QueryScheduler:
                         if n_w:
                             wr_h[j, :e.n_out] = e.written
                     nout_h[j] = e.n_out
+                psp = tr.begin("cache.replay_device",
+                               lanes=len(live)) if tr else None
                 rows_d, valid_d = stepper.replay_step(io.write_cols)(
                     rows_d, jnp.asarray(src_h), jnp.asarray(wr_h),
                     jnp.asarray(nout_h))
+                if psp:
+                    tr.end(psp, fence=(rows_d, valid_d))
                 for j, e in live.items():
                     ovf[j] = bool(ovf[j]) | e.overflow
                     counts[j] = e.n_out
@@ -731,6 +825,9 @@ class QueryScheduler:
                     a.hits += 1
                     a.nrs_saved += nrs_d
                     a.ntb_saved += ntb_d
+            if usp:
+                tr.end(usp, fence=(rows_d, valid_d),
+                       path="step" if need_step else "replay")
 
         # --------------------------------------------------------- finalize
         # the one end-of-wave materialisation: delivering the responses
@@ -772,6 +869,15 @@ class QueryScheduler:
                 nrs_saved=a.nrs_saved, ntb_saved=a.ntb_saved,
             )
             results[job.rids[0]] = (table, stats)
+            if obs.enabled:
+                t1 = time.perf_counter()
+                for rid in job.rids:
+                    t0 = self._t_submit.get(rid)
+                    if t0 is not None:
+                        self.registry.observe("sched.query_latency_s",
+                                              t1 - t0)
+                    if tr:
+                        tr.end_async("query", rid, n_results=n_results)
             if len(job.rids) > 1:
                 # collapsed duplicates: whole response fanned out from the
                 # shared execution — every unit request cache-served
@@ -781,4 +887,6 @@ class QueryScheduler:
                                      nrs_saved=nrs, ntb_saved=ntb)
                 for rid in job.rids[1:]:
                     results[rid] = (table, dup)
+        if wsp:
+            tr.end(wsp, retries=len(retries))
         return retries

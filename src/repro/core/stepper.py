@@ -392,20 +392,45 @@ def gather_merge_kway(rows, valid, sort_cols: tuple[int, ...], axis: str,
     a full sort, and the rank computations ride the dispatched
     ``searchsorted_in_runs`` primitive (Pallas on TPU).
 
+    Non-power-of-two shard counts run a padded schedule around the
+    power-of-two core (``base = 2**floor(log2 n)``, ``rem = n - base``):
+    a pre-round folds each extra block ``base+i`` into device ``i``
+    (``ppermute`` delivers zeros to non-recipients, which are re-blanked
+    to the invalid -1 encoding before the merge, so non-folding devices
+    just merge with an empty block); the main rounds run recursive
+    doubling among devices ``0..base-1`` only; a post-round broadcasts
+    the merged block back onto the extras.  Naive in-place phantom
+    padding would be wrong — recursive doubling relies on every partner
+    holding its whole subgroup's merge, which phantom partners break —
+    hence the fold/broadcast bracket (the classic MPI reduction schedule
+    for non-power-of-two communicators).
+
     Same contract and bit-identical outputs as ``gather_merge`` (pinned by
-    the shard-merge parity tests); requires a power-of-two ``n_shards``
-    (``select_gather_merge`` enforces the fallback).
+    the shard-merge parity tests) at every shard count.
     """
-    if n_shards & (n_shards - 1):
-        raise ValueError(f"k-way merge needs a power-of-two shard count, "
-                         f"got {n_shards}")
     rows, valid, lost = _trim_block(rows, valid, trim)
+    if n_shards <= 1:
+        return _pad_to_cap(rows, valid, out_cap, lost)
     idx = jax.lax.axis_index(axis)
-    for r in range(n_shards.bit_length() - 1):
-        d = 1 << r
-        perm = [(j, j ^ d) for j in range(n_shards)]
+    base = 1 << (n_shards.bit_length() - 1)
+    rem = n_shards - base
+    if rem:
+        # pre-round: fold extra blocks into the pow2 core (base+i -> i)
+        perm = [(base + i, i) for i in range(rem)]
         o_rows = jax.lax.ppermute(rows, axis, perm)
         o_valid = jax.lax.ppermute(valid, axis, perm)
+        o_rows = jnp.where(o_valid[:, None], o_rows, -1)
+        rows, valid = merge_sorted_blocks(rows, valid, o_rows, o_valid,
+                                          sort_cols)
+    for r in range(base.bit_length() - 1):
+        d = 1 << r
+        perm = [(j, j ^ d) for j in range(base)]
+        o_rows = jax.lax.ppermute(rows, axis, perm)
+        o_valid = jax.lax.ppermute(valid, axis, perm)
+        if rem:
+            # extras sit the core rounds out: the zeros they receive must
+            # read as invalid rows, not as key value 0
+            o_rows = jnp.where(o_valid[:, None], o_rows, -1)
         am_left = (idx & d) == 0
         rows_a = jnp.where(am_left, rows, o_rows)
         rows_b = jnp.where(am_left, o_rows, rows)
@@ -413,18 +438,26 @@ def gather_merge_kway(rows, valid, sort_cols: tuple[int, ...], axis: str,
         valid_b = jnp.where(am_left, o_valid, valid)
         rows, valid = merge_sorted_blocks(rows_a, valid_a, rows_b, valid_b,
                                           sort_cols)
+    if rem:
+        # post-round: replicate the merged block back onto the extras
+        perm = [(i, base + i) for i in range(rem)]
+        o_rows = jax.lax.ppermute(rows, axis, perm)
+        o_valid = jax.lax.ppermute(valid, axis, perm)
+        is_extra = idx >= base
+        rows = jnp.where(is_extra, o_rows, rows)
+        valid = jnp.where(is_extra, o_valid, valid)
     return _pad_to_cap(rows, valid, out_cap, lost)
 
 
 def select_gather_merge(merge: str, n_shards: int):
     """Resolve a merge policy name to a gather-merge callable with the
-    ``gather_merge`` signature.  ``"auto"`` takes the k-way merge on
-    power-of-two shard counts and the replicated lexsort otherwise;
-    ``"kway"`` / ``"lexsort"`` force a strategy (``"kway"`` raises on a
-    non-power-of-two count).  Outputs are bit-identical either way — the
-    policy is pure placement of the merge work."""
-    pow2 = n_shards >= 1 and not (n_shards & (n_shards - 1))
-    if merge == "lexsort" or (merge == "auto" and not pow2):
+    ``gather_merge`` signature.  ``"auto"`` takes the k-way merge at every
+    shard count (non-power-of-two counts run its padded fold/broadcast
+    schedule); ``"lexsort"`` is the only remaining fallback — explicit
+    opt-in, counted per sharded step in
+    ``SchedMetrics.merge_lexsort_steps``.  Outputs are bit-identical
+    either way — the policy is pure placement of the merge work."""
+    if merge == "lexsort":
         return gather_merge
     if merge not in ("auto", "kway"):
         raise ValueError(f"merge must be 'auto', 'kway' or 'lexsort'; "

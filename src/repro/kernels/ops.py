@@ -82,6 +82,7 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.owned_probe import MAX_SHARDS, eqrange_owned_pallas
@@ -116,6 +117,24 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _note(prim: str, path: str) -> None:
+    """Obs-gated dispatch note: which backend path ``prim`` picked.
+
+    Dispatch happens at trace time (these wrappers run when jit traces,
+    not per execution), so the counter in ``obs.registry`` counts
+    *traces* per ``kernels.dispatch.<prim>.<path>`` and the tracer
+    instant marks when a trace dispatched which kernel.  Compiles to a
+    single attribute check when observability is off — no dict writes,
+    no event objects.
+    """
+    if not obs.enabled:
+        return
+    obs.registry.inc(f"kernels.dispatch.{prim}.{path}")
+    tr = obs.tracer
+    if tr:
+        tr.instant(f"kernel.{prim}", path=path)
+
+
 # --------------------------------------------------------------------------
 # join/probe primitives
 # --------------------------------------------------------------------------
@@ -124,9 +143,11 @@ def sorted_probe(keys: jnp.ndarray, queries: jnp.ndarray
                  ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """(rank, contains) of each query in a sorted key array."""
     if _use_pallas():
+        _note("sorted_probe", "pallas")
         rank_lo, _, contains = sorted_probe_pallas(keys, queries,
                                                    interpret=_interpret())
         return rank_lo, contains
+    _note("sorted_probe", "ref")
     return ref.sorted_probe_ref(keys, queries)
 
 
@@ -150,9 +171,11 @@ def eqrange(sorted_keys: jnp.ndarray, query_keys: jnp.ndarray
     """
     if _use_pallas() and (FORCE == "pallas"
                           or query_keys.shape[0] >= MIN_PALLAS_QUERIES):
+        _note("eqrange", "pallas")
         rank_lo, rank_hi, _ = sorted_probe_pallas(sorted_keys, query_keys,
                                                   interpret=_interpret())
         return rank_lo, rank_hi
+    _note("eqrange", "ref")
     return ref.eqrange_ref(sorted_keys, query_keys)
 
 
@@ -171,9 +194,11 @@ def searchsorted(sorted_keys: jnp.ndarray, queries: jnp.ndarray,
         raise ValueError(f"side must be 'left' or 'right', got {side!r}")
     if _use_pallas() and (FORCE == "pallas"
                           or queries.shape[0] >= MIN_PALLAS_QUERIES):
+        _note("searchsorted", "pallas")
         rank_lo, rank_hi, _ = sorted_probe_pallas(sorted_keys, queries,
                                                   interpret=_interpret())
         return rank_lo if side == "left" else rank_hi
+    _note("searchsorted", "ref")
     return ref.rank_ref(sorted_keys, queries, side=side)
 
 
@@ -202,9 +227,11 @@ def eqrange_owned(sorted_keys: jnp.ndarray, query_keys: jnp.ndarray,
     if _use_pallas() and n_shards <= MAX_SHARDS \
             and (FORCE == "pallas"
                  or query_keys.shape[0] >= MIN_PALLAS_QUERIES):
+        _note("eqrange_owned", "pallas")
         return eqrange_owned_pallas(sorted_keys, query_keys, subjects,
                                     my_shard, n_shards,
                                     interpret=_interpret())
+    _note("eqrange_owned", "ref")
     owned = ref.subject_shard_ref(subjects, n_shards) == my_shard
     lo, hi = eqrange(sorted_keys, query_keys)
     return lo, jnp.where(owned, hi, lo), owned
@@ -217,13 +244,16 @@ def run_probe(values: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray,
     """
     if _use_pallas():
         if PROBE_VARIANT == "prefetch":
+            _note("run_probe", "prefetch")
             return run_probe_prefetch_pallas(values, lo, hi, targets,
                                              interpret=_interpret())
         if PROBE_VARIANT != "dense":
             raise ValueError(f"ops.PROBE_VARIANT must be 'prefetch' or "
                              f"'dense'; got {PROBE_VARIANT!r}")
+        _note("run_probe", "dense")
         return run_probe_pallas(values, lo, hi, targets,
                                 interpret=_interpret())
+    _note("run_probe", "ref")
     return ref.run_probe_ref(values, lo, hi, targets)
 
 
@@ -256,8 +286,10 @@ def fingerprint_rows(block: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
     content beyond the row count and always take the jnp path.
     """
     if _use_pallas() and block.shape[1] > 0:
+        _note("fingerprint_rows", "pallas")
         from repro.kernels.fingerprint import fingerprint_rows_pallas
         return fingerprint_rows_pallas(block, valid, interpret=_interpret())
+    _note("fingerprint_rows", "ref")
     return ref.fingerprint_rows_ref(block, valid)
 
 
@@ -276,10 +308,12 @@ def replay_delta(seed_rows: jnp.ndarray, src: jnp.ndarray,
     parity tests).  vmap-safe: the scheduler replays whole waves at once.
     """
     if _use_pallas() and seed_rows.shape[1] > 0:
+        _note("replay_delta", "pallas")
         from repro.kernels.replay import replay_delta_pallas
         return replay_delta_pallas(seed_rows, src, written, n_out,
                                    write_cols=tuple(write_cols),
                                    interpret=_interpret())
+    _note("replay_delta", "ref")
     return ref.replay_delta_ref(seed_rows, src, written, n_out,
                                 tuple(write_cols))
 

@@ -1,0 +1,93 @@
+"""Unified observability: one metrics registry + an opt-in span tracer.
+
+The serving stack's measured quantities (the paper's evaluation currency:
+throughput, p50/p99 latency, transferred bytes, server ops) live in
+``MetricsRegistry`` instruments instead of scattered ad-hoc counters:
+``SchedMetrics`` / ``CacheStats`` / ``PlannerStats`` are thin attribute
+views over named instruments (``obs.registry.RegistryView``), and
+``registry.snapshot()`` is the plain-dict source of truth ``benchlib``
+and the BENCH figures diff (``snap_b - snap_a``) instead of
+hand-subtracting before/after field values.
+
+Tracing is strictly opt-in.  ``obs.enabled`` is the module-level switch
+(default ``False``); hook sites across ``core/scheduler.py``,
+``core/stepper.py``, ``core/engine.py`` and ``kernels/ops.py`` guard on
+it (and on ``obs.tracer``) so the disabled path costs one attribute read
+— no fences, no dict writes, no span objects — and never imports
+``repro.obs.trace`` (the CI guard pins this).  With tracing on, the
+serving lifecycle is recorded as nested spans (query -> wave -> lowering
+-> unit step -> kernel dispatch / cache probe / gather-merge /
+overflow-resume) with ``block_until_ready`` fences at span close, and
+exports as JSONL or Chrome trace-event JSON (Perfetto-loadable).
+
+The global ``obs.registry`` holds *observability-only* instruments
+(kernel dispatch tallies, engine latency histograms) and is mutated only
+when ``obs.enabled`` — a dedicated test pins zero mutations with the
+switch off.  Functional counters (the ``SchedMetrics`` family) live in
+per-component registries that count regardless, exactly as the old
+dataclass fields did.
+"""
+
+from __future__ import annotations
+
+from contextlib import contextmanager
+
+from repro.obs.registry import (  # noqa: F401  (re-exported API)
+    MetricsRegistry,
+    RegistryView,
+    Snapshot,
+)
+
+#: Module-level switch for the instrumentation hooks.  Read via attribute
+#: access (``obs.enabled``) so flips are visible everywhere; ``False`` is
+#: the zero-overhead default the byte-identity suites run under.
+enabled: bool = False
+
+#: The active ``SpanTracer`` or ``None``.  Hook sites bind ``tr =
+#: obs.tracer`` once and emit spans only when it is not ``None`` — the
+#: tracer module is imported lazily so a disabled run never touches it.
+tracer = None
+
+#: Global registry for observability-only instruments (kernel dispatch
+#: tallies, serial-engine latency histograms).  Only mutated when
+#: ``enabled`` is True.
+registry = MetricsRegistry()
+
+
+def enable(trace: bool = True):
+    """Turn the instrumentation hooks on; returns the active tracer (or
+    ``None`` when ``trace=False`` — registry-only mode, no spans and no
+    fences)."""
+    global enabled, tracer
+    enabled = True
+    if trace and tracer is None:
+        from repro.obs.trace import SpanTracer
+
+        tracer = SpanTracer()
+    return tracer
+
+
+def disable() -> None:
+    """Back to the zero-overhead default: hooks off, tracer detached
+    (already-recorded events stay with the detached tracer object)."""
+    global enabled, tracer
+    enabled = False
+    tracer = None
+
+
+def snapshot() -> Snapshot:
+    """Plain-dict snapshot of the global observability registry."""
+    return registry.snapshot()
+
+
+@contextmanager
+def tracing(trace: bool = True):
+    """Scoped ``enable()``: yields the tracer, restores the previous
+    enabled/tracer state on exit (what tests and the traced bench passes
+    use so tracing never leaks across cases)."""
+    prev = (enabled, tracer)
+    tr = enable(trace)
+    try:
+        yield tr
+    finally:
+        globals()["enabled"], globals()["tracer"] = prev

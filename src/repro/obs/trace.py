@@ -1,0 +1,137 @@
+"""Span tracer: the serving lifecycle as a Perfetto-loadable timeline.
+
+Records host-side wall spans (``perf_counter_ns``) with optional
+``jax.block_until_ready`` fences at span close — the fence is what makes
+a span's duration mean "this device work finished here" instead of "the
+dispatch returned here", and it exists *only* on this opt-in path: the
+hooks never fence when tracing is off, so the traced and untraced
+executions submit identical device programs (byte-identical results, the
+pinned invariant).
+
+Event model (Chrome trace-event format):
+
+- sync spans — ``ph: "X"`` complete events on one track; nesting is
+  positional (a span strictly inside another renders as its child), so
+  the wave -> lowering -> unit -> kernel/cache hierarchy falls out of
+  the call structure.
+- async spans — ``ph: "b"``/``"e"`` nestable pairs keyed by ``id``; used
+  for per-query lifetimes, which overlap freely across waves.
+- instants — ``ph: "i"``; trace-time kernel dispatch notes and other
+  point events.
+
+``export_chrome`` writes the ``{"traceEvents": [...]}`` JSON Perfetto
+and ``chrome://tracing`` load directly; ``export_jsonl`` writes one
+event per line for ad-hoc tooling.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+
+class Span:
+    """Open-span handle: (name, start ns, args) until ``SpanTracer.end``."""
+
+    __slots__ = ("name", "t0", "args")
+
+    def __init__(self, name: str, t0: int, args: dict):
+        self.name = name
+        self.t0 = t0
+        self.args = args
+
+
+class SpanTracer:
+    def __init__(self):
+        self.events: list[dict] = []
+        self._epoch_ns = time.perf_counter_ns()
+
+    def _ts(self) -> float:
+        """Microseconds since tracer start (the Chrome ``ts`` unit)."""
+        return (time.perf_counter_ns() - self._epoch_ns) / 1e3
+
+    # -------------------------------------------------------- sync spans
+    def begin(self, name: str, **args) -> Span:
+        return Span(name, time.perf_counter_ns(), args)
+
+    def end(self, span: Span, fence=None, **args) -> None:
+        """Close a span; ``fence`` (any pytree of jax arrays) is
+        block_until_ready'd first so the span covers the device work it
+        wraps, not just the dispatch."""
+        if fence is not None:
+            import jax
+
+            jax.block_until_ready(fence)
+        t1 = time.perf_counter_ns()
+        if args:
+            span.args.update(args)
+        self.events.append({
+            "name": span.name, "ph": "X", "pid": 0, "tid": 0,
+            "ts": (span.t0 - self._epoch_ns) / 1e3,
+            "dur": (t1 - span.t0) / 1e3,
+            "args": span.args,
+        })
+
+    def span(self, name: str, fence=None, **args):
+        """Context-manager form of begin/end (same fence semantics)."""
+        return _SpanCtx(self, name, fence, args)
+
+    # ------------------------------------------------------ async spans
+    def begin_async(self, name: str, aid, **args) -> None:
+        self.events.append({
+            "name": name, "ph": "b", "cat": name, "id": int(aid),
+            "pid": 0, "tid": 0, "ts": self._ts(), "args": args,
+        })
+
+    def end_async(self, name: str, aid, **args) -> None:
+        self.events.append({
+            "name": name, "ph": "e", "cat": name, "id": int(aid),
+            "pid": 0, "tid": 0, "ts": self._ts(), "args": args,
+        })
+
+    # ---------------------------------------------------------- instants
+    def instant(self, name: str, **args) -> None:
+        self.events.append({
+            "name": name, "ph": "i", "s": "t", "pid": 0, "tid": 0,
+            "ts": self._ts(), "args": args,
+        })
+
+    # ------------------------------------------------------------- query
+    def count(self, name: str, ph: str | None = None) -> int:
+        """Events named ``name`` (optionally of one phase) — what the
+        metric-invariant tests count."""
+        return sum(1 for e in self.events
+                   if e["name"] == name and (ph is None or e["ph"] == ph))
+
+    def named(self, name: str) -> list[dict]:
+        return [e for e in self.events if e["name"] == name]
+
+    # ------------------------------------------------------------ export
+    def to_chrome(self) -> dict:
+        return {"traceEvents": list(self.events), "displayTimeUnit": "ms"}
+
+    def export_chrome(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_chrome(), f)
+
+    def export_jsonl(self, path: str) -> None:
+        with open(path, "w") as f:
+            for e in self.events:
+                f.write(json.dumps(e) + "\n")
+
+
+class _SpanCtx:
+    __slots__ = ("tracer", "name", "fence", "args", "_span")
+
+    def __init__(self, tracer: SpanTracer, name: str, fence, args: dict):
+        self.tracer = tracer
+        self.name = name
+        self.fence = fence
+        self.args = args
+
+    def __enter__(self) -> Span:
+        self._span = self.tracer.begin(self.name, **self.args)
+        return self._span
+
+    def __exit__(self, *exc) -> None:
+        self.tracer.end(self._span, fence=self.fence)

@@ -498,6 +498,107 @@ def test_shard_merge_blocks_kway_matches_lexsort():
         np.testing.assert_array_equal(np.asarray(acc_v), np.asarray(want_v))
 
 
+def test_shard_merge_blocks_nonpow2_padded_schedule():
+    """Unit-level pin of the *padded* non-pow2 merge schedule (no mesh):
+    fold the ``rem = n - base`` extra blocks into the low devices with a
+    pre-round merge (empty partner for devices without an extra), then
+    tree-merge the power-of-two core — the exact block dataflow
+    ``stepper.gather_merge_kway`` runs via ppermute.  The valid prefix
+    must reproduce the full lexsort byte-for-byte and the overhang must
+    be all-invalid."""
+    from repro.core import stepper
+
+    jnp = jax.numpy
+    rng = np.random.default_rng(11)
+    sort_cols = (0, 1)
+    for n_blocks in (3, 5, 6):
+        cap = 64
+        trim = 32  # truncating trim: lost rows + blanked tails in play
+        blocks = []
+        base_id = 0
+        for _ in range(n_blocks):
+            n_valid = int(rng.integers(0, cap + 1))
+            rows = np.full((cap, 3), -1, np.int32)
+            rows[:n_valid, 0] = np.sort(rng.integers(0, 40, n_valid))
+            rows[:n_valid, 1] = base_id + np.arange(n_valid)
+            rows[:n_valid, 2] = rng.integers(0, 1000, n_valid)
+            base_id += n_valid
+            valid = np.arange(cap) < n_valid
+            blocks.append((rows, valid))
+        trimmed = [stepper._trim_block(jnp.asarray(r), jnp.asarray(v), trim)
+                   for r, v in blocks]
+        base_n = 1 << (n_blocks.bit_length() - 1)
+        rem = n_blocks - base_n
+        assert rem > 0 or n_blocks == base_n
+        empty_r = jnp.full((trim, 3), -1, jnp.int32)
+        empty_v = jnp.zeros((trim,), bool)
+        # pre-round: fold extras into devices 0..rem-1, empty partners
+        # for the rest (what a non-recipient's re-blanked zeros become)
+        eff = [stepper.merge_sorted_blocks(
+                   trimmed[i][0], trimmed[i][1],
+                   trimmed[base_n + i][0] if i < rem else empty_r,
+                   trimmed[base_n + i][1] if i < rem else empty_v,
+                   sort_cols)
+               for i in range(base_n)]
+        # pow2 core: tree merge (content-equivalent to recursive doubling)
+        while len(eff) > 1:
+            eff = [stepper.merge_sorted_blocks(eff[2 * i][0], eff[2 * i][1],
+                                               eff[2 * i + 1][0],
+                                               eff[2 * i + 1][1], sort_cols)
+                   for i in range(len(eff) // 2)]
+        got_r, got_v = np.asarray(eff[0][0]), np.asarray(eff[0][1])
+        gathered_r = np.concatenate([np.asarray(r) for r, _, _ in trimmed])
+        gathered_v = np.concatenate([np.asarray(v) for _, v, _ in trimmed])
+        want_r, want_v = stepper.lexsort_rows(jnp.asarray(gathered_r),
+                                              jnp.asarray(gathered_v),
+                                              sort_cols)
+        n_g = n_blocks * trim
+        assert got_r.shape[0] >= n_g, n_blocks
+        np.testing.assert_array_equal(got_r[:n_g], np.asarray(want_r))
+        np.testing.assert_array_equal(got_v[:n_g], np.asarray(want_v))
+        assert not got_v[n_g:].any(), n_blocks
+
+
+def test_sharded_nonpow2_shard_counts_byte_identical(watdiv_small,
+                                                     all_queries,
+                                                     serial_results):
+    """Non-power-of-two shard counts run the padded k-way schedule (no
+    lexsort fallback) and stay byte-identical to the serial path.  Runs
+    a data=3 x model=2 mesh over six devices (and data=6 x model=1), so
+    it needs >= 6 visible devices — the CI dist job's forced-host-device
+    run."""
+    n_dev = len(jax.devices())
+    if n_dev < 6:
+        pytest.skip("needs >= 6 devices for a non-pow2 shard axis")
+    _, store = watdiv_small
+    qs = all_queries[:4]
+    cfg = EngineConfig(interface="spf", cap=2048)
+    meshes = [(3, 2, jax.sharding.Mesh(
+                  np.array(jax.devices()[:6]).reshape(3, 2),
+                  ("data", "model")))]
+    meshes.append((6, 1, jax.sharding.Mesh(
+        np.array(jax.devices()[:6]).reshape(6, 1), ("data", "model"))))
+    for n_shards, slots, mesh in meshes:
+        for merge in ("auto", "kway", "lexsort"):
+            sched = QueryScheduler(
+                store, cfg,
+                SchedulerConfig(lanes=8, collapse_duplicates=False,
+                                shard_merge=merge),
+                mesh=mesh, data_axis="data")
+            served = sched.serve(interleave_clients(qs, slots))
+            serial = [serial_results["spf"][i // slots]
+                      for i in range(len(served))]
+            _assert_equivalent(serial, [t for t, _ in served],
+                               [s for _, s in served],
+                               ("shard-nonpow2", merge, n_shards))
+            assert sched.metrics.shard_steps > 0, (merge, n_shards)
+            if merge == "lexsort":
+                # the explicit fallback is never silent
+                assert sched.metrics.merge_lexsort_steps > 0
+            else:
+                assert sched.metrics.merge_lexsort_steps == 0
+
+
 def test_shard_count_invariant_digests_share_cache(watdiv_small, all_queries,
                                                    serial_results):
     """``fingerprint_rows`` digests are a pure function of the valid
