@@ -204,6 +204,91 @@ def capacity_planner_vs_blind(load: str = "union", n_queries: int | None = None,
     }
 
 
+def endpoint_serve(load: str, n_clients: int, interface: str = "endpoint",
+                   lanes: int = 16, wave_budget: int = 64):
+    """One ``fig_endpoint`` measurement point: the full front door.
+
+    ``n_clients`` async clients each submit the load *as SPARQL text*
+    through ``EndpointService`` (parse -> star decomposition -> scheduler
+    waves).  The measured scheduler is a **fresh** one hydrated from a
+    ``CacheServiceStub`` warmed by a donor scheduler — every fragment it
+    serves from cache crossed the wire format, which is exactly the
+    out-of-process cache-service deployment the endpoint targets.  The
+    donor pass also pays all compile cost, so the measured wall is warm.
+
+    Returns a record with measured queries/min, request-latency p50/p99
+    (from the obs-gated ``endpoint.latency_s`` histogram, registry-only
+    observability — no tracer fences), the cache-service hit rate and
+    interface NRS/NTB — all read from ``sched.snapshot()`` diffs over
+    the measured pass, plus the byte-identity flag against the serial
+    engine.
+    """
+    import numpy as np
+
+    from repro import obs
+    from repro.core import results_as_numpy
+    from repro.endpoint import CacheServiceStub, to_sparql
+    from repro.endpoint.service import (EndpointRequest, EndpointService,
+                                        ServiceConfig)
+
+    qs = bench_load(load)
+    _, store = bench_graph()
+    cfg = EngineConfig(interface=interface)
+    # cap_hints off keeps request keys identical between the donor and
+    # the hydrated scheduler (the cache-service sharing configuration)
+    scfg = SchedulerConfig(lanes=lanes, cap_hints=False)
+    svc_cfg = ServiceConfig(max_inflight_per_client=len(qs),
+                            wave_budget=wave_budget)
+    texts = [to_sparql(q) for q in qs]
+    reqs = [EndpointRequest(client=c, sparql=t)
+            for c in range(n_clients) for t in texts]
+
+    # serial reference rows (byte-identity check at the interface)
+    eng = engine(interface)
+    want = {t: results_as_numpy(eng.run(q)[0]) for t, q in zip(texts, qs)}
+
+    # donor: compiles the unit steps, fills cache + HWM, deposits bytes
+    donor = QueryScheduler(store, cfg, scfg)
+    EndpointService(donor, svc_cfg).serve(reqs)
+    stub = CacheServiceStub()
+    service_bytes = stub.deposit(donor.cache, donor.planner,
+                                 epoch=store.epoch)
+
+    # measured: a fresh scheduler hydrated from the cache service
+    sched = QueryScheduler(store, cfg, scfg)
+    stub.hydrate(sched.cache, sched.planner, epoch=store.epoch)
+    svc = EndpointService(sched, svc_cfg)
+    base = sched.snapshot()
+    with obs.tracing(trace=False):  # registry-only: latency, no fences
+        t0 = time.perf_counter()
+        resps = svc.serve(reqs)
+        wall = time.perf_counter() - t0
+    diff = sched.snapshot() - base
+
+    served = diff.scalar("endpoint.served")
+    identical = all(r.status == "ok"
+                    and r.rows.tobytes() == want[req.sparql].tobytes()
+                    for r, req in zip(resps, reqs))
+    hits = diff.scalar("cache.hits") + diff.scalar("cache.shared_hits")
+    probes = hits + diff.scalar("cache.misses")
+    lat = diff.get("endpoint.latency_s", {})
+    return {
+        "load": load, "interface": interface, "clients": n_clients,
+        "requests": len(reqs), "served": served,
+        "rejected": diff.scalar("endpoint.rejected"),
+        "batches": diff.scalar("endpoint.batches"),
+        "wall_s": wall,
+        "queries_per_min": served * 60.0 / wall if wall else 0.0,
+        "latency_p50_s": lat.get("p50", 0.0),
+        "latency_p99_s": lat.get("p99", 0.0),
+        "cache_service_hit_rate": hits / probes if probes else 0.0,
+        "cache_service_bytes": service_bytes,
+        "nrs": diff.scalar("endpoint.nrs"),
+        "ntb": diff.scalar("endpoint.ntb"),
+        "byte_identical": bool(identical),
+    }
+
+
 def sched_mesh_vs_vmap(load: str, n_clients: int, interface: str = "spf",
                        lanes: int = 16):
     """Serve one interleaved multi-client stream through both wave

@@ -63,9 +63,10 @@ from repro.core.patterns import star_decomposition  # noqa: E402
 
 from benchmarks.common import (CLIENTS, INTERFACES, LOADS,  # noqa: E402
                                SCHED_CLIENTS, bench_graph, bench_load,
-                               capacity_planner_vs_blind, engine, load_run,
-                               sched_mesh_vs_vmap, sched_shard_vs_replicated,
-                               sched_vs_serial, timed_run)
+                               capacity_planner_vs_blind, endpoint_serve,
+                               engine, load_run, sched_mesh_vs_vmap,
+                               sched_shard_vs_replicated, sched_vs_serial,
+                               timed_run)
 
 
 def emit(name: str, us_per_call: float, derived: str) -> None:
@@ -711,9 +712,51 @@ def fig_sched_trace() -> None:
     print(f"# wrote {out} ({len(tracer.events)} events)", file=sys.stderr)
 
 
+# ------------------------------------------------- the endpoint front door
+
+def fig_endpoint() -> None:
+    """Measured serving through the full SPF front door: SPARQL text in,
+    parse -> star decomposition -> async endpoint loop -> scheduler
+    waves, with the measured scheduler hydrated over the wire from a
+    ``CacheServiceStub`` (the out-of-process cache-service deployment).
+    Emits CSV rows and the ``BENCH_endpoint.json`` artifact: queries/min
+    and request-latency p50/p99 vs client count plus the cache-service
+    hit rate, all from ``sched.snapshot()`` diffs.
+
+    Environment knobs (CI smoke runs a single 8-client point):
+      BENCH_ENDPOINT_LOAD     one load name, default "union"
+      BENCH_ENDPOINT_CLIENTS  comma list, default "4,16,64"
+      BENCH_ENDPOINT_JSON     output path, default "BENCH_endpoint.json"
+    """
+    load = os.environ.get("BENCH_ENDPOINT_LOAD", "union")
+    clients = tuple(
+        int(c) for c in os.environ.get("BENCH_ENDPOINT_CLIENTS",
+                                       "4,16,64").split(","))
+    records = []
+    for c in clients:
+        r = endpoint_serve(load, c)
+        r["latency_p50_ms"] = 1e3 * r.pop("latency_p50_s")
+        r["latency_p99_ms"] = 1e3 * r.pop("latency_p99_s")
+        records.append(r)
+        emit(f"fig_endpoint/{load}/clients{c}",
+             1e6 * r["wall_s"] / max(r["requests"], 1),
+             f"queries_per_min={r['queries_per_min']:.1f};"
+             f"p50_ms={r['latency_p50_ms']:.2f};"
+             f"p99_ms={r['latency_p99_ms']:.2f};"
+             f"hit_rate={r['cache_service_hit_rate']:.3f};"
+             f"batches={r['batches']};"
+             f"identical={int(r['byte_identical'])}")
+    out = os.environ.get("BENCH_ENDPOINT_JSON", "BENCH_endpoint.json")
+    with open(out, "w") as f:
+        json.dump({"figure": "fig_endpoint", "records": records}, f,
+                  indent=2)
+    print(f"# wrote {out} ({len(records)} records)", file=sys.stderr)
+
+
 FIGS = [fig4_loadstats, fig5_throughput, fig5f_timeouts, fig6_server_load,
         fig7_network, fig8_latency, fig_sched_throughput, fig_sched_trace,
-        fig_capacity, fig_dist_sched, fig_shard_sched, fig_kernels, kernels]
+        fig_endpoint, fig_capacity, fig_dist_sched, fig_shard_sched,
+        fig_kernels, kernels]
 
 # figures that never touch the WatDiv bench instance
 _STORELESS = (fig_kernels, kernels)

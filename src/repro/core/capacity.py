@@ -317,6 +317,24 @@ class CapacityPlanner:
         return self._get_hwm((plan.signature, plan.consts,
                               ("st", k, n_shards), self.store.epoch))
 
+    # ------------------------------------------------------ wire/service seam
+    def export_hwm(self) -> list:
+        """``(key, cap)`` pairs for ``endpoint.wire`` serialization, LRU
+        order (coldest first — a bounded restore keeps the hottest).  Keys
+        are the nested ``(signature, consts, k | "q" | ("st", k, shards),
+        epoch)`` tuples of ints/strs the observe_* methods build."""
+        return list(self._hwm.items())
+
+    def adopt_hwm(self, key: tuple, cap: int, epoch: int) -> bool:
+        """Restore one HWM record (the cache-service stub's restore path).
+        Records from another store epoch are refused — a stale capacity
+        could latch a too-small (overflow-looping) or wasteful cap.
+        Returns True when stored."""
+        if key[3] != epoch:
+            return False
+        self._put_hwm(key, int(cap))
+        return True
+
     # --------------------------------------------------------------- epoch
     def sync_epoch(self, epoch: int) -> int:
         """Sweep HWM entries from other epochs on first sight of a new one

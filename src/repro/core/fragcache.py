@@ -224,6 +224,7 @@ class CacheStats(RegistryView):
         "insertions",
         "neg_insertions",
         "evictions",
+        "neg_evictions",  # LRU drops from the negative side table
         "stale_evictions",  # entries dropped because their epoch lapsed
         "admission_rejects",  # freq policy kept the victim, refused the new
         "bytes_stored",
@@ -386,7 +387,11 @@ class FragmentCache:
             self.stats.neg_insertions += 1
             while len(self._neg) > self.neg_capacity:
                 self._neg.popitem(last=False)
-                self.stats.evictions += 1
+                # side-table churn is its own instrument: charging it to
+                # the main ``evictions`` counter polluted the eviction
+                # accounting TinyLFU tuning reads (a negative flood looked
+                # like main-cache thrash)
+                self.stats.neg_evictions += 1
             return
         if entry.n_out > self.max_entry_rows or key in self._entries:
             return
@@ -413,6 +418,43 @@ class FragmentCache:
         self._neg.clear()
         self._sketch.clear()
         self.stats.reset()
+
+    # ------------------------------------------------------ wire/service seam
+    def export_state(self) -> tuple[list, list]:
+        """Entries for ``endpoint.wire`` serialization, LRU order (coldest
+        first, so a capacity-bounded restore keeps the hottest): positive
+        ``(key, FragmentEntry)`` pairs and negative ``(key, (overflow, ops,
+        epoch, peak))`` pairs."""
+        return list(self._entries.items()), list(self._neg.items())
+
+    def adopt(self, key: tuple, entry: FragmentEntry, epoch: int = 0) -> bool:
+        """Insert bypassing admission — the restore path of the cache
+        service stub.  A restored entry already earned its slot in the
+        donor process, so the frequency sketch (which saw none of the
+        donor's traffic) must not veto it.  Entries recorded against a
+        different store epoch are refused outright: replaying them would
+        serve stale rows.  Returns True when the entry was stored."""
+        if entry.epoch != epoch:
+            return False
+        if entry.n_out == 0:
+            if key in self._neg:
+                return True
+            self._neg[key] = (entry.overflow, entry.ops, epoch, entry.peak)
+            self.stats.neg_insertions += 1
+            while len(self._neg) > self.neg_capacity:
+                self._neg.popitem(last=False)
+                self.stats.neg_evictions += 1
+            return True
+        if entry.n_out > self.max_entry_rows or key in self._entries:
+            return key in self._entries
+        self._entries[key] = entry
+        self.stats.insertions += 1
+        self.stats.bytes_stored += entry.nbytes
+        while len(self._entries) > self.capacity:
+            _, old = self._entries.popitem(last=False)
+            self.stats.evictions += 1
+            self.stats.bytes_stored -= old.nbytes
+        return True
 
 
 def replay(entry: FragmentEntry, in_rows_valid: np.ndarray, cap: int,

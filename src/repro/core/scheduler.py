@@ -469,8 +469,7 @@ class QueryScheduler:
                                        []).append(job)
         if tr:
             tr.end(dspan)
-        if obs.enabled:
-            self._t_submit.clear()
+        self._t_submit.clear()  # unconditional: no leak across obs toggles
         return results
 
     def _wave_shard_trim(self, jobs: list[_Job], active: list[int],
@@ -869,10 +868,12 @@ class QueryScheduler:
                 nrs_saved=a.nrs_saved, ntb_saved=a.ntb_saved,
             )
             results[job.rids[0]] = (table, stats)
-            if obs.enabled:
-                t1 = time.perf_counter()
-                for rid in job.rids:
-                    t0 = self._t_submit.get(rid)
+            t1 = time.perf_counter() if obs.enabled else 0.0
+            for rid in job.rids:
+                # reap unconditionally: entries recorded while obs was on
+                # must not leak if it is toggled off before the drain
+                t0 = self._t_submit.pop(rid, None)
+                if obs.enabled:
                     if t0 is not None:
                         self.registry.observe("sched.query_latency_s",
                                               t1 - t0)

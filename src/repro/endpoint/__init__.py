@@ -1,0 +1,56 @@
+"""The SPF front door: SPARQL text in, star-decomposed answers out.
+
+Three layers, importable separately:
+
+- ``repro.endpoint.parse`` — dependency-free SPARQL SELECT parser
+  producing ``core.patterns.BGP`` (and the Def. 7 star decomposition);
+- ``repro.endpoint.wire`` — versioned, epoch-tagged byte round-trips
+  for ``FragmentEntry``, the negative side table and ``CapacityPlanner``
+  HWM records (numpy only), plus the out-of-process cache service stub;
+- ``repro.endpoint.service`` — the asyncio endpoint loop in front of
+  ``QueryScheduler`` (admission control, fair wave packing, interface
+  NRS/NTB accounting).
+
+The service layer pulls in the scheduler (and jax), so this package
+re-exports it lazily: ``from repro.endpoint import parse_select`` stays
+device-free.
+"""
+
+from repro.endpoint.parse import (  # noqa: F401
+    ParsedQuery,
+    SPARQLParseError,
+    parse_select,
+    to_sparql,
+)
+from repro.endpoint.wire import (  # noqa: F401
+    CacheServiceStub,
+    WireEpochError,
+    WireError,
+    WireVersionError,
+    dumps_cache,
+    dumps_entry,
+    dumps_hwm,
+    loads_cache,
+    loads_entry,
+    loads_hwm,
+    restore_cache,
+    restore_hwm,
+)
+
+_SERVICE = ("EndpointService", "EndpointRequest", "EndpointResponse",
+            "EndpointStats", "ServiceConfig")
+
+__all__ = [
+    "ParsedQuery", "SPARQLParseError", "parse_select", "to_sparql",
+    "CacheServiceStub", "WireError", "WireVersionError", "WireEpochError",
+    "dumps_entry", "loads_entry", "dumps_cache", "loads_cache",
+    "restore_cache", "dumps_hwm", "loads_hwm", "restore_hwm",
+    *_SERVICE,
+]
+
+
+def __getattr__(name: str):
+    if name in _SERVICE:
+        from repro.endpoint import service
+        return getattr(service, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

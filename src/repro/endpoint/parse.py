@@ -1,0 +1,287 @@
+"""Minimal SPARQL SELECT parser: query text -> ``core.patterns.BGP``.
+
+The SPF interface of the paper is an *endpoint*: clients send SPARQL and
+the server decomposes it into star-shaped subqueries (Definition 7).
+This module is the text half of that front door — a dependency-free
+tokenizer and recursive-descent parser for the SELECT fragment the
+repo's engines evaluate:
+
+    [PREFIX pfx: <iri>]*
+    SELECT [DISTINCT] (* | ?var ...)
+    WHERE { triple ( . | ; | , ...) ... }
+    [LIMIT n]
+
+Supported term forms:
+
+- variables: ``?name`` / ``$name``;
+- integer-id constants: ``<42>``, a bare ``42``, or any IRI whose local
+  name (after the last ``/``, ``#`` or ``:``) is an integer — the stores
+  in this repo are dictionary-encoded, so SPARQL constants must resolve
+  to term ids.  IRIs/literals with non-numeric local names resolve
+  through an optional ``term_ids`` mapping (lexical form -> id), the
+  seam a real dictionary would plug into.
+- predicate-object lists (``;``) and object lists (``,``), so star
+  patterns can be written the way SPARQL idiom writes stars.
+
+Variables are numbered by first appearance in the WHERE clause (subject,
+predicate, object order within each triple) — exactly how the repo's
+hand-built ``BGP`` fixtures number them, so a parsed query's
+``QueryPlan.signature`` matches the hand-built plan's and the scheduler
+buckets them together.
+
+Like ``core.patterns`` this module is import-light on purpose (no jax,
+no numpy): the endpoint service imports the heavy scheduler lazily.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+
+from repro.core.patterns import BGP, C, StarPattern, Term, TriplePattern, V, \
+    star_decomposition
+
+
+class SPARQLParseError(ValueError):
+    """Raised for any lexical, syntactic or term-resolution failure."""
+
+
+# token kinds: punctuation, IRIs, variables, prefixed names, numbers,
+# string literals, bare words (keywords)
+_TOKEN_RE = re.compile(r"""
+    (?P<ws>\s+|\#[^\n]*)
+  | (?P<iri><[^<>\s]*>)
+  | (?P<var>[?$][A-Za-z_][A-Za-z0-9_]*)
+  | (?P<pname>[A-Za-z_][A-Za-z0-9_.-]*:[A-Za-z0-9_.-]*)
+  | (?P<num>-?[0-9]+)
+  | (?P<str>"(?:[^"\\]|\\.)*")
+  | (?P<word>[A-Za-z_][A-Za-z0-9_]*)
+  | (?P<punct>[{}().;,*])
+""", re.VERBOSE)
+
+_LOCAL_RE = re.compile(r"[/#:]([0-9]+)$|^([0-9]+)$")
+
+
+def _tokenize(text: str) -> list[str]:
+    out: list[str] = []
+    pos = 0
+    while pos < len(text):
+        m = _TOKEN_RE.match(text, pos)
+        if m is None:
+            raise SPARQLParseError(
+                f"unexpected character {text[pos]!r} at offset {pos}")
+        pos = m.end()
+        if m.lastgroup != "ws":
+            out.append(m.group())
+    return out
+
+
+@dataclass(frozen=True)
+class ParsedQuery:
+    """A parsed SELECT query, decomposition-ready.
+
+    ``bgp`` is the WHERE clause with variables numbered by first
+    appearance; ``var_names[i]`` is the source name of variable ``i``;
+    ``select`` holds the projected variable ids in projection order
+    (every variable, for ``SELECT *``)."""
+
+    bgp: BGP
+    var_names: tuple[str, ...]
+    select: tuple[int, ...]
+    distinct: bool = False
+    limit: int | None = None
+
+    @property
+    def stars(self) -> list[StarPattern]:
+        """The paper's Def. 7 star decomposition of the WHERE clause."""
+        return star_decomposition(self.bgp)
+
+
+class _Parser:
+    def __init__(self, tokens: list[str], term_ids: dict | None):
+        self.toks = tokens
+        self.i = 0
+        self.term_ids = term_ids or {}
+        self.prefixes: dict[str, str] = {}
+        self.var_ids: dict[str, int] = {}
+        self.var_names: list[str] = []
+
+    # ------------------------------------------------------------- cursor
+    def peek(self) -> str | None:
+        return self.toks[self.i] if self.i < len(self.toks) else None
+
+    def next(self) -> str:
+        tok = self.peek()
+        if tok is None:
+            raise SPARQLParseError("unexpected end of query")
+        self.i += 1
+        return tok
+
+    def expect(self, want: str) -> None:
+        tok = self.next()
+        if tok.upper() != want.upper():
+            raise SPARQLParseError(f"expected {want!r}, got {tok!r}")
+
+    def at_keyword(self, word: str) -> bool:
+        tok = self.peek()
+        return tok is not None and tok.upper() == word.upper()
+
+    # -------------------------------------------------------------- terms
+    def _resolve_const(self, lex: str) -> Term:
+        """Map a constant's lexical form to a dictionary-encoded term."""
+        if lex in self.term_ids:
+            return C(int(self.term_ids[lex]))
+        body = lex[1:-1] if lex.startswith("<") else lex
+        if body in self.term_ids:
+            return C(int(self.term_ids[body]))
+        m = _LOCAL_RE.search(body)
+        if m is not None:
+            return C(int(m.group(1) or m.group(2)))
+        raise SPARQLParseError(
+            f"cannot resolve constant {lex!r} to a term id (no numeric "
+            f"local name and not in term_ids)")
+
+    def _var(self, tok: str) -> Term:
+        name = tok[1:]
+        vid = self.var_ids.get(name)
+        if vid is None:
+            vid = self.var_ids[name] = len(self.var_names)
+            self.var_names.append(name)
+        return V(vid)
+
+    def term(self) -> Term:
+        tok = self.next()
+        if tok[0] in "?$":
+            return self._var(tok)
+        if tok.startswith("<"):
+            return self._resolve_const(tok)
+        if tok.startswith('"'):
+            return self._resolve_const(tok[1:-1])
+        if re.fullmatch(r"-?[0-9]+", tok):
+            return C(int(tok))
+        if ":" in tok:  # prefixed name -> expand, then resolve
+            pfx, local = tok.split(":", 1)
+            if pfx in self.prefixes:
+                return self._resolve_const(f"<{self.prefixes[pfx]}{local}>")
+            return self._resolve_const(tok)
+        raise SPARQLParseError(f"expected a term, got {tok!r}")
+
+    # ------------------------------------------------------------ clauses
+    def prologue(self) -> None:
+        while self.at_keyword("PREFIX"):
+            self.next()
+            pname = self.next()
+            if not pname.endswith(":"):
+                raise SPARQLParseError(
+                    f"PREFIX name must end with ':', got {pname!r}")
+            iri = self.next()
+            if not (iri.startswith("<") and iri.endswith(">")):
+                raise SPARQLParseError(
+                    f"PREFIX target must be an <iri>, got {iri!r}")
+            self.prefixes[pname[:-1]] = iri[1:-1]
+
+    def projection(self) -> tuple[bool, list[str] | None]:
+        self.expect("SELECT")
+        distinct = False
+        if self.at_keyword("DISTINCT"):
+            self.next()
+            distinct = True
+        if self.peek() == "*":
+            self.next()
+            return distinct, None
+        names: list[str] = []
+        while (tok := self.peek()) is not None and tok[0] in "?$":
+            names.append(self.next()[1:])
+        if not names:
+            raise SPARQLParseError("SELECT needs '*' or at least one ?var")
+        return distinct, names
+
+    def group_graph_pattern(self) -> list[TriplePattern]:
+        self.expect("{")
+        patterns: list[TriplePattern] = []
+        while self.peek() != "}":
+            s = self.term()
+            while True:  # predicate-object list (';' continues the subject)
+                p = self.term()
+                while True:  # object list (',' continues the predicate)
+                    o = self.term()
+                    patterns.append(TriplePattern(s, p, o))
+                    if self.peek() == ",":
+                        self.next()
+                        continue
+                    break
+                if self.peek() == ";":
+                    self.next()
+                    if self.peek() in ("}", "."):  # trailing ';' is legal
+                        break
+                    continue
+                break
+            if self.peek() == ".":
+                self.next()
+        self.expect("}")
+        if not patterns:
+            raise SPARQLParseError("empty WHERE group")
+        return patterns
+
+    def solution_modifiers(self) -> int | None:
+        limit = None
+        if self.at_keyword("LIMIT"):
+            self.next()
+            tok = self.next()
+            if not re.fullmatch(r"[0-9]+", tok):
+                raise SPARQLParseError(f"LIMIT needs an integer, got {tok!r}")
+            limit = int(tok)
+        if self.peek() is not None:
+            raise SPARQLParseError(
+                f"trailing tokens after query: {self.peek()!r}")
+        return limit
+
+    def query(self) -> ParsedQuery:
+        self.prologue()
+        distinct, names = self.projection()
+        if self.at_keyword("WHERE"):
+            self.next()
+        patterns = self.group_graph_pattern()
+        limit = self.solution_modifiers()
+        if names is None:
+            select = tuple(range(len(self.var_names)))
+        else:
+            missing = [n for n in names if n not in self.var_ids]
+            if missing:
+                raise SPARQLParseError(
+                    f"projected variables never used in WHERE: {missing}")
+            select = tuple(self.var_ids[n] for n in names)
+        bgp = BGP(tuple(patterns), len(self.var_names))
+        return ParsedQuery(bgp, tuple(self.var_names), select,
+                           distinct, limit)
+
+
+def parse_select(text: str, term_ids: dict | None = None) -> ParsedQuery:
+    """Parse a SPARQL SELECT query into a :class:`ParsedQuery`.
+
+    ``term_ids`` optionally maps constant lexical forms (IRIs with or
+    without angle brackets, literal bodies, prefixed names) to dictionary
+    ids; constants with integer local names resolve without it.
+    """
+    return _Parser(_tokenize(text), term_ids).query()
+
+
+def to_sparql(bgp: BGP, var_names: tuple[str, ...] | None = None) -> str:
+    """Render a BGP back to SPARQL text such that
+    ``parse_select(to_sparql(bgp)).bgp == bgp``.
+
+    Constants print as ``<id>`` IRIs; variable ``i`` prints as ``?v{i}``
+    unless ``var_names`` supplies source names.  Because the repo's BGPs
+    number variables by first appearance, re-parsing assigns every
+    variable its original id.
+    """
+
+    def fmt(t: Term) -> str:
+        if t.is_var:
+            name = var_names[t.id] if var_names else f"v{t.id}"
+            return f"?{name}"
+        return f"<{t.id}>"
+
+    body = " . ".join(f"{fmt(tp.s)} {fmt(tp.p)} {fmt(tp.o)}"
+                      for tp in bgp.patterns)
+    return f"SELECT * WHERE {{ {body} }}"

@@ -1,0 +1,284 @@
+"""Async SPF endpoint: an admission-controlled request loop over the scheduler.
+
+The paper's SPF server is an endpoint: clients POST SPARQL, the server
+parses, star-decomposes and answers.  This module is that loop for the
+repo's serving stack — an asyncio front door in front of
+``QueryScheduler.submit``/``drain``:
+
+- **requests** arrive as SPARQL text (parsed by ``endpoint.parse``) or
+  pre-built ``BGP`` objects, tagged with a client id;
+- **admission control** bounds each client's in-flight requests
+  (``max_inflight_per_client``): past the bound a request is rejected
+  immediately with ``status="rejected"`` instead of growing the queue —
+  one flooding client cannot occupy the whole service;
+- **fair wave packing**: when more requests wait than one scheduler
+  drain should absorb (``wave_budget``), the batch is packed round-robin
+  across clients in arrival order, so under overload every client makes
+  progress proportional to its share of distinct turns, not its request
+  volume;
+- **interface accounting**: responses carry the query's ``QueryStats``
+  and the service sums NRS/NTB at the interface into ``endpoint.*``
+  instruments mounted on the scheduler's registry, so
+  ``sched.snapshot()`` diffs cover the endpoint exactly like the
+  scheduler/cache/planner tiers.
+
+The scheduler drain itself runs in a worker thread
+(``run_in_executor``), so the event loop keeps accepting (and
+admission-rejecting) requests while a wave computes.
+
+Observability follows the repo's split: counts are per-service
+``RegistryView`` instruments that tally regardless; latency histograms
+(``endpoint.queue_wait_s``, ``endpoint.latency_s``) and the
+``endpoint.batch`` / ``endpoint.request`` spans are recorded only when
+``obs.enabled`` — and the tracer module stays unimported when tracing is
+off (the CI import guard covers this module too).
+"""
+
+from __future__ import annotations
+
+import asyncio
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro import obs
+from repro.core.engine import QueryStats, results_as_numpy
+from repro.core.patterns import BGP
+from repro.endpoint.parse import SPARQLParseError, parse_select
+
+
+class EndpointStats(obs.RegistryView):
+    """Interface-level tallies as ``endpoint.*`` registry instruments."""
+
+    _PREFIX = "endpoint"
+    _FIELDS = (
+        "requests",  # everything that reached the front door
+        "served",  # answered with rows
+        "rejected",  # refused by per-client admission control
+        "parse_errors",
+        "batches",  # scheduler drains issued
+        "nrs",  # requests sent past the interface (sum of QueryStats.nrs)
+        "ntb",  # bytes transferred past the interface (sum of .ntb)
+    )
+
+
+@dataclass(frozen=True)
+class EndpointRequest:
+    """One client request: SPARQL text or a pre-built BGP."""
+
+    client: int
+    sparql: str | None = None
+    query: BGP | None = None
+
+    def __post_init__(self):
+        if (self.sparql is None) == (self.query is None):
+            raise ValueError("exactly one of sparql/query must be given")
+
+
+@dataclass
+class EndpointResponse:
+    """The answer: rows + the same interface accounting ``QueryStats``
+    carries, so endpoint NRS/NTB aggregate exactly like engine runs."""
+
+    client: int
+    status: str  # "ok" | "rejected" | "error"
+    rows: np.ndarray | None = None  # valid result rows [n_results, n_sel]
+    n_results: int = 0
+    nrs: int = 0  # requests the interface cost (1 for an endpoint query)
+    ntb: int = 0  # bytes the interface transferred
+    stats: QueryStats | None = None
+    error: str | None = None
+    latency_s: float = 0.0
+
+
+@dataclass(frozen=True)
+class ServiceConfig:
+    max_inflight_per_client: int = 64  # admission bound, per client
+    wave_budget: int = 256  # max requests packed into one drain
+    term_ids: dict | None = None  # constant resolution for the parser
+
+
+@dataclass
+class _Pending:
+    req: EndpointRequest
+    future: asyncio.Future
+    t_enq: float
+    seq: int
+    bgp: BGP | None = None
+    select: tuple[int, ...] | None = None
+
+
+@dataclass
+class EndpointService:
+    """Asyncio request loop in front of one ``QueryScheduler``."""
+
+    sched: object  # QueryScheduler
+    cfg: ServiceConfig = field(default_factory=ServiceConfig)
+
+    def __post_init__(self):
+        self.stats = EndpointStats(self.sched.registry)
+        self._waiting: list[_Pending] = []
+        self._inflight: dict[int, int] = {}
+        self._arrived: asyncio.Event | None = None
+        self._seq = 0
+
+    # ------------------------------------------------------------ requests
+    async def submit(self, query: str | BGP,
+                     client: int = 0) -> EndpointResponse:
+        """Submit one request; resolves when its wave retires.
+
+        Admission control answers immediately (no queueing) when the
+        client is over its in-flight bound.
+        """
+        req = EndpointRequest(client, sparql=query) \
+            if isinstance(query, str) else EndpointRequest(client, query=query)
+        self.stats.requests += 1
+        if self._inflight.get(client, 0) \
+                >= self.cfg.max_inflight_per_client:
+            self.stats.rejected += 1
+            return EndpointResponse(client, "rejected",
+                                    error="per-client in-flight bound")
+        self._inflight[client] = self._inflight.get(client, 0) + 1
+        pend = _Pending(req, asyncio.get_running_loop().create_future(),
+                        time.perf_counter(), self._seq)
+        self._seq += 1
+        self._waiting.append(pend)
+        if obs.enabled and obs.tracer:
+            obs.tracer.begin_async("endpoint.request", pend.seq,
+                                   client=client)
+        if self._arrived is not None:
+            self._arrived.set()
+        return await pend.future
+
+    # ---------------------------------------------------------- wave packing
+    def _pick_wave(self) -> list[_Pending]:
+        """Round-robin across clients in arrival order, oldest first per
+        client, up to ``wave_budget`` — volume does not buy extra turns."""
+        budget = self.cfg.wave_budget
+        if len(self._waiting) <= budget:
+            wave, self._waiting = self._waiting, []
+            return wave
+        per_client: dict[int, list[_Pending]] = {}
+        order: list[int] = []  # clients by first-waiting arrival
+        for p in self._waiting:
+            if p.req.client not in per_client:
+                per_client[p.req.client] = []
+                order.append(p.req.client)
+            per_client[p.req.client].append(p)
+        wave: list[_Pending] = []
+        while len(wave) < budget:
+            progressed = False
+            for c in order:
+                if per_client[c]:
+                    wave.append(per_client[c].pop(0))
+                    progressed = True
+                    if len(wave) >= budget:
+                        break
+            if not progressed:
+                break
+        leftovers = [p for c in order for p in per_client[c]]
+        leftovers.sort(key=lambda p: p.seq)  # preserve arrival order
+        self._waiting = leftovers
+        return wave
+
+    # ------------------------------------------------------------- serving
+    def _parse(self, pend: _Pending) -> bool:
+        """Resolve the request to a BGP; answers the future on failure."""
+        if pend.req.query is not None:
+            pend.bgp = pend.req.query
+            pend.select = tuple(range(pend.req.query.n_vars))
+            return True
+        try:
+            parsed = parse_select(pend.req.sparql, self.cfg.term_ids)
+        except SPARQLParseError as e:
+            self.stats.parse_errors += 1
+            self._finish(pend, EndpointResponse(
+                pend.req.client, "error", error=str(e)))
+            return False
+        pend.bgp, pend.select = parsed.bgp, parsed.select
+        return True
+
+    def _finish(self, pend: _Pending, resp: EndpointResponse) -> None:
+        resp.latency_s = time.perf_counter() - pend.t_enq
+        self._inflight[pend.req.client] -= 1
+        if obs.enabled:
+            self.sched.registry.observe("endpoint.latency_s", resp.latency_s)
+            if obs.tracer:
+                obs.tracer.end_async("endpoint.request", pend.seq,
+                                     status=resp.status)
+        if not pend.future.done():
+            pend.future.set_result(resp)
+
+    async def _serve_wave(self, wave: list[_Pending]) -> None:
+        t0 = time.perf_counter()
+        live = [p for p in wave if self._parse(p)]
+        if not live:
+            return
+        tr = obs.tracer if obs.enabled else None
+        span = tr.begin("endpoint.batch", requests=len(live)) if tr else None
+        if obs.enabled:
+            for p in live:
+                self.sched.registry.observe("endpoint.queue_wait_s",
+                                            t0 - p.t_enq)
+        rids = [self.sched.submit(p.bgp, client=p.req.client) for p in live]
+        # the drain computes in a worker thread: the event loop keeps
+        # accepting/rejecting requests while the wave runs on device
+        results = await asyncio.get_running_loop().run_in_executor(
+            None, self.sched.drain)
+        self.stats.batches += 1
+        for p, rid in zip(live, rids):
+            table, qstats = results[rid]
+            rows = results_as_numpy(table)
+            if p.select is not None and tuple(p.select) \
+                    != tuple(range(rows.shape[1])):
+                rows = rows[:, list(p.select)]
+            self.stats.served += 1
+            self.stats.nrs += int(qstats.nrs)
+            self.stats.ntb += int(qstats.ntb)
+            self._finish(p, EndpointResponse(
+                p.req.client, "ok", rows=rows,
+                n_results=int(qstats.n_results), nrs=int(qstats.nrs),
+                ntb=int(qstats.ntb), stats=qstats))
+        if tr:
+            tr.end(span)
+
+    async def run(self, until_idle: bool = False) -> None:
+        """The service loop: wait for arrivals, pack a fair wave, serve.
+
+        ``until_idle=True`` returns once the queue is empty (the batch
+        driver used by :meth:`serve` and the benchmarks); otherwise runs
+        until cancelled.
+        """
+        self._arrived = asyncio.Event()
+        while True:
+            if not self._waiting:
+                if until_idle:
+                    return
+                self._arrived.clear()
+                await self._arrived.wait()
+            else:
+                # yield once so concurrently-submitting clients enqueue
+                # before the wave is packed
+                await asyncio.sleep(0)
+            if self._waiting:
+                await self._serve_wave(self._pick_wave())
+
+    def serve(self, requests: list[EndpointRequest]
+              ) -> list[EndpointResponse]:
+        """Synchronous driver: issue ``requests`` concurrently (every
+        client's stream in flight at once), run the loop until idle, and
+        return responses in input order."""
+
+        async def _go():
+            subs = [asyncio.ensure_future(
+                self.submit(r.sparql if r.sparql is not None else r.query,
+                            r.client))
+                    for r in requests]
+            await asyncio.sleep(0)
+            runner = asyncio.ensure_future(self.run(until_idle=True))
+            out = await asyncio.gather(*subs)
+            await runner
+            return list(out)
+
+        return asyncio.run(_go())

@@ -1,0 +1,373 @@
+"""Wire format for the pod cache: fragment/HWM state as versioned bytes.
+
+PR 2-7 built a pod-shared ``FragmentCache`` and ``CapacityPlanner`` whose
+sharing story was *in-process object sharing* — every scheduler in a
+``DistributedEngine`` holds the same Python object.  This module is the
+seam that removes that caveat: the cache's entries (positive and the
+negative side table) and the planner's high-water-mark records serialize
+to self-describing bytes that a *different process* can adopt, so an
+out-of-process cache service can warm any number of scheduler processes.
+
+Format
+------
+Every blob starts with a fixed header::
+
+    magic  b"SPFW"  | version u16 | kind u8 | store epoch i64
+
+followed by kind-specific records.  Two safety properties are load-time
+checks, not conventions:
+
+- **versioned**: a blob whose version differs from ``WIRE_VERSION`` is
+  rejected (``WireVersionError``) — a format change can never be
+  half-read into a live cache;
+- **epoch-tagged**: the header carries the store epoch the state was
+  recorded against, ``restore_*`` callers present their store's current
+  epoch, and a mismatch is rejected (``WireEpochError``) before any
+  record is materialised.  Per-record epochs are additionally re-checked
+  by the ``adopt`` seams, so a stale fragment is never replayed.
+
+Values are encoded with a small tagged scheme (ints, strings, bytes,
+bools, None, floats, tuples) because cache keys and HWM keys are nested
+tuples — plan signatures, constant values, ``("st", k, shards)`` marks,
+digest bytes.  Arrays carry dtype + shape and restore byte-identically.
+This module needs numpy only (no jax): the cache service stub must be
+importable in a process that never touches a device.
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+from repro.core.fragcache import _EMPTY_SRC, _EMPTY_WRITTEN, FragmentCache, \
+    FragmentEntry
+
+WIRE_MAGIC = b"SPFW"
+WIRE_VERSION = 1
+
+# header kinds
+KIND_CACHE = 1  # fragment cache state (positive + negative entries)
+KIND_HWM = 2  # capacity-planner high-water-mark records
+KIND_ENTRY = 3  # one standalone (key, FragmentEntry) record
+
+
+class WireError(ValueError):
+    """Malformed bytes: bad magic, truncation, unknown tags."""
+
+
+class WireVersionError(WireError):
+    """Blob written by a different wire format version."""
+
+
+class WireEpochError(WireError):
+    """Blob recorded against a different store epoch."""
+
+
+# --------------------------------------------------------------------------
+# tagged value encoding (the nested-tuple keys)
+# --------------------------------------------------------------------------
+
+_T_NONE, _T_FALSE, _T_TRUE, _T_INT, _T_FLOAT = 0, 1, 2, 3, 4
+_T_STR, _T_BYTES, _T_TUPLE = 5, 6, 7
+
+
+def _pack_obj(obj, out: bytearray) -> None:
+    if obj is None:
+        out.append(_T_NONE)
+    elif obj is False:
+        out.append(_T_FALSE)
+    elif obj is True:
+        out.append(_T_TRUE)
+    elif isinstance(obj, (int, np.integer)):
+        out.append(_T_INT)
+        body = int(obj).to_bytes(
+            (int(obj).bit_length() + 8) // 8 or 1, "little", signed=True)
+        out += struct.pack("<I", len(body))
+        out += body
+    elif isinstance(obj, (float, np.floating)):
+        out.append(_T_FLOAT)
+        out += struct.pack("<d", float(obj))
+    elif isinstance(obj, str):
+        body = obj.encode("utf-8")
+        out.append(_T_STR)
+        out += struct.pack("<I", len(body))
+        out += body
+    elif isinstance(obj, bytes):
+        out.append(_T_BYTES)
+        out += struct.pack("<I", len(obj))
+        out += obj
+    elif isinstance(obj, tuple):
+        out.append(_T_TUPLE)
+        out += struct.pack("<I", len(obj))
+        for x in obj:
+            _pack_obj(x, out)
+    else:
+        raise WireError(f"unencodable value of type {type(obj).__name__}")
+
+
+def _unpack_obj(data: bytes, pos: int):
+    if pos >= len(data):
+        raise WireError("truncated value")
+    tag = data[pos]
+    pos += 1
+    if tag == _T_NONE:
+        return None, pos
+    if tag == _T_FALSE:
+        return False, pos
+    if tag == _T_TRUE:
+        return True, pos
+    if tag == _T_FLOAT:
+        (v,) = struct.unpack_from("<d", data, pos)
+        return v, pos + 8
+    if tag in (_T_INT, _T_STR, _T_BYTES, _T_TUPLE):
+        (n,) = struct.unpack_from("<I", data, pos)
+        pos += 4
+        if tag == _T_TUPLE:
+            items = []
+            for _ in range(n):
+                v, pos = _unpack_obj(data, pos)
+                items.append(v)
+            return tuple(items), pos
+        body = data[pos:pos + n]
+        if len(body) != n:
+            raise WireError("truncated value body")
+        pos += n
+        if tag == _T_INT:
+            return int.from_bytes(body, "little", signed=True), pos
+        if tag == _T_STR:
+            return body.decode("utf-8"), pos
+        return bytes(body), pos
+    raise WireError(f"unknown value tag {tag}")
+
+
+def _pack_array(a: np.ndarray, out: bytearray) -> None:
+    a = np.ascontiguousarray(a)
+    _pack_obj(a.dtype.str, out)  # byte-order-explicit dtype string
+    _pack_obj(tuple(int(d) for d in a.shape), out)
+    _pack_obj(a.tobytes(), out)
+
+
+def _unpack_array(data: bytes, pos: int):
+    dtype, pos = _unpack_obj(data, pos)
+    shape, pos = _unpack_obj(data, pos)
+    raw, pos = _unpack_obj(data, pos)
+    try:
+        arr = np.frombuffer(raw, dtype=np.dtype(dtype)).reshape(shape).copy()
+    except (TypeError, ValueError) as e:
+        raise WireError(f"bad array record: {e}") from None
+    return arr, pos
+
+
+# --------------------------------------------------------------------------
+# header
+# --------------------------------------------------------------------------
+
+_HEADER = struct.Struct("<4sHBq")
+
+
+def _pack_header(kind: int, epoch: int) -> bytearray:
+    return bytearray(_HEADER.pack(WIRE_MAGIC, WIRE_VERSION, kind, epoch))
+
+
+def _check_header(data: bytes, kind: int,
+                  expect_epoch: int | None) -> tuple[int, int]:
+    """Validate magic/version/kind/epoch; returns (epoch, payload offset)."""
+    if len(data) < _HEADER.size:
+        raise WireError("blob shorter than header")
+    magic, version, k, epoch = _HEADER.unpack_from(data, 0)
+    if magic != WIRE_MAGIC:
+        raise WireError(f"bad magic {magic!r}")
+    if version != WIRE_VERSION:
+        raise WireVersionError(
+            f"wire version {version} != supported {WIRE_VERSION}")
+    if k != kind:
+        raise WireError(f"blob kind {k} != expected {kind}")
+    if expect_epoch is not None and epoch != expect_epoch:
+        raise WireEpochError(
+            f"blob recorded at store epoch {epoch}, reader is at "
+            f"{expect_epoch} — refusing to replay stale fragments")
+    return epoch, _HEADER.size
+
+
+# --------------------------------------------------------------------------
+# FragmentEntry records
+# --------------------------------------------------------------------------
+
+def _pack_entry(key: tuple, entry: FragmentEntry, out: bytearray) -> None:
+    _pack_obj(key, out)
+    _pack_array(entry.src_row, out)
+    _pack_array(entry.written, out)
+    _pack_obj(bool(entry.overflow), out)
+    _pack_obj(int(entry.ops), out)
+    _pack_obj(int(entry.epoch), out)
+    _pack_obj(int(entry.peak), out)
+
+
+def _unpack_entry(data: bytes, pos: int):
+    key, pos = _unpack_obj(data, pos)
+    src_row, pos = _unpack_array(data, pos)
+    written, pos = _unpack_array(data, pos)
+    overflow, pos = _unpack_obj(data, pos)
+    ops, pos = _unpack_obj(data, pos)
+    epoch, pos = _unpack_obj(data, pos)
+    peak, pos = _unpack_obj(data, pos)
+    return key, FragmentEntry(src_row, written, bool(overflow), int(ops),
+                              int(epoch), int(peak)), pos
+
+
+def dumps_entry(key: tuple, entry: FragmentEntry) -> bytes:
+    """One standalone ``(key, FragmentEntry)`` record (service protocol
+    unit: a cache-service response is exactly one of these)."""
+    out = _pack_header(KIND_ENTRY, int(entry.epoch))
+    _pack_entry(key, entry, out)
+    return bytes(out)
+
+
+def loads_entry(data: bytes,
+                expect_epoch: int | None = None
+                ) -> tuple[tuple, FragmentEntry]:
+    _, pos = _check_header(data, KIND_ENTRY, expect_epoch)
+    key, entry, pos = _unpack_entry(data, pos)
+    if pos != len(data):
+        raise WireError("trailing bytes after entry record")
+    return key, entry
+
+
+# --------------------------------------------------------------------------
+# whole-cache state
+# --------------------------------------------------------------------------
+
+def dumps_cache(cache: FragmentCache, epoch: int) -> bytes:
+    """Serialize a cache's positive entries and negative side table.
+
+    Only entries recorded at ``epoch`` are written: stale entries are
+    dead weight the reader would refuse anyway.
+    """
+    pos_items, neg_items = cache.export_state()
+    pos_items = [(k, e) for k, e in pos_items if e.epoch == epoch]
+    neg_items = [(k, v) for k, v in neg_items if v[2] == epoch]
+    out = _pack_header(KIND_CACHE, epoch)
+    _pack_obj(len(pos_items), out)
+    for k, e in pos_items:
+        _pack_entry(k, e, out)
+    _pack_obj(len(neg_items), out)
+    for k, (overflow, ops, ep, peak) in neg_items:
+        _pack_obj(k, out)
+        _pack_obj((bool(overflow), int(ops), int(ep), int(peak)), out)
+    return bytes(out)
+
+
+def loads_cache(data: bytes, expect_epoch: int | None = None
+                ) -> tuple[list, list]:
+    """Decode cache bytes to ``(positive, negative)`` record lists without
+    touching a live cache (inspection / the service's in-memory copy)."""
+    _, pos = _check_header(data, KIND_CACHE, expect_epoch)
+    n, pos = _unpack_obj(data, pos)
+    positive = []
+    for _ in range(n):
+        k, e, pos = _unpack_entry(data, pos)
+        positive.append((k, e))
+    n, pos = _unpack_obj(data, pos)
+    negative = []
+    for _ in range(n):
+        k, pos = _unpack_obj(data, pos)
+        v, pos = _unpack_obj(data, pos)
+        negative.append((k, v))
+    if pos != len(data):
+        raise WireError("trailing bytes after cache records")
+    return positive, negative
+
+
+def restore_cache(data: bytes, cache: FragmentCache, epoch: int) -> int:
+    """Adopt serialized state into a (fresh) cache at store ``epoch``.
+
+    Raises ``WireVersionError`` / ``WireEpochError`` before touching the
+    cache; returns the number of entries adopted.
+    """
+    positive, negative = loads_cache(data, expect_epoch=epoch)
+    n = 0
+    for k, e in positive:
+        n += bool(cache.adopt(k, e, epoch))
+    for k, (overflow, ops, ep, peak) in negative:
+        e = FragmentEntry(_EMPTY_SRC, _EMPTY_WRITTEN, bool(overflow),
+                          int(ops), int(ep), int(peak))
+        n += bool(cache.adopt(k, e, epoch))
+    return n
+
+
+# --------------------------------------------------------------------------
+# CapacityPlanner high-water marks
+# --------------------------------------------------------------------------
+
+def dumps_hwm(planner, epoch: int) -> bytes:
+    """Serialize a planner's HWM records (current-epoch ones only)."""
+    items = [(k, cap) for k, cap in planner.export_hwm() if k[3] == epoch]
+    out = _pack_header(KIND_HWM, epoch)
+    _pack_obj(len(items), out)
+    for k, cap in items:
+        _pack_obj(k, out)
+        _pack_obj(int(cap), out)
+    return bytes(out)
+
+
+def loads_hwm(data: bytes, expect_epoch: int | None = None) -> list:
+    _, pos = _check_header(data, KIND_HWM, expect_epoch)
+    n, pos = _unpack_obj(data, pos)
+    items = []
+    for _ in range(n):
+        k, pos = _unpack_obj(data, pos)
+        cap, pos = _unpack_obj(data, pos)
+        items.append((k, cap))
+    if pos != len(data):
+        raise WireError("trailing bytes after HWM records")
+    return items
+
+
+def restore_hwm(data: bytes, planner, epoch: int) -> int:
+    """Adopt serialized HWM records into a planner; returns the count."""
+    n = 0
+    for k, cap in loads_hwm(data, expect_epoch=epoch):
+        n += bool(planner.adopt_hwm(k, cap, epoch))
+    return n
+
+
+# --------------------------------------------------------------------------
+# the out-of-process cache service stub
+# --------------------------------------------------------------------------
+
+class CacheServiceStub:
+    """In-memory stand-in for the out-of-process cache service.
+
+    Holds cache + HWM state *as wire bytes* — exactly what the real
+    service would hold — so every deposit/fetch crosses a full
+    serialization boundary even inside one process.  Multiple scheduler
+    processes (or, today, multiple schedulers in one process) share the
+    stub: one warms it via :func:`deposit`, the rest hydrate their own
+    private caches/planners from it via :func:`hydrate`.  A true
+    socket-backed service only has to move these same blobs.
+    """
+
+    def __init__(self):
+        self._cache_blob: bytes | None = None
+        self._hwm_blob: bytes | None = None
+
+    def deposit(self, cache: FragmentCache, planner=None,
+                epoch: int = 0) -> int:
+        """Record a donor's state; returns total blob bytes."""
+        self._cache_blob = dumps_cache(cache, epoch)
+        self._hwm_blob = dumps_hwm(planner, epoch) if planner is not None \
+            else None
+        return len(self._cache_blob) + len(self._hwm_blob or b"")
+
+    def hydrate(self, cache: FragmentCache, planner=None,
+                epoch: int = 0) -> int:
+        """Adopt the recorded state into a fresh cache/planner; returns
+        the number of records adopted.  Version/epoch mismatches raise
+        before anything is adopted."""
+        n = 0
+        if self._cache_blob is not None:
+            n += restore_cache(self._cache_blob, cache, epoch)
+        if self._hwm_blob is not None and planner is not None:
+            n += restore_hwm(self._hwm_blob, planner, epoch)
+        return n

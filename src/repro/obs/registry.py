@@ -52,6 +52,13 @@ def _bucket_edge(idx: int) -> float:
     return math.exp(idx * _BASE_LOG)
 
 
+def _bucket_floor(idx: int) -> float:
+    """Lower edge of bucket ``idx`` — no observation in it is smaller."""
+    if idx == _ZERO_BUCKET:
+        return 0.0
+    return math.exp((idx - 1) * _BASE_LOG)
+
+
 def _quantile(buckets: dict, count: int, q: float) -> float:
     """q-quantile of a bucket-count dict (upper-edge convention)."""
     if count <= 0:
@@ -65,34 +72,57 @@ def _quantile(buckets: dict, count: int, q: float) -> float:
     return _bucket_edge(max(buckets))
 
 
-def _summarize(buckets: dict, count: int, total: float) -> dict:
+def _summarize(buckets: dict, count: int, total: float,
+               vmin: float | None = None,
+               vmax: float | None = None) -> dict:
+    # True extrema when the histogram tracked them; otherwise (interval
+    # diffs, where per-observation extrema are not recoverable from
+    # bucket counts) bound them by the lower edge of the lowest occupied
+    # bucket and the upper edge of the highest — every observation lies
+    # inside [min, max] either way.  The old code used the *upper* edge
+    # for both, so "min" exceeded every observed value.
     lo = min(buckets) if buckets else _ZERO_BUCKET
     hi = max(buckets) if buckets else _ZERO_BUCKET
+    # 1e-9 relative margin: exp(ceil(log v)) round-trips can land a hair
+    # inside the true edge, and a bound that excludes the value it was
+    # computed from is a lie
+    if vmin is None:
+        vmin = _bucket_floor(lo) * (1.0 - 1e-9) if count else 0.0
+    if vmax is None:
+        vmax = _bucket_edge(hi) * (1.0 + 1e-9) if count else 0.0
+    def _clamp(q: float) -> float:
+        return min(max(q, vmin), vmax) if count else q
     return {
         "count": count,
         "sum": total,
-        "min": _bucket_edge(lo),
-        "max": _bucket_edge(hi),
+        "min": vmin,
+        "max": vmax,
         "mean": total / count if count else 0.0,
-        "p50": _quantile(buckets, count, 0.50),
-        "p95": _quantile(buckets, count, 0.95),
-        "p99": _quantile(buckets, count, 0.99),
+        "p50": _clamp(_quantile(buckets, count, 0.50)),
+        "p95": _clamp(_quantile(buckets, count, 0.95)),
+        "p99": _clamp(_quantile(buckets, count, 0.99)),
         "buckets": dict(buckets),
     }
 
 
 class _Histogram:
-    __slots__ = ("count", "total", "buckets")
+    __slots__ = ("count", "total", "buckets", "vmin", "vmax")
 
     def __init__(self):
         self.count = 0
         self.total = 0.0
         self.buckets: dict[int, int] = {}
+        self.vmin: float | None = None
+        self.vmax: float | None = None
 
     def observe(self, v: float) -> None:
         v = float(v)
         self.count += 1
         self.total += v
+        if self.vmin is None or v < self.vmin:
+            self.vmin = v
+        if self.vmax is None or v > self.vmax:
+            self.vmax = v
         idx = _bucket_index(v)
         self.buckets[idx] = self.buckets.get(idx, 0) + 1
 
@@ -100,7 +130,8 @@ class _Histogram:
         return _quantile(self.buckets, self.count, q)
 
     def summary(self) -> dict:
-        return _summarize(self.buckets, self.count, self.total)
+        return _summarize(self.buckets, self.count, self.total,
+                          self.vmin, self.vmax)
 
 
 class Snapshot(dict):
@@ -125,7 +156,15 @@ class Snapshot(dict):
                 count = v["count"] - (b["count"] if isinstance(b, dict)
                                       else 0)
                 total = v["sum"] - (b["sum"] if isinstance(b, dict) else 0.0)
-                out[key] = _summarize(buckets, count, total)
+                if not (isinstance(b, dict) and b["count"]):
+                    # empty baseline: the interval IS the endpoint, so its
+                    # true extrema are exact; otherwise they are not
+                    # recoverable from bucket counts and _summarize bounds
+                    # them by the occupied bucket edges.
+                    out[key] = _summarize(buckets, count, total,
+                                          v["min"], v["max"])
+                else:
+                    out[key] = _summarize(buckets, count, total)
             else:
                 out[key] = v - (b if isinstance(b, (int, float)) else 0)
         return out

@@ -133,12 +133,19 @@ def _gen_path_query(rng, g: WatDivGraph, store, cfg: QueryLoadConfig) -> BGP | N
     return BGP(tuple(patterns), next_var)
 
 
+# the paper's five query loads — the only names generate_query_load accepts
+QUERY_LOADS = ("1-star", "2-stars", "3-stars", "paths", "union")
+
+
 def generate_query_load(g: WatDivGraph, store, load: str,
                         cfg: QueryLoadConfig | None = None) -> list[BGP]:
     """Generate one of the paper's query loads.
 
-    ``load`` in {"1-star", "2-stars", "3-stars", "paths", "union"}.
+    ``load`` in ``QUERY_LOADS``.
     """
+    if load not in QUERY_LOADS:
+        raise ValueError(f"unknown query load {load!r}; expected one of "
+                         f"{QUERY_LOADS}")
     cfg = cfg or QueryLoadConfig()
     # deterministic per-load seed (Python's hash() is process-randomised)
     load_tag = zlib.crc32(load.encode()) % 1000

@@ -1,0 +1,473 @@
+"""The SPF front door: parser, wire format, cache service stub, endpoint loop.
+
+Four layers of contract:
+
+- **parser** — a SPARQL SELECT string maps to the same ``BGP`` (hence
+  the same ``QueryPlan.signature``) as the hand-built query, and
+  ``to_sparql`` inverts ``parse_select`` on every generated load.
+- **wire** — property-style round-trips for ``FragmentEntry`` records
+  (random dtypes/shapes), negative side-table entries and planner HWM
+  records; wrong-version and wrong-epoch bytes are rejected before
+  anything is adopted.
+- **cache service stub** — state warmed in one scheduler, serialized,
+  and hydrated into a *fresh* scheduler serves the same load all-hit
+  with byte-identical rows (the acceptance pin for out-of-process
+  sharing).
+- **endpoint loop** — SPARQL in, rows out, byte-identical to serial
+  ``QueryEngine.run``; admission control rejects past the per-client
+  bound; wave packing is round-robin fair; ``endpoint.*`` instruments
+  land in ``sched.snapshot()`` diffs.
+"""
+
+import numpy as np
+import pytest
+
+from _hyp import HAS_HYPOTHESIS, given, settings, st
+
+from repro.core import (
+    EngineConfig,
+    QueryEngine,
+    QueryScheduler,
+    SchedulerConfig,
+    results_as_numpy,
+)
+from repro.core.capacity import CapacityPlanner
+from repro.core.engine import plan_query
+from repro.core.fragcache import FragmentCache, FragmentEntry
+from repro.core.patterns import BGP, C, TriplePattern, V
+from repro.endpoint import (
+    CacheServiceStub,
+    SPARQLParseError,
+    WireEpochError,
+    WireVersionError,
+    parse_select,
+    to_sparql,
+    wire,
+)
+from repro.endpoint.service import (
+    EndpointRequest,
+    EndpointService,
+    ServiceConfig,
+    _Pending,
+)
+from repro.rdf import TripleStore, generate_query_load
+from repro.rdf.queries import QUERY_LOADS, QueryLoadConfig
+
+
+def _tiny_store():
+    s = np.array([0, 0, 1, 1, 2, 2, 3, 3])
+    p = np.array([0, 1, 0, 1, 0, 1, 0, 1])
+    o = np.array([3, 4, 3, 5, 3, 4, 4, 5])
+    return TripleStore.build(s, p, o, n_terms=6, n_predicates=2)
+
+
+def _two_star_bgp() -> BGP:
+    # ?a <0> ?b . ?a <1> ?c . ?b <0> ?d — a 2-star with a path join,
+    # variables numbered by first appearance (the repo convention)
+    return BGP((TriplePattern(V(0), C(0), V(1)),
+                TriplePattern(V(0), C(1), V(2)),
+                TriplePattern(V(1), C(0), V(3))), 4)
+
+
+# --------------------------------------------------------------------------
+# parser
+# --------------------------------------------------------------------------
+
+def test_sparql_maps_to_hand_built_plan_signature():
+    """The acceptance pin's first half: parsed text and the hand-built
+    BGP produce identical plans (same signature -> the scheduler buckets
+    them into one wave)."""
+    store = _tiny_store()
+    bgp = _two_star_bgp()
+    text = """
+        SELECT * WHERE {
+          ?a <0> ?b ; <1> ?c .
+          ?b <0> ?d .
+        }
+    """
+    parsed = parse_select(text)
+    assert parsed.bgp == bgp
+    assert len(parsed.stars) == 2  # Def. 7: grouped by subject term
+    cfg = EngineConfig(interface="spf")
+    assert plan_query(store, parsed.bgp, cfg).signature \
+        == plan_query(store, bgp, cfg).signature
+
+
+def test_sparql_round_trips_through_scheduler_byte_identical():
+    """The acceptance pin, end to end: SPARQL text -> parse -> star
+    decomposition -> scheduler returns byte-identical rows to the same
+    query hand-built as a BGP (and to the serial engine)."""
+    store = _tiny_store()
+    bgp = _two_star_bgp()
+    cfg = EngineConfig(interface="endpoint")
+    table, _ = QueryEngine(store, cfg).run(bgp)
+    want = results_as_numpy(table)
+
+    sched = QueryScheduler(store, cfg)
+    parsed = parse_select(to_sparql(bgp))
+    rid_text = sched.submit(parsed.bgp)
+    rid_hand = sched.submit(bgp)
+    results = sched.drain()
+    got_text = results_as_numpy(results[rid_text][0])
+    got_hand = results_as_numpy(results[rid_hand][0])
+    assert np.array_equal(got_text, want)
+    assert got_text.tobytes() == got_hand.tobytes()
+
+
+def test_parser_term_forms_and_projection():
+    q = parse_select("""
+        PREFIX ex: <http://example.org/id/>
+        SELECT ?a ?c WHERE {
+          ?a ex:0 ?b .
+          ?b <http://example.org/id/1> "2" .
+          ?a <7> 5 , ?c .
+        } LIMIT 9
+    """, term_ids={"2": 2})
+    # vars numbered by first appearance: a=0, b=1, c=2
+    assert q.bgp == BGP((TriplePattern(V(0), C(0), V(1)),
+                         TriplePattern(V(1), C(1), C(2)),
+                         TriplePattern(V(0), C(7), C(5)),
+                         TriplePattern(V(0), C(7), V(2))), 3)
+    assert q.var_names == ("a", "b", "c")
+    assert q.select == (0, 2)
+    assert q.limit == 9
+
+
+@pytest.mark.parametrize("bad", [
+    "ASK { ?s ?p ?o }",  # not SELECT
+    "SELECT * WHERE { ?s <0> }",  # incomplete triple
+    "SELECT * WHERE { ?s <0> ?o",  # unclosed group
+    "SELECT * WHERE { }",  # empty group
+    "SELECT ?x WHERE { ?s <0> ?o }",  # projected var never used
+    "SELECT * WHERE { ?s <http://ex/name> ?o }",  # unresolvable constant
+    "SELECT * WHERE { ?s <0> ?o } LIMIT x",  # bad LIMIT
+    "SELECT * WHERE { ?s <0> ?o } ORDER",  # trailing tokens
+])
+def test_parser_rejects_malformed(bad):
+    with pytest.raises(SPARQLParseError):
+        parse_select(bad)
+
+
+def test_to_sparql_inverts_parse_on_generated_loads(watdiv_small):
+    """Every query of every load prints to text that re-parses to the
+    exact same BGP (generated queries number variables by first
+    appearance, like the parser does)."""
+    g, store = watdiv_small
+    assert QUERY_LOADS == ("1-star", "2-stars", "3-stars", "paths", "union")
+    for load in QUERY_LOADS:
+        for q in generate_query_load(g, store, load,
+                                     QueryLoadConfig(n_queries=3)):
+            assert parse_select(to_sparql(q)).bgp == q
+
+
+def test_generate_query_load_rejects_unknown_name(watdiv_small):
+    g, store = watdiv_small
+    with pytest.raises(ValueError, match="unknown query load"):
+        generate_query_load(g, store, "4-stars")
+
+
+# --------------------------------------------------------------------------
+# wire format
+# --------------------------------------------------------------------------
+
+_KEY_ATOM = st.one_of(
+    st.integers(min_value=-(1 << 70), max_value=1 << 70),
+    st.text(max_size=8),
+    st.binary(max_size=8),
+    st.booleans(),
+    st.none(),
+)
+_KEYS = st.recursive(_KEY_ATOM,
+                     lambda c: st.tuples(c, c) | st.tuples(c, c, c),
+                     max_leaves=8)
+_DTYPES = st.sampled_from(["<i4", "<i8", "<i2", "<u1", "<f4", "<f8"])
+
+
+@st.composite
+def _entries(draw):
+    n = draw(st.integers(min_value=0, max_value=5))
+    w = draw(st.integers(min_value=0, max_value=3))
+    dt = np.dtype(draw(_DTYPES))
+    rng = np.random.default_rng(draw(st.integers(0, 2 ** 32 - 1)))
+    src = (rng.integers(0, 100, size=(n,))).astype(dt)
+    written = (rng.integers(0, 100, size=(n, w))).astype(dt)
+    return FragmentEntry(src, written,
+                         draw(st.booleans()),
+                         draw(st.integers(0, 1 << 40)),
+                         draw(st.integers(0, 7)),
+                         draw(st.integers(0, 1 << 20)))
+
+
+@settings(max_examples=30, deadline=None)
+@given(key=st.tuples(_KEYS, _KEYS), entry=_entries())
+def test_wire_entry_round_trip_any_dtype_shape(key, entry):
+    blob = wire.dumps_entry(key, entry)
+    k2, e2 = wire.loads_entry(blob, expect_epoch=entry.epoch)
+    assert k2 == key
+    assert e2.src_row.dtype == entry.src_row.dtype
+    assert e2.src_row.shape == entry.src_row.shape
+    assert np.array_equal(e2.src_row, entry.src_row)
+    assert np.array_equal(e2.written, entry.written)
+    assert e2.written.tobytes() == entry.written.tobytes()
+    assert (e2.overflow, e2.ops, e2.epoch, e2.peak) \
+        == (entry.overflow, entry.ops, entry.epoch, entry.peak)
+    # wrong-epoch bytes are rejected, never replayed
+    with pytest.raises(WireEpochError):
+        wire.loads_entry(blob, expect_epoch=entry.epoch + 1)
+    # wrong-version bytes are rejected
+    bad = bytearray(blob)
+    bad[4] ^= 0x7F  # version field of the <4sHBq header
+    with pytest.raises(WireVersionError):
+        wire.loads_entry(bytes(bad))
+
+
+def test_wire_cache_round_trip_including_negative_side_table():
+    cache = FragmentCache(capacity=8)
+    pos_entry = FragmentEntry(np.arange(4, dtype=np.int32),
+                              np.arange(8, dtype=np.int32).reshape(4, 2),
+                              False, 11, 0, 17)
+    neg_entry = FragmentEntry(np.zeros((0,), np.int32),
+                              np.zeros((0, 0), np.int32), True, 3, 0, 2)
+    cache.put(("pos", 1), pos_entry, epoch=0)
+    cache.put(("neg", (2, b"d")), neg_entry, epoch=0)
+    blob = wire.dumps_cache(cache, 0)
+
+    fresh = FragmentCache(capacity=8)
+    assert wire.restore_cache(blob, fresh, 0) == 2
+    got = fresh.get(("pos", 1), epoch=0)
+    assert got is not None and got.src_row.tobytes() \
+        == pos_entry.src_row.tobytes()
+    assert got.written.tobytes() == pos_entry.written.tobytes()
+    gneg = fresh.get(("neg", (2, b"d")), epoch=0)
+    assert gneg is not None and gneg.n_out == 0
+    assert (gneg.overflow, gneg.ops, gneg.peak) == (True, 3, 2)
+    assert fresh.stats.neg_hits == 1
+
+    # wrong-epoch blob: rejected as a whole, nothing adopted
+    virgin = FragmentCache(capacity=8)
+    with pytest.raises(WireEpochError):
+        wire.restore_cache(blob, virgin, 1)
+    assert len(virgin) == 0 and virgin.n_negative == 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(records=st.lists(
+    st.tuples(st.tuples(_KEYS, _KEYS,
+                        st.one_of(st.integers(0, 5), st.just("q"),
+                                  st.tuples(st.just("st"), st.integers(0, 3),
+                                            st.integers(1, 8)))),
+              st.integers(1, 1 << 24)),
+    max_size=8, unique_by=lambda r: r[0]))
+def test_wire_hwm_round_trip(records):
+    """Planner HWM records — nested-tuple keys ``(signature, consts,
+    k | "q" | ("st", k, shards), epoch)`` — survive the wire."""
+    store = _tiny_store()
+    planner = CapacityPlanner(store, EngineConfig(interface="spf"))
+    epoch = 0
+    for (k_prefix, cap) in records:
+        planner.adopt_hwm((*k_prefix, epoch), cap, epoch)
+    blob = wire.dumps_hwm(planner, epoch)
+    assert wire.loads_hwm(blob, expect_epoch=epoch) \
+        == planner.export_hwm()
+    fresh = CapacityPlanner(store, EngineConfig(interface="spf"))
+    assert wire.restore_hwm(blob, fresh, epoch) == len(planner.export_hwm())
+    assert fresh.export_hwm() == planner.export_hwm()
+    with pytest.raises(WireEpochError):
+        wire.restore_hwm(blob, fresh, epoch + 1)
+
+
+def test_adopt_refuses_cross_epoch_records():
+    """The per-record epoch backstop under the blob-level check: adopt
+    seams refuse records from another store epoch outright."""
+    cache = FragmentCache(capacity=4)
+    e = FragmentEntry(np.arange(2, dtype=np.int32),
+                      np.zeros((2, 1), np.int32), False, 1, 3, 0)
+    assert not cache.adopt(("k",), e, epoch=4)
+    assert len(cache) == 0
+    store = _tiny_store()
+    planner = CapacityPlanner(store, EngineConfig(interface="spf"))
+    assert not planner.adopt_hwm((("sig",), (), "q", 3), 64, 4)
+    assert planner.export_hwm() == []
+
+
+# --------------------------------------------------------------------------
+# cache service stub: out-of-process sharing via bytes
+# --------------------------------------------------------------------------
+
+def test_cache_service_stub_hydrates_fresh_scheduler_all_hit(watdiv_small):
+    """The acceptance pin's second half: cache + HWM state serialized
+    from a warm scheduler and restored into a *fresh* one (crossing a
+    full wire round-trip, as a separate process would) serves the same
+    load entirely from the cache with byte-identical rows."""
+    g, store = watdiv_small
+    qs = generate_query_load(g, store, "union", QueryLoadConfig(n_queries=4))
+    cfg = EngineConfig(interface="spf", cap=2048)
+    # cap_hints off keeps request keys identical across schedulers (the
+    # same construction the all-hit wave test uses)
+    scfg = SchedulerConfig(lanes=8, cap_hints=False)
+
+    donor = QueryScheduler(store, cfg, scfg)
+    tables, _ = donor.run_queries(qs)
+    donor_rows = [results_as_numpy(t) for t in tables]
+
+    stub = CacheServiceStub()
+    blob_bytes = stub.deposit(donor.cache, donor.planner, epoch=store.epoch)
+    assert blob_bytes > 0
+
+    fresh = QueryScheduler(store, cfg, scfg)
+    adopted = stub.hydrate(fresh.cache, fresh.planner, epoch=store.epoch)
+    assert adopted > 0
+    base = fresh.snapshot()
+    tables, stats = fresh.run_queries(qs)
+    diff = fresh.snapshot() - base
+    assert all(int(s.cache_misses) == 0 for s in stats)
+    assert diff.scalar("cache.misses") == 0
+    assert diff.scalar("cache.hits") > 0
+    for t, want in zip(tables, donor_rows):
+        assert results_as_numpy(t).tobytes() == want.tobytes()
+
+
+def test_cache_service_stub_restores_planner_hwm(watdiv_small):
+    """Restored HWM records serve capacities from planner memory: the
+    hydrated scheduler's first serve consults hwm_caps, not the oracle,
+    for every query cap."""
+    g, store = watdiv_small
+    qs = generate_query_load(g, store, "1-star", QueryLoadConfig(n_queries=3))
+    cfg = EngineConfig(interface="spf", cap=2048)
+    donor = QueryScheduler(store, cfg, SchedulerConfig(lanes=8))
+    donor.run_queries(qs)
+    assert donor.planner.export_hwm()
+
+    stub = CacheServiceStub()
+    stub.deposit(donor.cache, donor.planner, epoch=store.epoch)
+    fresh = QueryScheduler(store, cfg, SchedulerConfig(lanes=8))
+    stub.hydrate(fresh.cache, fresh.planner, epoch=store.epoch)
+    assert fresh.planner.export_hwm() == donor.planner.export_hwm()
+    base = fresh.snapshot()
+    fresh.run_queries(qs)
+    diff = fresh.snapshot() - base
+    assert diff.scalar("planner.hwm_caps") > 0
+
+
+def test_stale_stub_state_never_replayed_after_epoch_bump(watdiv_small):
+    """A store mutation between deposit and hydrate invalidates the
+    blobs: hydration raises and adopts nothing."""
+    g, store = watdiv_small
+    qs = generate_query_load(g, store, "1-star", QueryLoadConfig(n_queries=2))
+    cfg = EngineConfig(interface="spf", cap=2048)
+    donor = QueryScheduler(store, cfg, SchedulerConfig(lanes=8))
+    donor.run_queries(qs)
+    stub = CacheServiceStub()
+    epoch0 = store.epoch
+    stub.deposit(donor.cache, donor.planner, epoch=epoch0)
+
+    fresh = QueryScheduler(store, cfg, SchedulerConfig(lanes=8))
+    with pytest.raises(WireEpochError):
+        stub.hydrate(fresh.cache, fresh.planner, epoch=epoch0 + 1)
+    assert len(fresh.cache) == 0 and fresh.planner.export_hwm() == []
+
+
+# --------------------------------------------------------------------------
+# endpoint service loop
+# --------------------------------------------------------------------------
+
+def test_endpoint_serves_sparql_byte_identical_to_engine():
+    store = _tiny_store()
+    bgp = _two_star_bgp()
+    cfg = EngineConfig(interface="endpoint")
+    table, qstats = QueryEngine(store, cfg).run(bgp)
+    want = results_as_numpy(table)
+
+    sched = QueryScheduler(store, cfg)
+    svc = EndpointService(sched)
+    text = to_sparql(bgp)
+    resps = svc.serve([EndpointRequest(client=i % 3, sparql=text)
+                       for i in range(6)])
+    for r in resps:
+        assert r.status == "ok"
+        assert r.rows.tobytes() == want.tobytes()
+        # endpoint interface accounting: one request per query, the
+        # engine's exact NTB
+        assert r.nrs == 1 and r.ntb == int(qstats.ntb)
+    # interface totals land in the scheduler's snapshot
+    snap = sched.snapshot()
+    assert snap["endpoint.requests"] == 6
+    assert snap["endpoint.served"] == 6
+    assert snap["endpoint.nrs"] == 6
+    assert snap["endpoint.ntb"] == 6 * int(qstats.ntb)
+    assert snap["endpoint.batches"] >= 1
+
+
+def test_endpoint_projection_and_parse_errors():
+    store = _tiny_store()
+    cfg = EngineConfig(interface="endpoint")
+    sched = QueryScheduler(store, cfg)
+    svc = EndpointService(sched)
+    ok, bad = svc.serve([
+        EndpointRequest(client=0, sparql="SELECT ?c WHERE "
+                        "{ ?a <0> ?b ; <1> ?c . ?b <0> ?d }"),
+        EndpointRequest(client=1, sparql="SELECT nope"),
+    ])
+    assert ok.status == "ok"
+    table, _ = QueryEngine(store, cfg).run(_two_star_bgp())
+    assert np.array_equal(ok.rows, results_as_numpy(table)[:, [2]])
+    assert bad.status == "error" and "SELECT" in bad.error
+    assert sched.snapshot()["endpoint.parse_errors"] == 1
+
+
+def test_endpoint_admission_control_bounds_per_client_inflight():
+    store = _tiny_store()
+    sched = QueryScheduler(store, EngineConfig(interface="endpoint"))
+    svc = EndpointService(sched,
+                          ServiceConfig(max_inflight_per_client=2))
+    bgp = _two_star_bgp()
+    resps = svc.serve([EndpointRequest(client=0, query=bgp)
+                       for _ in range(5)]
+                      + [EndpointRequest(client=1, query=bgp)])
+    by_client = {0: [], 1: []}
+    for r in resps:
+        by_client[r.client].append(r.status)
+    # the flooding client is clipped at its bound; the light client rides
+    assert by_client[0].count("ok") == 2
+    assert by_client[0].count("rejected") == 3
+    assert by_client[1] == ["ok"]
+    assert sched.snapshot()["endpoint.rejected"] == 3
+
+
+def test_endpoint_wave_packing_is_round_robin_fair():
+    """Under overload the wave is packed one-per-client in arrival
+    order, so a flooding client cannot starve a light one."""
+    store = _tiny_store()
+    sched = QueryScheduler(store, EngineConfig(interface="endpoint"))
+    svc = EndpointService(sched, ServiceConfig(wave_budget=4))
+
+    def pend(client, seq):
+        return _Pending(EndpointRequest(client=client, query=_two_star_bgp()),
+                        None, 0.0, seq)
+
+    # client 0 floods 6 requests before clients 1 and 2 send one each
+    svc._waiting = [pend(0, i) for i in range(6)] \
+        + [pend(1, 6), pend(2, 7)]
+    wave = svc._pick_wave()
+    picked = [(p.req.client, p.seq) for p in wave]
+    # round-robin: one per client per turn -> 0,1,2 then back to 0
+    assert picked == [(0, 0), (1, 6), (2, 7), (0, 1)]
+    # leftovers keep arrival order
+    assert [p.seq for p in svc._waiting] == [2, 3, 4, 5]
+
+
+def test_endpoint_latency_instruments_only_under_obs():
+    from repro import obs
+
+    store = _tiny_store()
+    sched = QueryScheduler(store, EngineConfig(interface="endpoint"))
+    svc = EndpointService(sched)
+    svc.serve([EndpointRequest(client=0, query=_two_star_bgp())])
+    snap = sched.snapshot()
+    assert "endpoint.latency_s" not in snap  # obs off: counts only
+    with obs.tracing(trace=False):
+        svc.serve([EndpointRequest(client=0, query=_two_star_bgp())])
+    snap = sched.snapshot()
+    assert snap["endpoint.latency_s"]["count"] == 1
+    assert snap["endpoint.queue_wait_s"]["count"] == 1
+    obs.registry.reset()

@@ -269,6 +269,24 @@ def test_negative_results_cached_in_side_table():
     assert small.n_negative == 2 and small.get(("n0",)) is None
 
 
+def test_negative_overflow_charged_to_neg_evictions_not_main():
+    """Side-table LRU drops are their own instrument: a negative flood
+    must not pollute the main-cache ``evictions`` counter (which TinyLFU
+    tuning signals read as main-cache thrash)."""
+    empty = _entry(n_out=0)
+    small = FragmentCache(capacity=4, neg_capacity=2)
+    for i in range(5):
+        small.put((f"n{i}",), empty)
+    assert small.stats.neg_evictions == 3
+    assert small.stats.evictions == 0
+    # and main-cache eviction accounting is untouched in the other
+    # direction: filling the main map past capacity charges evictions only
+    for i in range(6):
+        small.put((f"p{i}",), _entry(n_out=1))
+    assert small.stats.evictions == 2
+    assert small.stats.neg_evictions == 3
+
+
 def test_epoch_bump_invalidates_exactly_stale_entries():
     """Entries are epoch-tagged; a store-epoch bump invalidates the stale
     ones (lazily on lookup, eagerly via invalidate_stale) while entries

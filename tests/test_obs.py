@@ -121,6 +121,48 @@ def test_snapshot_diff_scalars_and_histograms():
     assert d.scalar("h") == 0  # scalar() on a histogram entry -> default
 
 
+def test_histogram_single_observation_true_min_max():
+    """A single observation's summary must report that exact value as
+    both min and max (the old code reported the geometric bucket's upper
+    edge, so ``min`` exceeded the only observed value and ``mean`` could
+    sit below ``min``)."""
+    reg = MetricsRegistry()
+    reg.observe("h", 3.0)
+    s = reg.snapshot()["h"]
+    assert s["min"] == 3.0 and s["max"] == 3.0
+    assert s["mean"] == pytest.approx(3.0)
+    assert s["min"] <= s["mean"] <= s["max"]
+    assert s["min"] <= s["p50"] <= s["p99"] <= s["max"]
+    # more observations keep the true extrema exact
+    reg.observe("h", 0.7)
+    reg.observe("h", 11.0)
+    s = reg.snapshot()["h"]
+    assert s["min"] == 0.7 and s["max"] == 11.0
+    assert s["min"] <= s["p50"] <= s["p95"] <= s["p99"] <= s["max"]
+
+
+def test_snapshot_diff_min_max_bound_interval_observations():
+    """Interval diffs cannot recover true extrema from bucket counts, but
+    the reported min/max must still bound every interval observation
+    (lower edge of the lowest occupied bucket / upper edge of the
+    highest), and an empty-baseline diff keeps the endpoint's exact
+    extrema."""
+    reg = MetricsRegistry()
+    for v in (1.0, 2.0):
+        reg.observe("h", v)
+    a = reg.snapshot()
+    for v in (8.0, 16.0):
+        reg.observe("h", v)
+    d = reg.snapshot() - a
+    assert d["h"]["count"] == 2
+    assert d["h"]["min"] <= 8.0 and d["h"]["max"] >= 16.0
+    assert d["h"]["min"] <= d["h"]["mean"] <= d["h"]["max"]
+    assert d["h"]["min"] <= d["h"]["p50"] <= d["h"]["p99"] <= d["h"]["max"]
+    # empty baseline: the interval IS the endpoint -> exact extrema
+    b = reg.snapshot() - Snapshot()
+    assert b["h"]["min"] == 1.0 and b["h"]["max"] == 16.0
+
+
 def test_registry_reset_by_prefix():
     reg = MetricsRegistry()
     reg.inc("a.x")
@@ -208,6 +250,31 @@ def test_all_hit_wave_replay_spans_and_zero_pulls(watdiv_small):
     units = [e for e in tracer.named("unit") if e["ph"] == "X"]
     assert sum(1 for e in units if e["args"].get("path") == "replay") \
         == n_replayed
+    obs.registry.reset()
+
+
+def test_submit_walls_reaped_across_obs_toggle(watdiv_small):
+    """``_t_submit`` entries recorded while obs was on must be reaped
+    even when the drain runs with obs off — a submit-traced /
+    drain-untraced toggle used to leak them forever."""
+    g, store = watdiv_small
+    qs = generate_query_load(g, store, "1-star", QueryLoadConfig(n_queries=2))
+    cfg = EngineConfig(interface="spf", cap=2048)
+    sched = QueryScheduler(store, cfg, SchedulerConfig(lanes=8))
+    obs.enable(trace=False)
+    try:
+        for q in qs:
+            sched.submit(q)
+        assert len(sched._t_submit) == len(qs)  # walls were recorded
+    finally:
+        obs.disable()
+    sched.drain()  # obs now off: the old code skipped the reap entirely
+    assert sched._t_submit == {}
+    # and the normal obs-on path still reaps and records latencies
+    with obs.tracing(trace=False):
+        sched.run_queries(qs)
+        assert sched._t_submit == {}
+    assert sched.snapshot()["sched.query_latency_s"]["count"] == len(qs)
     obs.registry.reset()
 
 
