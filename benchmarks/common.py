@@ -218,14 +218,25 @@ def endpoint_serve(load: str, n_clients: int, interface: str = "endpoint",
 
     Returns a record with measured queries/min, request-latency p50/p99
     (from the obs-gated ``endpoint.latency_s`` histogram, registry-only
-    observability — no tracer fences), the cache-service hit rate and
-    interface NRS/NTB — all read from ``sched.snapshot()`` diffs over
-    the measured pass, plus the byte-identity flag against the serial
-    engine.
+    observability — no tracer fences), the cache-service hit rate,
+    interface NRS/NTB and the failure-model columns (timeouts, shed,
+    drain faults/retries) — all read from ``sched.snapshot()`` diffs
+    over the measured pass, plus the byte-identity flag against the
+    serial engine.
+
+    Set ``BENCH_ENDPOINT_CHAOS=<seed>`` to arm a seeded ``FaultPlan``
+    (drain + unit-step raise schedules) over the measured pass: the
+    chaos smoke.  Under chaos, byte-identity is asserted over the
+    ``"ok"`` responses (faulted requests legitimately resolve
+    ``"error"``); disarmed, it additionally requires every request to
+    be ``"ok"``.
     """
+    import contextlib
+    import os
+
     import numpy as np
 
-    from repro import obs
+    from repro import faults, obs
     from repro.core import results_as_numpy
     from repro.endpoint import CacheServiceStub, to_sparql
     from repro.endpoint.service import (EndpointRequest, EndpointService,
@@ -258,17 +269,27 @@ def endpoint_serve(load: str, n_clients: int, interface: str = "endpoint",
     sched = QueryScheduler(store, cfg, scfg)
     stub.hydrate(sched.cache, sched.planner, epoch=store.epoch)
     svc = EndpointService(sched, svc_cfg)
+    chaos_seed = os.environ.get("BENCH_ENDPOINT_CHAOS")
+    if chaos_seed is not None:
+        chaos = faults.injecting(faults.FaultPlan(int(chaos_seed), {
+            "drain": faults.FaultSpec("raise", p=0.10),
+            "unit.step": faults.FaultSpec("raise", p=0.05),
+        }))
+    else:
+        chaos = contextlib.nullcontext()
     base = sched.snapshot()
-    with obs.tracing(trace=False):  # registry-only: latency, no fences
+    with chaos, obs.tracing(trace=False):  # registry-only: no fences
         t0 = time.perf_counter()
         resps = svc.serve(reqs)
         wall = time.perf_counter() - t0
     diff = sched.snapshot() - base
 
     served = diff.scalar("endpoint.served")
-    identical = all(r.status == "ok"
-                    and r.rows.tobytes() == want[req.sparql].tobytes()
-                    for r, req in zip(resps, reqs))
+    ok = [(r, req) for r, req in zip(resps, reqs) if r.status == "ok"]
+    identical = all(r.rows.tobytes() == want[req.sparql].tobytes()
+                    for r, req in ok)
+    if chaos_seed is None:
+        identical = identical and len(ok) == len(reqs)
     hits = diff.scalar("cache.hits") + diff.scalar("cache.shared_hits")
     probes = hits + diff.scalar("cache.misses")
     lat = diff.get("endpoint.latency_s", {})
@@ -276,6 +297,12 @@ def endpoint_serve(load: str, n_clients: int, interface: str = "endpoint",
         "load": load, "interface": interface, "clients": n_clients,
         "requests": len(reqs), "served": served,
         "rejected": diff.scalar("endpoint.rejected"),
+        "shed": diff.scalar("endpoint.shed"),
+        "timeouts": diff.scalar("endpoint.timeouts"),
+        "errors": diff.scalar("endpoint.errors"),
+        "drain_faults": diff.scalar("endpoint.drain_faults"),
+        "drain_retries": diff.scalar("endpoint.drain_retries"),
+        "chaos_seed": int(chaos_seed) if chaos_seed is not None else None,
         "batches": diff.scalar("endpoint.batches"),
         "wall_s": wall,
         "queries_per_min": served * 60.0 / wall if wall else 0.0,

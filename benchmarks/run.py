@@ -723,10 +723,16 @@ def fig_endpoint() -> None:
     and request-latency p50/p99 vs client count plus the cache-service
     hit rate, all from ``sched.snapshot()`` diffs.
 
+    Records carry the failure-model columns (timeouts, shed, errors,
+    drain faults/retries) so a chaos run is auditable from the artifact.
+
     Environment knobs (CI smoke runs a single 8-client point):
       BENCH_ENDPOINT_LOAD     one load name, default "union"
       BENCH_ENDPOINT_CLIENTS  comma list, default "4,16,64"
       BENCH_ENDPOINT_JSON     output path, default "BENCH_endpoint.json"
+      BENCH_ENDPOINT_CHAOS    optional seed: arm a FaultPlan (drain +
+                              unit-step schedules) over the measured
+                              pass — the CI chaos smoke
     """
     load = os.environ.get("BENCH_ENDPOINT_LOAD", "union")
     clients = tuple(
@@ -745,6 +751,9 @@ def fig_endpoint() -> None:
              f"p99_ms={r['latency_p99_ms']:.2f};"
              f"hit_rate={r['cache_service_hit_rate']:.3f};"
              f"batches={r['batches']};"
+             f"timeouts={r['timeouts']};"
+             f"shed={r['shed']};"
+             f"retries={r['drain_retries']};"
              f"identical={int(r['byte_identical'])}")
     out = os.environ.get("BENCH_ENDPOINT_JSON", "BENCH_endpoint.json")
     with open(out, "w") as f:

@@ -77,6 +77,9 @@ class PlannerStats(RegistryView):
         "hwm_caps",  # capacities served from the high-water-mark memory
         "observations",
         "swept",  # HWM entries dropped on an epoch sweep
+        # wire HWM records quarantined on restore (CRC/decode failure in
+        # endpoint.wire): skipped and counted, never adopted
+        "wire_corrupt",
     )
 
 

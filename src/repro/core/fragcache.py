@@ -228,6 +228,10 @@ class CacheStats(RegistryView):
         "stale_evictions",  # entries dropped because their epoch lapsed
         "admission_rejects",  # freq policy kept the victim, refused the new
         "bytes_stored",
+        # wire records quarantined on restore (CRC/decode failure in
+        # endpoint.wire): skipped and counted, never adopted — the rest
+        # of the deposit still lands
+        "wire_corrupt",
     )
 
     @property

@@ -105,7 +105,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
-from repro import obs
+from repro import faults, obs
 from repro.core import stepper
 from repro.core.bindings import BindingTable
 from repro.core.capacity import CapacityPlanner
@@ -160,6 +160,10 @@ class Request(NamedTuple):
     rid: int
     client: int
     query: BGP
+    # absolute time.perf_counter() deadline, or None (no deadline); checked
+    # cooperatively at unit-step boundaries — an expired request resolves
+    # as (None, stats-so-far) instead of burning the rest of its wave
+    deadline: float | None = None
 
 
 @dataclass
@@ -207,6 +211,10 @@ class SchedMetrics(obs.RegistryView):
         "lane_steps",  # lanes x dispatched steps (incl. padding)
         "active_lane_steps",  # non-padding lanes among those
         "retries",  # jobs requeued (resumably) at 4x cap
+        # requests expired at a unit-step boundary (cooperative deadline
+        # check): answered (None, stats-so-far) — the endpoint maps the
+        # None table to a "timeout" response
+        "deadline_expired",
         # Omega-block device->host pulls during unit stepping
         # (miss-insertion prefix pulls + overflow-retire checkpoints;
         # finalize excluded).  The device-replay invariant the tests pin:
@@ -347,6 +355,7 @@ class QueryScheduler:
             self._shard_slots = 0
         self.metrics = SchedMetrics(self.registry)
         self._t_submit: dict[int, float] = {}  # obs-only request walls
+        self._deadlines: dict[int, float] = {}  # rid -> absolute deadline
         self._plan_memo: dict[BGP, QueryPlan] = {}
         self._cap_hints: dict[tuple, int] = {}  # legacy memo (planner off)
         self._pending: list[Request] = []
@@ -360,10 +369,16 @@ class QueryScheduler:
         self._probe_ops = kops.probe_op_cost(n)
 
     # ------------------------------------------------------------- requests
-    def submit(self, query: BGP, client: int = 0) -> int:
+    def submit(self, query: BGP, client: int = 0,
+               deadline: float | None = None) -> int:
+        """Enqueue ``query``; ``deadline`` is an absolute
+        ``time.perf_counter()`` instant after which the request may be
+        expired at the next unit-step boundary (``None`` = never)."""
         rid = self._next_rid
         self._next_rid += 1
-        self._pending.append(Request(rid, client, query))
+        self._pending.append(Request(rid, client, query, deadline))
+        if deadline is not None:
+            self._deadlines[rid] = deadline
         self.metrics.requests += 1
         if obs.enabled:
             self._t_submit[rid] = time.perf_counter()
@@ -420,10 +435,22 @@ class QueryScheduler:
         return self._stacked_cache
 
     # ---------------------------------------------------------------- drain
-    def drain(self) -> dict[int, tuple[BindingTable, QueryStats]]:
-        """Execute all pending requests; returns {rid: (table, stats)}."""
+    def drain(self) -> dict[int, tuple[BindingTable | None, QueryStats]]:
+        """Execute all pending requests; returns {rid: (table, stats)}.
+
+        A request expired at a unit-step boundary (its absolute deadline
+        passed) maps to ``(None, stats)`` — the stats accumulated up to
+        the boundary — and counts in ``metrics.deadline_expired``; the
+        rest of its wave is unaffected.
+
+        Failure contract: pending requests are popped at entry, so an
+        exception mid-drain *loses* them — callers owning retries (the
+        endpoint's wave fault domain) re-``submit`` and call again.
+        """
         requests, self._pending = self._pending, []
-        results: dict[int, tuple[BindingTable, QueryStats]] = {}
+        if faults.plan is not None:
+            faults.hit("drain", requests=len(requests))
+        results: dict[int, tuple[BindingTable | None, QueryStats]] = {}
 
         tr = obs.tracer
         if tr:
@@ -470,7 +497,44 @@ class QueryScheduler:
         if tr:
             tr.end(dspan)
         self._t_submit.clear()  # unconditional: no leak across obs toggles
+        self._deadlines.clear()
         return results
+
+    # ------------------------------------------------------------ deadlines
+    def _job_deadline(self, job: _Job) -> float | None:
+        """A collapsed job's effective deadline: the latest of its rids'
+        deadlines, or ``None`` (never expire) if any rid has none — a
+        no-deadline requester is owed a full result, so a duplicate with
+        a deadline can never expire the shared execution under it."""
+        dl = None
+        for rid in job.rids:
+            d = self._deadlines.get(rid)
+            if d is None:
+                return None
+            dl = d if dl is None else max(dl, d)
+        return dl
+
+    def _expire(self, job: _Job, a: "_LaneAcc", ovf_flag: bool,
+                results: dict) -> None:
+        """Deliver a deadline expiry: ``(None, stats-so-far)`` per rid."""
+        self.metrics.deadline_expired += len(job.rids)
+        tr = obs.tracer
+        stats = QueryStats(
+            nrs=a.nrs, ntb=a.ntb, server_ops=a.server, client_ops=a.client,
+            n_results=0, overflow=ovf_flag,
+            cache_hits=a.hits, cache_misses=a.misses,
+            nrs_saved=a.nrs_saved, ntb_saved=a.ntb_saved,
+        )
+        t1 = time.perf_counter() if obs.enabled else 0.0
+        for rid in job.rids:
+            results[rid] = (None, stats)
+            self._deadlines.pop(rid, None)
+            t0 = self._t_submit.pop(rid, None)
+            if obs.enabled:
+                if t0 is not None:
+                    self.registry.observe("sched.query_latency_s", t1 - t0)
+                if tr:
+                    tr.end_async("query", rid, expired=True)
 
     def _wave_shard_trim(self, jobs: list[_Job], active: list[int],
                          k: int, cap: int) -> int:
@@ -610,6 +674,18 @@ class QueryScheduler:
             up = plan.units[k]
             io = unit_io(up)
             active = [j for j in range(n_active) if j not in retired]
+            # cooperative deadline check: a job whose every rid has an
+            # expired absolute deadline is answered (None, stats-so-far)
+            # here, at the unit boundary, instead of burning the rest of
+            # the wave (the remaining lanes step on without it)
+            if active and self._deadlines:
+                now = time.perf_counter()
+                for j in list(active):
+                    dl = self._job_deadline(jobs[j])
+                    if dl is not None and now >= dl:
+                        self._expire(jobs[j], acc[j], bool(ovf[j]), results)
+                        retired.add(j)
+                        active.remove(j)
             if not active:
                 break
             n_in = {j: counts[j] for j in active}
@@ -690,6 +766,8 @@ class QueryScheduler:
                     step = stepper.unit_step(up, self.store.radix)
                 if lsp:
                     tr.end(lsp)
+                if faults.plan is not None:
+                    faults.hit("unit.step", sig=plan.signature, k=k)
                 ssp = tr.begin("unit.step", k=k) if tr else None
                 out = step(dev, consts_dev, rows_d, valid_d,
                            jnp.asarray(ovf))
@@ -792,6 +870,8 @@ class QueryScheduler:
                         if n_w:
                             wr_h[j, :e.n_out] = e.written
                     nout_h[j] = e.n_out
+                if faults.plan is not None:
+                    faults.hit("cache.replay", sig=plan.signature, k=k)
                 psp = tr.begin("cache.replay_device",
                                lanes=len(live)) if tr else None
                 rows_d, valid_d = stepper.replay_step(io.write_cols)(
@@ -872,6 +952,7 @@ class QueryScheduler:
             for rid in job.rids:
                 # reap unconditionally: entries recorded while obs was on
                 # must not leak if it is toggled off before the drain
+                self._deadlines.pop(rid, None)
                 t0 = self._t_submit.pop(rid, None)
                 if obs.enabled:
                     if t0 is not None:

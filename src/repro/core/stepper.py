@@ -58,8 +58,11 @@ Contents:
   accounting, shared by the scheduler and the planned serial path (drift
   is pinned by the scheduler/serial stats-parity tests).
 
-All step caches key on trace statics including ``kops.FORCE`` (read at
-trace time) and, for wave steps, the mesh — shapes retrace within one
+All step caches key on trace statics including ``kops.FORCE`` and the
+kernel circuit breaker's ``kops.BREAKER.generation`` (both read at trace
+time — the generation key is what makes a breaker transition visible to
+already-compiled engines: the next wave retraces and bakes the new
+dispatch) and, for wave steps, the mesh — shapes retrace within one
 cached entry naturally.
 """
 
@@ -108,7 +111,8 @@ def unit_step(up: UnitPlan, radix: int, mesh: Mesh | None = None,
     same integer arithmetic it would under vmap — byte-identical outputs,
     different device placement.
     """
-    key = ("wave", _branch_statics(up), radix, kops.FORCE, mesh, lane_axes)
+    key = ("wave", _branch_statics(up), radix, kops.FORCE,
+           kops.BREAKER.generation, mesh, lane_axes)
     step = _STEP_CACHE.get(key)
     if step is None:
         def lane_fn(dev, const_vec, rows, valid, overflow):
@@ -501,7 +505,8 @@ def sharded_unit_step(up: UnitPlan, radix: int, mesh: Mesh, data_axis: str,
     lowerings.  ``merge`` picks the gather-merge strategy
     (``select_gather_merge``).
     """
-    key = ("shard", _branch_statics(up), radix, kops.FORCE, mesh,
+    key = ("shard", _branch_statics(up), radix, kops.FORCE,
+           kops.BREAKER.generation, mesh,
            data_axis, lane_axes, n_shards, logn, trim, latch, merge)
     step = _STEP_CACHE.get(key)
     if step is None:
@@ -552,7 +557,8 @@ def serial_unit_step(up: UnitPlan, radix: int):
     provenance column (``run`` checkpoints tables, not cache deltas).
     Batched with a leading lane axis like every ``make_batch_step``
     product — the engine passes a width-1 batch."""
-    key = ("serial", _branch_statics(up), radix, kops.FORCE)
+    key = ("serial", _branch_statics(up), radix, kops.FORCE,
+           kops.BREAKER.generation)
     step = _STEP_CACHE.get(key)
     if step is None:
         def lane_fn(dev, const_vec, rows, valid, overflow):
@@ -571,7 +577,7 @@ def digest_step(read_cols: tuple[int, ...]):
     uint32[B, 4]`` digests of each lane's valid prefix restricted to
     ``read_cols`` — the device half of the digest-first cache keys
     (host twin: ``ref.fingerprint_prefix_np`` on replayed state)."""
-    key = ("digest", read_cols, kops.FORCE)
+    key = ("digest", read_cols, kops.FORCE, kops.BREAKER.generation)
     fn = _STEP_CACHE.get(key)
     if fn is None:
         cols = jnp.asarray(read_cols, jnp.int32) if read_cols else None
@@ -598,7 +604,8 @@ def replay_step(write_cols: tuple[int, ...]):
     all-hit waves off the host: the uploaded delta is the small object,
     the Omega block never moves.
     """
-    key = ("replay", tuple(write_cols), kops.FORCE)
+    key = ("replay", tuple(write_cols), kops.FORCE,
+           kops.BREAKER.generation)
     fn = _STEP_CACHE.get(key)
     if fn is None:
         cols = tuple(write_cols)

@@ -14,7 +14,7 @@ Every blob starts with a fixed header::
 
     magic  b"SPFW"  | version u16 | kind u8 | store epoch i64
 
-followed by kind-specific records.  Two safety properties are load-time
+followed by kind-specific records.  Three safety properties are load-time
 checks, not conventions:
 
 - **versioned**: a blob whose version differs from ``WIRE_VERSION`` is
@@ -24,27 +24,42 @@ checks, not conventions:
   recorded against, ``restore_*`` callers present their store's current
   epoch, and a mismatch is rejected (``WireEpochError``) before any
   record is materialised.  Per-record epochs are additionally re-checked
-  by the ``adopt`` seams, so a stale fragment is never replayed.
+  by the ``adopt`` seams, so a stale fragment is never replayed;
+- **per-record CRC32** (wire v2): multi-record blobs frame each record
+  individually behind a CRC-protected directory (``_pack_block``), so a
+  corrupted record is **quarantined** — skipped, counted in the adopting
+  component's ``wire_corrupt`` instrument (``cache.wire_corrupt`` /
+  ``planner.wire_corrupt``) — instead of discarding the whole deposit.
+  A record that passes its CRC but fails to decode is quarantined the
+  same way (defense in depth).  Only framing damage — header, record
+  directory — rejects the whole blob (``WireError``), and then nothing
+  at all is adopted: a corrupted record is *never* half-read into a
+  live cache.
 
 Values are encoded with a small tagged scheme (ints, strings, bytes,
 bools, None, floats, tuples) because cache keys and HWM keys are nested
 tuples — plan signatures, constant values, ``("st", k, shards)`` marks,
 digest bytes.  Arrays carry dtype + shape and restore byte-identically.
 This module needs numpy only (no jax): the cache service stub must be
-importable in a process that never touches a device.
+importable in a process that never touches a device.  The ``wire.loads``
+fault seam runs over every blob entering a loader (byte corruption /
+load aborts under an armed ``repro.faults`` plan) — the chaos suite
+drives the quarantine path through it.
 """
 
 from __future__ import annotations
 
 import struct
+import zlib
 
 import numpy as np
 
+from repro import faults
 from repro.core.fragcache import _EMPTY_SRC, _EMPTY_WRITTEN, FragmentCache, \
     FragmentEntry
 
 WIRE_MAGIC = b"SPFW"
-WIRE_VERSION = 1
+WIRE_VERSION = 2  # v2: per-record CRC32 directory framing
 
 # header kinds
 KIND_CACHE = 1  # fragment cache state (positive + negative entries)
@@ -191,6 +206,91 @@ def _check_header(data: bytes, kind: int,
 
 
 # --------------------------------------------------------------------------
+# record blocks: per-record CRC32 behind a CRC-protected directory
+# --------------------------------------------------------------------------
+#
+# block := u32 n | u32 dir_len | u32 dir_crc | dir | u32 body_len | body
+# dir   := n * (u32 off, u32 len, u32 crc)      -- offsets into body
+#
+# A record whose CRC (or decode) fails is quarantined individually; a
+# damaged directory or truncated body fails the whole block, because
+# record boundaries themselves are then untrustworthy.
+
+_DIR_REC = struct.Struct("<III")
+
+
+def _pack_block(records: list[bytes], out: bytearray) -> None:
+    out += struct.pack("<I", len(records))
+    dir_buf = bytearray()
+    off = 0
+    for r in records:
+        dir_buf += _DIR_REC.pack(off, len(r), zlib.crc32(r))
+        off += len(r)
+    out += struct.pack("<II", len(dir_buf), zlib.crc32(bytes(dir_buf)))
+    out += dir_buf
+    out += struct.pack("<I", off)
+    for r in records:
+        out += r
+
+
+def _unpack_block(data: bytes, pos: int) -> tuple[list[bytes | None], int]:
+    """Decode one record block; a ``None`` element is a quarantined
+    (CRC-failed or out-of-bounds) record."""
+    try:
+        (n,) = struct.unpack_from("<I", data, pos)
+        pos += 4
+        dir_len, dir_crc = struct.unpack_from("<II", data, pos)
+        pos += 8
+    except struct.error:
+        raise WireError("truncated block header") from None
+    dir_buf = data[pos:pos + dir_len]
+    if len(dir_buf) != dir_len or dir_len != n * _DIR_REC.size \
+            or zlib.crc32(dir_buf) != dir_crc:
+        raise WireError("corrupt record directory")
+    pos += dir_len
+    try:
+        (body_len,) = struct.unpack_from("<I", data, pos)
+    except struct.error:
+        raise WireError("truncated block body length") from None
+    pos += 4
+    body = data[pos:pos + body_len]
+    if len(body) != body_len:
+        raise WireError("truncated block body")
+    pos += body_len
+    records: list[bytes | None] = []
+    for i in range(n):
+        off, ln, crc = _DIR_REC.unpack_from(dir_buf, i * _DIR_REC.size)
+        rec = body[off:off + ln]
+        if off + ln > body_len or zlib.crc32(rec) != crc:
+            records.append(None)  # quarantined: bad bounds or bad bytes
+        else:
+            records.append(bytes(rec))
+    return records, pos
+
+
+def _decode_records(records: list[bytes | None], decode_one,
+                    corrupt: list | None) -> list:
+    """Decode surviving records; CRC casualties and records that fail
+    ``decode_one`` (or leave trailing bytes) are appended to ``corrupt``."""
+    out = []
+    for i, rec in enumerate(records):
+        if rec is None:
+            if corrupt is not None:
+                corrupt.append((i, "crc"))
+            continue
+        try:
+            item, end = decode_one(rec)
+            if end != len(rec):
+                raise WireError("trailing bytes in record")
+        except (WireError, ValueError, OverflowError):
+            if corrupt is not None:
+                corrupt.append((i, "decode"))
+            continue
+        out.append(item)
+    return out
+
+
+# --------------------------------------------------------------------------
 # FragmentEntry records
 # --------------------------------------------------------------------------
 
@@ -218,18 +318,33 @@ def _unpack_entry(data: bytes, pos: int):
 
 def dumps_entry(key: tuple, entry: FragmentEntry) -> bytes:
     """One standalone ``(key, FragmentEntry)`` record (service protocol
-    unit: a cache-service response is exactly one of these)."""
+    unit: a cache-service response is exactly one of these).  The record
+    bytes carry a CRC32; a single-record blob has nothing to quarantine,
+    so corruption rejects the whole blob (``WireError``)."""
     out = _pack_header(KIND_ENTRY, int(entry.epoch))
-    _pack_entry(key, entry, out)
+    rec = bytearray()
+    _pack_entry(key, entry, rec)
+    out += struct.pack("<I", zlib.crc32(bytes(rec)))
+    out += rec
     return bytes(out)
 
 
 def loads_entry(data: bytes,
                 expect_epoch: int | None = None
                 ) -> tuple[tuple, FragmentEntry]:
+    if faults.plan is not None:
+        data = faults.mangle("wire.loads", bytes(data), kind="entry")
     _, pos = _check_header(data, KIND_ENTRY, expect_epoch)
-    key, entry, pos = _unpack_entry(data, pos)
-    if pos != len(data):
+    try:
+        (crc,) = struct.unpack_from("<I", data, pos)
+    except struct.error:
+        raise WireError("truncated entry record") from None
+    pos += 4
+    rec = data[pos:]
+    if zlib.crc32(rec) != crc:
+        raise WireError("entry record failed CRC")
+    key, entry, end = _unpack_entry(rec, 0)
+    if end != len(rec):
         raise WireError("trailing bytes after entry record")
     return key, entry
 
@@ -248,34 +363,53 @@ def dumps_cache(cache: FragmentCache, epoch: int) -> bytes:
     pos_items = [(k, e) for k, e in pos_items if e.epoch == epoch]
     neg_items = [(k, v) for k, v in neg_items if v[2] == epoch]
     out = _pack_header(KIND_CACHE, epoch)
-    _pack_obj(len(pos_items), out)
+    pos_recs = []
     for k, e in pos_items:
-        _pack_entry(k, e, out)
-    _pack_obj(len(neg_items), out)
+        rec = bytearray()
+        _pack_entry(k, e, rec)
+        pos_recs.append(bytes(rec))
+    _pack_block(pos_recs, out)
+    neg_recs = []
     for k, (overflow, ops, ep, peak) in neg_items:
-        _pack_obj(k, out)
-        _pack_obj((bool(overflow), int(ops), int(ep), int(peak)), out)
+        rec = bytearray()
+        _pack_obj(k, rec)
+        _pack_obj((bool(overflow), int(ops), int(ep), int(peak)), rec)
+        neg_recs.append(bytes(rec))
+    _pack_block(neg_recs, out)
     return bytes(out)
 
 
-def loads_cache(data: bytes, expect_epoch: int | None = None
-                ) -> tuple[list, list]:
+def _decode_pos(rec: bytes):
+    k, e, end = _unpack_entry(rec, 0)
+    return (k, e), end
+
+
+def _decode_neg(rec: bytes):
+    k, end = _unpack_obj(rec, 0)
+    v, end = _unpack_obj(rec, end)
+    if not (isinstance(v, tuple) and len(v) == 4):
+        raise WireError("malformed negative record")
+    return (k, v), end
+
+
+def loads_cache(data: bytes, expect_epoch: int | None = None,
+                corrupt: list | None = None) -> tuple[list, list]:
     """Decode cache bytes to ``(positive, negative)`` record lists without
-    touching a live cache (inspection / the service's in-memory copy)."""
+    touching a live cache (inspection / the service's in-memory copy).
+
+    Records that fail their CRC or decode are quarantined: skipped, and
+    appended to ``corrupt`` (as ``(index, reason)``) when a list is
+    passed.  Framing damage still raises ``WireError`` for the blob.
+    """
+    if faults.plan is not None:
+        data = faults.mangle("wire.loads", bytes(data), kind="cache")
     _, pos = _check_header(data, KIND_CACHE, expect_epoch)
-    n, pos = _unpack_obj(data, pos)
-    positive = []
-    for _ in range(n):
-        k, e, pos = _unpack_entry(data, pos)
-        positive.append((k, e))
-    n, pos = _unpack_obj(data, pos)
-    negative = []
-    for _ in range(n):
-        k, pos = _unpack_obj(data, pos)
-        v, pos = _unpack_obj(data, pos)
-        negative.append((k, v))
+    pos_recs, pos = _unpack_block(data, pos)
+    neg_recs, pos = _unpack_block(data, pos)
     if pos != len(data):
         raise WireError("trailing bytes after cache records")
+    positive = _decode_records(pos_recs, _decode_pos, corrupt)
+    negative = _decode_records(neg_recs, _decode_neg, corrupt)
     return positive, negative
 
 
@@ -283,9 +417,15 @@ def restore_cache(data: bytes, cache: FragmentCache, epoch: int) -> int:
     """Adopt serialized state into a (fresh) cache at store ``epoch``.
 
     Raises ``WireVersionError`` / ``WireEpochError`` before touching the
-    cache; returns the number of entries adopted.
+    cache; returns the number of entries adopted.  Corrupted records are
+    quarantined — skipped and counted in ``cache.stats.wire_corrupt`` —
+    while the rest of the deposit is adopted normally.
     """
-    positive, negative = loads_cache(data, expect_epoch=epoch)
+    corrupt: list = []
+    positive, negative = loads_cache(data, expect_epoch=epoch,
+                                     corrupt=corrupt)
+    if corrupt:
+        cache.stats.wire_corrupt += len(corrupt)
     n = 0
     for k, e in positive:
         n += bool(cache.adopt(k, e, epoch))
@@ -304,30 +444,47 @@ def dumps_hwm(planner, epoch: int) -> bytes:
     """Serialize a planner's HWM records (current-epoch ones only)."""
     items = [(k, cap) for k, cap in planner.export_hwm() if k[3] == epoch]
     out = _pack_header(KIND_HWM, epoch)
-    _pack_obj(len(items), out)
+    recs = []
     for k, cap in items:
-        _pack_obj(k, out)
-        _pack_obj(int(cap), out)
+        rec = bytearray()
+        _pack_obj(k, rec)
+        _pack_obj(int(cap), rec)
+        recs.append(bytes(rec))
+    _pack_block(recs, out)
     return bytes(out)
 
 
-def loads_hwm(data: bytes, expect_epoch: int | None = None) -> list:
+def _decode_hwm(rec: bytes):
+    k, end = _unpack_obj(rec, 0)
+    cap, end = _unpack_obj(rec, end)
+    if not isinstance(cap, int):
+        raise WireError("malformed HWM record")
+    return (k, cap), end
+
+
+def loads_hwm(data: bytes, expect_epoch: int | None = None,
+              corrupt: list | None = None) -> list:
+    """Decode HWM bytes; corrupted records quarantine like
+    :func:`loads_cache` (skipped, appended to ``corrupt``)."""
+    if faults.plan is not None:
+        data = faults.mangle("wire.loads", bytes(data), kind="hwm")
     _, pos = _check_header(data, KIND_HWM, expect_epoch)
-    n, pos = _unpack_obj(data, pos)
-    items = []
-    for _ in range(n):
-        k, pos = _unpack_obj(data, pos)
-        cap, pos = _unpack_obj(data, pos)
-        items.append((k, cap))
+    recs, pos = _unpack_block(data, pos)
     if pos != len(data):
         raise WireError("trailing bytes after HWM records")
-    return items
+    return _decode_records(recs, _decode_hwm, corrupt)
 
 
 def restore_hwm(data: bytes, planner, epoch: int) -> int:
-    """Adopt serialized HWM records into a planner; returns the count."""
+    """Adopt serialized HWM records into a planner; returns the count.
+    Corrupted records are quarantined — skipped and counted in
+    ``planner.stats.wire_corrupt`` — while the rest are adopted."""
+    corrupt: list = []
+    items = loads_hwm(data, expect_epoch=epoch, corrupt=corrupt)
+    if corrupt:
+        planner.stats.wire_corrupt += len(corrupt)
     n = 0
-    for k, cap in loads_hwm(data, expect_epoch=epoch):
+    for k, cap in items:
         n += bool(planner.adopt_hwm(k, cap, epoch))
     return n
 

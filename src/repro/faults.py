@@ -1,0 +1,248 @@
+"""Deterministic fault-injection plane for the serving stack.
+
+The paper's premise is that complex query loads "can easily overload or
+crash endpoints"; PR 9 builds the failure plane that lets the serving
+stack *prove* it survives that — and this module is the controlled way to
+make it fail.  A seeded :class:`FaultPlan` arms named **seams** — places
+in the serving stack that opted into injection — with **schedules**
+(fire on the nth call, or with a seeded per-call probability) and
+**fault kinds**:
+
+- ``raise``    — raise :class:`InjectedFault` out of the seam (the wave
+  fault domain in ``endpoint/service.py`` must bisect/retry around it);
+- ``corrupt``  — flip seeded bits in a byte payload passing through the
+  seam (``wire.loads``: the CRC32 quarantine must catch it);
+- ``delay``    — sleep ``delay_s`` at the seam (deadline checks must
+  expire the query instead of burning the wave).
+
+Wired seams (callers guard on ``faults.plan is not None`` so the
+disarmed plane costs one module-attribute read, exactly like
+``obs.enabled`` — and, like the obs registry with tracing off, a
+disarmed plane performs **zero** registry mutations):
+
+==============  ============================================================
+``drain``       top of ``QueryScheduler.drain`` (ctx: ``requests``)
+``unit.step``   before each dispatched wave unit step in ``_run_wave``
+                (ctx: ``sig`` — the wave's plan signature — and ``k``)
+``cache.replay``before the device-side all-hit replay (ctx: ``k``)
+``wire.loads``  byte payloads entering ``endpoint.wire`` loaders
+                (``corrupt`` mangles the blob; ``raise`` aborts the load)
+``parse``       inside ``EndpointService._parse`` (ctx: ``client``)
+``kernel``      inside the Pallas branch of the ``kernels.ops`` wrappers
+                (ctx: ``prim`` — what trips the per-op circuit breaker)
+==============  ============================================================
+
+Determinism: every schedule decision is a pure function of the plan's
+seed, the seam name and the seam's call ordinal — two runs of the same
+(single-threaded) serving loop under the same plan inject the same
+faults at the same calls.  ``when={...}`` restricts a spec to calls
+whose context matches (e.g. ``when={"sig": poisoned_sig}`` poisons one
+query's waves and no others — the isolation tests use exactly this).
+Matching calls still advance the seam ordinal whether or not a spec
+matches, so adding a ``when`` filter never shifts another spec's
+schedule.
+
+This module is dependency-free (stdlib only): the wire loaders import it
+and must stay importable in a device-free process, and the CI
+obs-disabled import guard covers the modules that import it.
+"""
+
+from __future__ import annotations
+
+import random
+import time
+import zlib
+from dataclasses import dataclass, field
+
+
+class InjectedFault(RuntimeError):
+    """The exception an armed ``raise`` seam throws.
+
+    Deliberately a plain ``RuntimeError`` subclass: the serving stack's
+    fault domains must catch it with the same ``except Exception``
+    handlers that catch real faults — nothing is allowed to special-case
+    injected failures, or the chaos suite would prove nothing.
+    """
+
+    def __init__(self, seam: str, call: int):
+        super().__init__(f"injected fault at seam {seam!r} (call #{call})")
+        self.seam = seam
+        self.call = call
+
+
+@dataclass(frozen=True)
+class FaultSpec:
+    """One armed fault: what to do, when to do it, and to which calls.
+
+    ``nth`` fires on exact 1-based call ordinals of the *matching* seam
+    calls (an int or a tuple of ints); ``p`` fires each matching call
+    with seeded probability; set neither and the spec fires on every
+    matching call (a hard poison — what the bisection-isolation tests
+    use together with ``when``).  ``times`` bounds total firings
+    (``None`` = unbounded).  ``when`` is an equality match against the
+    keyword context the seam call provides; keys the seam does not pass
+    never match.
+    """
+
+    kind: str  # "raise" | "corrupt" | "delay"
+    nth: int | tuple[int, ...] | None = None
+    p: float = 0.0
+    times: int | None = None
+    when: tuple[tuple[str, object], ...] | None = None
+    delay_s: float = 0.002
+    bit_flips: int = 4  # corrupt kind: seeded bit flips per payload
+
+    def __post_init__(self):
+        if self.kind not in ("raise", "corrupt", "delay"):
+            raise ValueError(f"unknown fault kind {self.kind!r}")
+        if isinstance(self.nth, int):
+            object.__setattr__(self, "nth", (self.nth,))
+        if isinstance(self.when, dict):
+            object.__setattr__(self, "when",
+                               tuple(sorted(self.when.items())))
+
+    def matches(self, ctx: dict) -> bool:
+        if self.when is None:
+            return True
+        return all(k in ctx and ctx[k] == v for k, v in self.when)
+
+
+class FaultPlan:
+    """A seeded set of armed seams; arm with :func:`arm`, disarm with
+    :func:`disarm` (or the scoped :func:`injecting` context manager).
+
+    ``specs`` maps seam name -> ``FaultSpec`` or list of specs.  Each
+    (seam, spec) pair draws from its own ``random.Random`` stream seeded
+    by ``(seed, seam, spec index)``, so one spec's draws never perturb
+    another's and runs are reproducible per seam regardless of
+    interleaving.  ``fired`` tallies firings per seam (plain dict —
+    never a registry: the fault plane owns no instruments, the serving
+    stack counts what it *observes* in its own ``endpoint.*`` /
+    ``sched.*`` instruments).
+    """
+
+    def __init__(self, seed: int, specs: dict):
+        self.seed = int(seed)
+        self.specs: dict[str, list[FaultSpec]] = {}
+        for seam, sp in specs.items():
+            lst = list(sp) if isinstance(sp, (list, tuple)) else [sp]
+            self.specs[seam] = [s if isinstance(s, FaultSpec)
+                                else FaultSpec(**s) for s in lst]
+        self._calls: dict[str, int] = {}
+        self._fired_count: dict[tuple, int] = {}
+        self._rng: dict[tuple, random.Random] = {
+            (seam, i): random.Random((self.seed, seam, i).__repr__())
+            for seam, lst in self.specs.items() for i in range(len(lst))
+        }
+        self.fired: dict[str, int] = {}
+
+    # ------------------------------------------------------------ decisions
+    def _due(self, seam: str, ctx: dict) -> FaultSpec | None:
+        """Advance the seam ordinal and return the first spec due to fire."""
+        call = self._calls.get(seam, 0) + 1
+        self._calls[seam] = call
+        due = None
+        for i, spec in enumerate(self.specs.get(seam, ())):
+            if not spec.matches(ctx):
+                continue
+            key = (seam, i)
+            n_fired = self._fired_count.get(key, 0)
+            if spec.times is not None and n_fired >= spec.times:
+                continue
+            if spec.nth is not None:
+                fire = call in spec.nth
+            elif spec.p > 0.0:
+                # one draw per matching call, fired or not: the stream
+                # position is a function of the matching-call count alone
+                fire = self._rng[key].random() < spec.p
+            else:
+                fire = True  # hard poison: every matching call
+            if fire and due is None:
+                due = spec
+                self._fired_count[key] = n_fired + 1
+                self.fired[seam] = self.fired.get(seam, 0) + 1
+        return due
+
+    def hit(self, seam: str, **ctx) -> None:
+        """A raise/delay seam: no payload crosses it."""
+        spec = self._due(seam, ctx)
+        if spec is None:
+            return
+        if spec.kind == "raise":
+            raise InjectedFault(seam, self._calls[seam])
+        if spec.kind == "delay":
+            time.sleep(spec.delay_s)
+        # "corrupt" armed on a payload-free seam: nothing to mangle
+
+    def mangle(self, seam: str, data: bytes, **ctx) -> bytes:
+        """A payload seam: returns ``data``, possibly corrupted.
+
+        ``raise`` and ``delay`` specs behave as in :meth:`hit`;
+        ``corrupt`` flips ``bit_flips`` seeded bit positions (seeded by
+        the plan seed, seam ordinal and payload CRC, so the *same*
+        payload at the same call corrupts identically across runs).
+        """
+        spec = self._due(seam, ctx)
+        if spec is None:
+            return data
+        if spec.kind == "raise":
+            raise InjectedFault(seam, self._calls[seam])
+        if spec.kind == "delay":
+            time.sleep(spec.delay_s)
+            return data
+        if not data:
+            return data
+        rng = random.Random(
+            (self.seed, seam, self._calls[seam], zlib.crc32(data)).__repr__())
+        out = bytearray(data)
+        for _ in range(spec.bit_flips):
+            pos = rng.randrange(len(out))
+            out[pos] ^= 1 << rng.randrange(8)
+        return bytes(out)
+
+
+#: The armed plan, or ``None`` (the zero-overhead default).  Seam call
+#: sites guard on ``faults.plan is not None`` — one module-attribute
+#: read on the disarmed path, like ``obs.enabled``.
+plan: FaultPlan | None = None
+
+
+def arm(new_plan: FaultPlan) -> FaultPlan:
+    """Arm ``new_plan`` globally; returns it."""
+    globals()["plan"] = new_plan
+    return new_plan
+
+
+def disarm() -> None:
+    globals()["plan"] = None
+
+
+def hit(seam: str, **ctx) -> None:
+    """Module-level convenience: no-op when disarmed.  Hot seams inline
+    the ``faults.plan is not None`` guard instead of calling this."""
+    p = plan
+    if p is not None:
+        p.hit(seam, **ctx)
+
+
+def mangle(seam: str, data: bytes, **ctx) -> bytes:
+    p = plan
+    return data if p is None else p.mangle(seam, data, **ctx)
+
+
+@dataclass
+class injecting:
+    """Scoped arming: ``with injecting(plan):`` restores the previous
+    plan on exit, so a chaos test can never leak an armed plane into the
+    next test (the analogue of ``obs.tracing``)."""
+
+    new_plan: FaultPlan
+    _prev: FaultPlan | None = field(default=None, repr=False)
+
+    def __enter__(self) -> FaultPlan:
+        self._prev = plan
+        arm(self.new_plan)
+        return self.new_plan
+
+    def __exit__(self, *exc) -> None:
+        globals()["plan"] = self._prev

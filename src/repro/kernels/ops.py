@@ -25,6 +25,14 @@ Set ``repro.kernels.ops.FORCE`` to ``"pallas"`` / ``"ref"`` to override:
 path in, so flip it before building an engine (or clear the engine's jit
 cache), not mid-run.
 
+The SPF primitives additionally ride a per-op circuit breaker
+(``BREAKER``, a :class:`KernelBreaker`): a Pallas path that faults at
+trace time falls back to the byte-identical jnp oracle for that call,
+repeated faults open the breaker (oracle-only until a half-open probe
+recovers), and ``BREAKER.generation`` is folded into the stepper's jit
+-cache keys so transitions retrace compiled steps.  Results never change
+— the two paths are bit-exact twins — only throughput degrades.
+
 Join/probe primitives (the SPF server's hot path)
 -------------------------------------------------
 - ``eqrange``             — per-query equal range in a sorted key column;
@@ -82,7 +90,7 @@ import math
 import jax
 import jax.numpy as jnp
 
-from repro import obs
+from repro import faults, obs
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.owned_probe import MAX_SHARDS, eqrange_owned_pallas
@@ -99,6 +107,129 @@ FORCE: str | None = None  # None | "pallas" | "ref"
 # touched window) or the dense full-column-stream kernel.  Read at trace
 # time like FORCE: flip it before building an engine, not mid-run.
 PROBE_VARIANT: str = "prefetch"  # "prefetch" | "dense"
+
+
+class KernelBreaker:
+    """Per-primitive circuit breaker over the Pallas dispatch.
+
+    The graceful-degradation half of the failure plane: a primitive whose
+    Pallas path keeps faulting (at trace time — these wrappers run when
+    jit traces) is **opened** after ``threshold`` consecutive faults and
+    served by the byte-identical jnp oracle instead, so a broken kernel
+    degrades throughput, never availability or results.  After
+    ``cooldown`` blocked calls the breaker goes **half-open**: the next
+    call probes the Pallas path once — success closes the breaker,
+    another fault re-opens it.  Each individual fault also falls back to
+    the oracle for that call (the caller never sees the exception), so a
+    *transient* fault below the threshold costs one slow call and
+    nothing else.
+
+    ``generation`` increments on every state transition and is folded
+    into the stepper's jit-cache keys (like ``FORCE``), so compiled step
+    functions that baked the old path are retraced after a transition —
+    without it an open breaker would be invisible to already-compiled
+    engines.  Transitions are mirrored as obs-gated
+    ``kernels.breaker.<prim>.<state>`` instruments and tracer instants;
+    the breaker itself always works, armed observability or not.
+
+    The model-stack kernels (``attention``) are deliberately *not*
+    guarded: their fallbacks are numerically close, not byte-identical,
+    so a silent mid-run path swap could change model outputs.  Only the
+    SPF probe/digest/replay primitives — whose two paths are bit-exact
+    twins pinned by the parity tests — ride the breaker.
+    """
+
+    CLOSED, OPEN, HALF_OPEN = "closed", "open", "half_open"
+
+    def __init__(self, threshold: int = 3, cooldown: int = 8):
+        self.threshold = threshold  # consecutive faults that open
+        self.cooldown = cooldown  # blocked calls before the half-open probe
+        self.generation = 0
+        self._state: dict[str, str] = {}
+        self._consec: dict[str, int] = {}  # consecutive faults while closed
+        self._blocked: dict[str, int] = {}  # oracle-served calls while open
+
+    def state(self, prim: str) -> str:
+        return self._state.get(prim, self.CLOSED)
+
+    def snapshot(self) -> dict[str, str]:
+        """Non-closed breaker states, {prim: state}."""
+        return {p: s for p, s in self._state.items() if s != self.CLOSED}
+
+    def reset(self) -> None:
+        if self._state:
+            self.generation += 1
+        self._state.clear()
+        self._consec.clear()
+        self._blocked.clear()
+
+    def _transition(self, prim: str, new: str) -> None:
+        self._state[prim] = new
+        self.generation += 1
+        if obs.enabled:
+            obs.registry.inc(f"kernels.breaker.{prim}.{new}")
+            tr = obs.tracer
+            if tr:
+                tr.instant("kernel.breaker", prim=prim, state=new)
+
+    def allow(self, prim: str) -> bool:
+        """May this call try the Pallas path?  Open breakers count the
+        blocked call; the ``cooldown``-th moves to half-open (the *next*
+        call is the probe — this one still takes the oracle)."""
+        st = self._state.get(prim, self.CLOSED)
+        if st != self.OPEN:
+            return True
+        b = self._blocked.get(prim, 0) + 1
+        self._blocked[prim] = b
+        if b >= self.cooldown:
+            self._blocked[prim] = 0
+            self._transition(prim, self.HALF_OPEN)
+        return False
+
+    def record_fault(self, prim: str) -> None:
+        st = self._state.get(prim, self.CLOSED)
+        if st == self.HALF_OPEN:  # failed probe: straight back to open
+            self._blocked[prim] = 0
+            self._transition(prim, self.OPEN)
+            return
+        c = self._consec.get(prim, 0) + 1
+        self._consec[prim] = c
+        if st == self.CLOSED and c >= self.threshold:
+            self._blocked[prim] = 0
+            self._transition(prim, self.OPEN)
+
+    def record_ok(self, prim: str) -> None:
+        if self._state.get(prim, self.CLOSED) == self.HALF_OPEN:
+            self._transition(prim, self.CLOSED)
+        self._consec[prim] = 0
+
+
+#: The process-wide breaker all guarded wrappers consult.  Tests swap or
+#: ``reset()`` it; ``stepper`` folds ``BREAKER.generation`` into its jit
+#: -cache keys so transitions force retraces.
+BREAKER = KernelBreaker()
+
+
+def _guarded(prim: str, pallas_fn, ref_fn):
+    """Run ``pallas_fn`` under the breaker, falling back to ``ref_fn``.
+
+    The ``kernel`` fault seam fires *inside* the try: an injected kernel
+    fault is indistinguishable from a real trace-time failure, so the
+    chaos suite exercises exactly the production fallback path.
+    """
+    if not BREAKER.allow(prim):
+        _note(prim, "breaker_ref")
+        return ref_fn()
+    try:
+        if faults.plan is not None:
+            faults.hit("kernel", prim=prim)
+        out = pallas_fn()
+    except Exception:
+        BREAKER.record_fault(prim)
+        _note(prim, "breaker_ref")
+        return ref_fn()
+    BREAKER.record_ok(prim)
+    return out
 
 
 def _use_pallas() -> bool:
@@ -143,10 +274,13 @@ def sorted_probe(keys: jnp.ndarray, queries: jnp.ndarray
                  ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """(rank, contains) of each query in a sorted key array."""
     if _use_pallas():
-        _note("sorted_probe", "pallas")
-        rank_lo, _, contains = sorted_probe_pallas(keys, queries,
-                                                   interpret=_interpret())
-        return rank_lo, contains
+        def _pl():
+            _note("sorted_probe", "pallas")
+            rank_lo, _, contains = sorted_probe_pallas(
+                keys, queries, interpret=_interpret())
+            return rank_lo, contains
+        return _guarded("sorted_probe", _pl,
+                        lambda: ref.sorted_probe_ref(keys, queries))
     _note("sorted_probe", "ref")
     return ref.sorted_probe_ref(keys, queries)
 
@@ -171,10 +305,13 @@ def eqrange(sorted_keys: jnp.ndarray, query_keys: jnp.ndarray
     """
     if _use_pallas() and (FORCE == "pallas"
                           or query_keys.shape[0] >= MIN_PALLAS_QUERIES):
-        _note("eqrange", "pallas")
-        rank_lo, rank_hi, _ = sorted_probe_pallas(sorted_keys, query_keys,
-                                                  interpret=_interpret())
-        return rank_lo, rank_hi
+        def _pl():
+            _note("eqrange", "pallas")
+            rank_lo, rank_hi, _ = sorted_probe_pallas(
+                sorted_keys, query_keys, interpret=_interpret())
+            return rank_lo, rank_hi
+        return _guarded("eqrange", _pl,
+                        lambda: ref.eqrange_ref(sorted_keys, query_keys))
     _note("eqrange", "ref")
     return ref.eqrange_ref(sorted_keys, query_keys)
 
@@ -194,10 +331,13 @@ def searchsorted(sorted_keys: jnp.ndarray, queries: jnp.ndarray,
         raise ValueError(f"side must be 'left' or 'right', got {side!r}")
     if _use_pallas() and (FORCE == "pallas"
                           or queries.shape[0] >= MIN_PALLAS_QUERIES):
-        _note("searchsorted", "pallas")
-        rank_lo, rank_hi, _ = sorted_probe_pallas(sorted_keys, queries,
-                                                  interpret=_interpret())
-        return rank_lo if side == "left" else rank_hi
+        def _pl():
+            _note("searchsorted", "pallas")
+            rank_lo, rank_hi, _ = sorted_probe_pallas(
+                sorted_keys, queries, interpret=_interpret())
+            return rank_lo if side == "left" else rank_hi
+        return _guarded("searchsorted", _pl,
+                        lambda: ref.rank_ref(sorted_keys, queries, side=side))
     _note("searchsorted", "ref")
     return ref.rank_ref(sorted_keys, queries, side=side)
 
@@ -224,17 +364,22 @@ def eqrange_owned(sorted_keys: jnp.ndarray, query_keys: jnp.ndarray,
     batches and shard counts past the kernel's fold-mod bound stay on the
     jnp masking path (same auto-dispatch policy as ``eqrange``).
     """
+    def _rf():
+        owned = ref.subject_shard_ref(subjects, n_shards) == my_shard
+        lo, hi = eqrange(sorted_keys, query_keys)
+        return lo, jnp.where(owned, hi, lo), owned
+
     if _use_pallas() and n_shards <= MAX_SHARDS \
             and (FORCE == "pallas"
                  or query_keys.shape[0] >= MIN_PALLAS_QUERIES):
-        _note("eqrange_owned", "pallas")
-        return eqrange_owned_pallas(sorted_keys, query_keys, subjects,
-                                    my_shard, n_shards,
-                                    interpret=_interpret())
+        def _pl():
+            _note("eqrange_owned", "pallas")
+            return eqrange_owned_pallas(sorted_keys, query_keys, subjects,
+                                        my_shard, n_shards,
+                                        interpret=_interpret())
+        return _guarded("eqrange_owned", _pl, _rf)
     _note("eqrange_owned", "ref")
-    owned = ref.subject_shard_ref(subjects, n_shards) == my_shard
-    lo, hi = eqrange(sorted_keys, query_keys)
-    return lo, jnp.where(owned, hi, lo), owned
+    return _rf()
 
 
 def run_probe(values: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray,
@@ -243,16 +388,22 @@ def run_probe(values: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray,
     ``values[lo[i]:hi[i]]``; ``pos`` is the absolute "left" insertion point.
     """
     if _use_pallas():
-        if PROBE_VARIANT == "prefetch":
-            _note("run_probe", "prefetch")
-            return run_probe_prefetch_pallas(values, lo, hi, targets,
-                                             interpret=_interpret())
-        if PROBE_VARIANT != "dense":
+        # config validation stays outside the breaker guard: a bad
+        # PROBE_VARIANT is a caller error, never a kernel fault to absorb
+        if PROBE_VARIANT not in ("prefetch", "dense"):
             raise ValueError(f"ops.PROBE_VARIANT must be 'prefetch' or "
                              f"'dense'; got {PROBE_VARIANT!r}")
-        _note("run_probe", "dense")
-        return run_probe_pallas(values, lo, hi, targets,
-                                interpret=_interpret())
+
+        def _pl():
+            if PROBE_VARIANT == "prefetch":
+                _note("run_probe", "prefetch")
+                return run_probe_prefetch_pallas(values, lo, hi, targets,
+                                                 interpret=_interpret())
+            _note("run_probe", "dense")
+            return run_probe_pallas(values, lo, hi, targets,
+                                    interpret=_interpret())
+        return _guarded("run_probe", _pl,
+                        lambda: ref.run_probe_ref(values, lo, hi, targets))
     _note("run_probe", "ref")
     return ref.run_probe_ref(values, lo, hi, targets)
 
@@ -286,9 +437,13 @@ def fingerprint_rows(block: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
     content beyond the row count and always take the jnp path.
     """
     if _use_pallas() and block.shape[1] > 0:
-        _note("fingerprint_rows", "pallas")
-        from repro.kernels.fingerprint import fingerprint_rows_pallas
-        return fingerprint_rows_pallas(block, valid, interpret=_interpret())
+        def _pl():
+            _note("fingerprint_rows", "pallas")
+            from repro.kernels.fingerprint import fingerprint_rows_pallas
+            return fingerprint_rows_pallas(block, valid,
+                                           interpret=_interpret())
+        return _guarded("fingerprint_rows", _pl,
+                        lambda: ref.fingerprint_rows_ref(block, valid))
     _note("fingerprint_rows", "ref")
     return ref.fingerprint_rows_ref(block, valid)
 
@@ -308,11 +463,15 @@ def replay_delta(seed_rows: jnp.ndarray, src: jnp.ndarray,
     parity tests).  vmap-safe: the scheduler replays whole waves at once.
     """
     if _use_pallas() and seed_rows.shape[1] > 0:
-        _note("replay_delta", "pallas")
-        from repro.kernels.replay import replay_delta_pallas
-        return replay_delta_pallas(seed_rows, src, written, n_out,
-                                   write_cols=tuple(write_cols),
-                                   interpret=_interpret())
+        def _pl():
+            _note("replay_delta", "pallas")
+            from repro.kernels.replay import replay_delta_pallas
+            return replay_delta_pallas(seed_rows, src, written, n_out,
+                                       write_cols=tuple(write_cols),
+                                       interpret=_interpret())
+        return _guarded("replay_delta", _pl,
+                        lambda: ref.replay_delta_ref(seed_rows, src, written,
+                                                     n_out, tuple(write_cols)))
     _note("replay_delta", "ref")
     return ref.replay_delta_ref(seed_rows, src, written, n_out,
                                 tuple(write_cols))

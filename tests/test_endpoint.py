@@ -471,3 +471,142 @@ def test_endpoint_latency_instruments_only_under_obs():
     assert snap["endpoint.latency_s"]["count"] == 1
     assert snap["endpoint.queue_wait_s"]["count"] == 1
     obs.registry.reset()
+
+
+# --------------------------------------------------------------------------
+# wire corruption quarantine (v2 per-record CRC)
+# --------------------------------------------------------------------------
+
+def test_wire_bit_flips_quarantine_never_adopt_corruption():
+    """The v2 quarantine property, under random bit-flips: either the
+    framing is hit and the whole blob is rejected (nothing adopted), or
+    the per-record CRC32 skips exactly the damaged records — every
+    record that IS adopted is byte-identical to the donor's, and the
+    quarantined count lands in ``cache.wire_corrupt``."""
+    import random
+
+    rng_np = np.random.default_rng(7)
+    donor = FragmentCache(capacity=16)
+    for i in range(5):
+        e = FragmentEntry(rng_np.integers(0, 99, size=(4,)).astype(np.int32),
+                          rng_np.integers(0, 99, size=(4, 2)).astype(np.int32),
+                          False, i, 0, i + 1)
+        donor.put(("pos", i), e, epoch=0)
+    for i in range(2):
+        donor.put(("neg", i),
+                  FragmentEntry(np.zeros((0,), np.int32),
+                                np.zeros((0, 0), np.int32), True, i, 0, 1),
+                  epoch=0)
+    blob = wire.dumps_cache(donor, 0)
+    donor_pos = dict(donor.export_state()[0])
+    total = len(donor) + donor.n_negative
+
+    rng = random.Random(99)
+    quarantined = rejected = 0
+    for _ in range(40):
+        bad = bytearray(blob)
+        for _ in range(rng.randint(1, 6)):
+            i = rng.randrange(len(bad))
+            bad[i] ^= 1 << rng.randrange(8)
+        fresh = FragmentCache(capacity=16)
+        try:
+            n = wire.restore_cache(bytes(bad), fresh, 0)
+        except wire.WireError:
+            rejected += 1
+            assert len(fresh) == 0 and fresh.n_negative == 0
+            continue
+        # conservation: every donor record was adopted or quarantined
+        assert n + fresh.stats.wire_corrupt == total
+        if fresh.stats.wire_corrupt:
+            quarantined += 1
+        for key, want in donor_pos.items():
+            got = fresh.get(key, epoch=0)
+            if got is not None:
+                assert got.src_row.tobytes() == want.src_row.tobytes()
+                assert got.written.tobytes() == want.written.tobytes()
+                assert (got.overflow, got.ops, got.epoch, got.peak) \
+                    == (want.overflow, want.ops, want.epoch, want.peak)
+    # the seeded flips exercised both failure paths
+    assert quarantined > 0 and rejected > 0
+
+
+def test_wire_hwm_bit_flips_quarantine_records():
+    store = _tiny_store()
+    planner = CapacityPlanner(store, EngineConfig(interface="spf"))
+    for k in range(4):
+        planner.adopt_hwm((("sig", k), (), k, 0), 64 << k, 0)
+    blob = wire.dumps_hwm(planner, 0)
+    import random
+    rng = random.Random(5)
+    quarantined = rejected = 0
+    for _ in range(30):
+        bad = bytearray(blob)
+        bad[rng.randrange(len(bad))] ^= 1 << rng.randrange(8)
+        fresh = CapacityPlanner(store, EngineConfig(interface="spf"))
+        try:
+            n = wire.restore_hwm(bytes(bad), fresh, 0)
+        except wire.WireError:
+            rejected += 1
+            assert fresh.export_hwm() == []
+            continue
+        assert n + fresh.stats.wire_corrupt == 4
+        want = dict(planner.export_hwm())
+        for key, cap in fresh.export_hwm():
+            assert want[key] == cap  # adopted records are exact
+        if fresh.stats.wire_corrupt:
+            quarantined += 1
+    assert quarantined > 0 and rejected > 0
+
+
+# --------------------------------------------------------------------------
+# overload: fairness, immediate rejects, shedding
+# --------------------------------------------------------------------------
+
+def test_flooding_client_cannot_starve_light_client_end_to_end():
+    """Admission + round-robin packing, end to end: a client flooding
+    far past its in-flight bound gets clipped with immediate
+    ``retry_after_s`` hints while the light client's single request is
+    served byte-identically."""
+    store = _tiny_store()
+    cfg = EngineConfig(interface="endpoint")
+    want = results_as_numpy(QueryEngine(store, cfg).run(_two_star_bgp())[0])
+    sched = QueryScheduler(store, cfg)
+    svc = EndpointService(sched, ServiceConfig(max_inflight_per_client=4,
+                                               wave_budget=4))
+    bgp = _two_star_bgp()
+    flood = [EndpointRequest(client=0, query=bgp) for _ in range(20)]
+    light = EndpointRequest(client=1, query=bgp)
+    resps = svc.serve(flood + [light])
+
+    lite = resps[-1]
+    assert lite.status == "ok" and lite.rows.tobytes() == want.tobytes()
+    statuses = [r.status for r in resps[:-1]]
+    assert statuses.count("ok") == 4  # clipped at the bound
+    assert statuses.count("rejected") == 16
+    for r in resps[:-1]:
+        if r.status == "rejected":
+            # the reject is immediate and actionable
+            assert r.rows is None and r.retry_after_s is not None
+            assert r.retry_after_s > 0
+    snap = sched.snapshot()
+    assert snap["endpoint.rejected"] == 16
+    assert all(v == 0 for v in svc._inflight.values())
+
+
+def test_queue_bound_sheds_with_retry_after():
+    store = _tiny_store()
+    sched = QueryScheduler(store, EngineConfig(interface="endpoint"))
+    svc = EndpointService(sched, ServiceConfig(max_queue=2,
+                                               max_inflight_per_client=64))
+    bgp = _two_star_bgp()
+    resps = svc.serve([EndpointRequest(client=c, query=bgp)
+                       for c in range(8)])
+    statuses = [r.status for r in resps]
+    assert statuses.count("rejected") >= 1
+    assert statuses.count("ok") >= 2
+    for r in resps:
+        if r.status == "rejected":
+            assert r.error == "service overloaded"
+            assert r.retry_after_s is not None and r.retry_after_s > 0
+    snap = sched.snapshot()
+    assert snap["endpoint.shed"] == statuses.count("rejected")
