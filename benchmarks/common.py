@@ -316,6 +316,172 @@ def endpoint_serve(load: str, n_clients: int, interface: str = "endpoint",
     }
 
 
+def live_ingest_serve(load: str, n_clients: int, rate_pct: float,
+                      rounds: int = 3, interface: str = "spf",
+                      lanes: int = 16, n_hot_preds: int = 2, seed: int = 0):
+    """One ``fig_live_ingest`` measurement point: serve a multi-client
+    stream through ``rounds`` consecutive write windows at a sustained
+    write rate of ``rate_pct`` percent of the store per window, on both
+    serving modes:
+
+    - **live**: each window's writes land as a delta batch through
+      ``sched.ingest`` (sorted insert/tombstone overlay, merged
+      base+delta probes, epoch-pipelined waves, cache/HWM carry-over,
+      ``maybe_compact`` past the fold threshold) and the *same*
+      scheduler keeps serving;
+    - **rebuild**: the stop-the-world baseline — each window pays a full
+      ``TripleStore.build`` of the merged triple set and a fresh
+      scheduler (cold fragment cache) before serving.
+
+    Both paths replay the *same* delta batches, so every window's
+    logical store is identical and the byte-identity flag compares the
+    two paths' results window by window.  Writes follow the append-feed
+    shape of real KG write loads: ~90% of each window lands on
+    ``n_hot_preds`` *feed* predicates (the most populated ones outside
+    the query load's constant predicates — ingest feeds are typically
+    disjoint from the analytic working set), and ~10% on one uniformly
+    drawn *stray* predicate per window, so a share of windows does
+    intersect the read working set and pays the recompute + sweep that
+    any system pays when reads meet writes.  Carry-over is what the
+    live path exploits on the rest: fragments and high-water marks over
+    untouched predicates survive each delta epoch.  The throughput
+    quotient counts the write-application cost on both paths (delta
+    apply + occasional compaction vs full rebuild) — it is *sustained*
+    queries/min under writes, not a cache microbench.
+    """
+    import numpy as np
+
+    from repro import obs
+    from repro.core import results_as_numpy
+
+    qs = bench_load(load)
+    g, _ = bench_graph()
+    stream = interleave_clients(list(qs), n_clients)
+    cfg = EngineConfig(interface=interface)
+    scfg = SchedulerConfig(lanes=lanes)
+    rng = np.random.default_rng(seed)
+
+    def fresh_store():
+        # private copies: the delta evolution must never leak into the
+        # memoised bench instance other figures read
+        return TripleStore.build(g.s, g.p, g.o, n_terms=g.n_terms,
+                                 n_predicates=g.n_predicates)
+
+    live = fresh_store()
+    n0 = live.n_triples
+    n_delta = max(4, int(rate_pct / 100.0 * n0))
+    # feed predicates: most populated outside the load's constants
+    counts = np.bincount(np.asarray(g.p), minlength=g.n_predicates)
+    load_preds = {t.p.id for q in qs for t in q.patterns if not t.p.is_var}
+    feed = np.array([p for p in np.argsort(counts)[::-1]
+                     if int(p) not in load_preds][:n_hot_preds])
+
+    def make_batch(store):
+        stray = int(rng.integers(0, g.n_predicates))
+        n_stray = max(1, n_delta // 10)
+        ms, mp, mo = store.merged_triples()
+        pool = np.nonzero(np.isin(mp, np.append(feed, stray)))[0]
+        n_del = min(n_delta // 2, pool.size)
+        idx = rng.choice(pool, n_del, replace=False)
+        n_ins = n_delta - n_del
+        preds = np.where(np.arange(n_ins) < n_stray, stray,
+                         feed[rng.integers(0, feed.size, n_ins)])
+        ins = (rng.integers(0, g.n_terms, n_ins), preds,
+               rng.integers(0, g.n_terms, n_ins))
+        return dict(insert=ins, delete=(ms[idx], mp[idx], mo[idx]))
+
+    # --- live path: one scheduler serving through the writes ------------
+    sched = QueryScheduler(live, cfg, scfg)
+    sched.serve(stream)  # warm compile + fill the cache
+    # steady-state priming (untimed, like every warm pass here): the
+    # first write flips the unit steps from the no-delta fast path to
+    # the merged base+delta trace; the store pads the delta to one
+    # stable bucket, so this single compile covers every later delta
+    # epoch until compaction.  The baseline is symmetric — its rebuilt
+    # stores keep the warmed shapes of the pre-write pass.
+    prime = make_batch(live)
+    sched.ingest(**prime)
+    sched.serve(stream)
+    batches, live_out = [], []
+    c0 = (sched.cache.stats.carryover, sched.cache.stats.swept,
+          sched.planner.stats.carryover)
+    base_snap = sched.snapshot()
+    live_s = ingest_s = 0.0
+    compactions = 0
+    with obs.tracing(trace=False):  # registry-only: latency, no fences
+        for _ in range(rounds):
+            batch = make_batch(live)
+            batches.append(batch)
+            t0 = time.perf_counter()
+            sched.ingest(**batch)
+            if live.maybe_compact(frac=0.25):
+                compactions += 1
+                sched._refresh_epoch()
+            ingest_s += time.perf_counter() - t0
+            t0 = time.perf_counter()
+            live_out.append(sched.serve(stream))
+            live_s += time.perf_counter() - t0
+    diff = sched.snapshot() - base_snap
+    carry = sched.cache.stats.carryover - c0[0]
+    swept = sched.cache.stats.swept - c0[1]
+    hwm_carry = sched.planner.stats.carryover - c0[2]
+    lat = diff.get("sched.query_latency_s", {})
+
+    # --- rebuild baseline: stop-the-world per window ---------------------
+    shadow = fresh_store()  # bookkeeping only: replays the batches
+    shadow.apply_delta(**prime)
+    ms, mp, mo = shadow.merged_triples()
+    bstore = TripleStore.build(ms, mp, mo, n_terms=g.n_terms,
+                               n_predicates=g.n_predicates)
+    bsched = QueryScheduler(bstore, cfg, scfg)
+    bsched.serve(stream)  # warm compile at the primed store's shapes
+    base_out = []
+    rebuild_s = build_s = 0.0
+    for batch in batches:
+        shadow.apply_delta(**batch)
+        ms, mp, mo = shadow.merged_triples()
+        t0 = time.perf_counter()
+        bstore = TripleStore.build(ms, mp, mo, n_terms=g.n_terms,
+                                   n_predicates=g.n_predicates)
+        bsched = QueryScheduler(bstore, cfg, scfg)
+        build_s += time.perf_counter() - t0
+        t0 = time.perf_counter()
+        base_out.append(bsched.serve(stream))
+        rebuild_s += time.perf_counter() - t0
+
+    identical = all(
+        np.array_equal(results_as_numpy(a), results_as_numpy(b))
+        for lo, bo in zip(live_out, base_out)
+        for (a, _), (b, _) in zip(lo, bo))
+    n_served = rounds * len(stream)
+    live_total = live_s + ingest_s
+    rebuild_total = rebuild_s + build_s
+    return {
+        "load": load, "interface": interface, "clients": n_clients,
+        "rate_pct_per_window": rate_pct, "rounds": rounds,
+        "requests_per_window": len(stream),
+        "delta_triples_per_window": n_delta,
+        "store_triples": n0,
+        "feed_predicates": [int(p) for p in feed],
+        "live_serve_s": live_s, "live_ingest_s": ingest_s,
+        "live_total_s": live_total,
+        "rebuild_serve_s": rebuild_s, "rebuild_build_s": build_s,
+        "rebuild_total_s": rebuild_total,
+        "speedup": rebuild_total / live_total if live_total
+        else float("inf"),
+        "live_queries_per_min": n_served * 60.0 / live_total
+        if live_total else 0.0,
+        "rebuild_queries_per_min": n_served * 60.0 / rebuild_total
+        if rebuild_total else 0.0,
+        "latency_p50_s": lat.get("p50", 0.0),
+        "latency_p99_s": lat.get("p99", 0.0),
+        "compactions": compactions,
+        "cache_carryover": int(carry), "cache_swept": int(swept),
+        "planner_carryover": int(hwm_carry),
+        "byte_identical": bool(identical),
+    }
+
+
 def sched_mesh_vs_vmap(load: str, n_clients: int, interface: str = "spf",
                        lanes: int = 16):
     """Serve one interleaved multi-client stream through both wave

@@ -35,6 +35,11 @@ Figures covered:
                         gather traffic fed through the throughput model
                         (run with 8 forced host devices in CI); writes
                         BENCH_shard_sched.json
+  fig_live_ingest       sustained serving under live writes: delta-overlay
+                        ingest (merged base+delta probes, carry-over,
+                        threshold compaction) vs stop-the-world rebuild at
+                        write rates {0.1,1,10}%/window; writes
+                        BENCH_live_ingest.json (CI uploads it)
   fig_kernels           calibrated kernel microbench: prefetch vs dense
                         run_probe, point-probe calibration fit (what
                         kops.probe_op_cost charges per tile pass),
@@ -367,6 +372,67 @@ def fig_shard_sched() -> None:
     print(f"# wrote {out} ({len(records)} records)", file=sys.stderr)
 
 
+# ------------------------------------------------- live ingest
+
+def fig_live_ingest() -> None:
+    """Sustained serving under live writes: the delta-overlay ingest path
+    (merged base+delta probes, epoch-pipelined waves, cache/HWM
+    carry-over, threshold compaction) against the stop-the-world
+    rebuild baseline, at write rates of {0.1, 1, 10} percent of the
+    store per write window.  Emits CSV rows and the
+    ``BENCH_live_ingest.json`` artifact; the acceptance gate reads the
+    1%-rate record's ``speedup`` (>= 3x sustained throughput vs
+    rebuild) with ``cache_carryover > 0`` and ``byte_identical``.
+
+    Read the rate sweep as regimes, not a dose-response curve: windows
+    whose stray predicate intersects the read working set pay the
+    recompute (and first-time delta-shape compiles of its retry rungs)
+    that any system pays when reads meet writes, and the 10% rate
+    crosses the compaction threshold mid-measurement — the fold plus
+    its re-trace lands in the timed window, which is the honest cost of
+    sustained high-rate ingest.  The carry-over win is the
+    steady-state skewed-write regime the 1% record captures.
+
+    Environment knobs (CI smoke restricts clients/rounds):
+      BENCH_INGEST_LOAD     load name, default "2-stars"
+      BENCH_INGEST_CLIENTS  int, default 16
+      BENCH_INGEST_RATES    comma list of percent/window, default "0.1,1,10"
+      BENCH_INGEST_ROUNDS   write windows per rate, default 3
+      BENCH_INGEST_JSON     output path, default BENCH_live_ingest.json
+    """
+    from benchmarks.common import live_ingest_serve
+
+    load = os.environ.get("BENCH_INGEST_LOAD", "2-stars")
+    clients = int(os.environ.get("BENCH_INGEST_CLIENTS", "16"))
+    rates = tuple(
+        float(r) for r in os.environ.get("BENCH_INGEST_RATES",
+                                         "0.1,1,10").split(",") if r)
+    rounds = int(os.environ.get("BENCH_INGEST_ROUNDS", "3"))
+    records = []
+    for rate in rates:
+        r = live_ingest_serve(load, clients, rate, rounds=rounds)
+        r["latency_p50_ms"] = 1e3 * r.pop("latency_p50_s")
+        r["latency_p99_ms"] = 1e3 * r.pop("latency_p99_s")
+        records.append(r)
+        emit(f"fig_live_ingest/{load}/rate{rate:g}pct",
+             1e6 * r["live_total_s"] / max(r["rounds"]
+                                           * r["requests_per_window"], 1),
+             f"live_qpm={r['live_queries_per_min']:.1f};"
+             f"rebuild_qpm={r['rebuild_queries_per_min']:.1f};"
+             f"speedup={r['speedup']:.2f};"
+             f"p50_ms={r['latency_p50_ms']:.2f};"
+             f"p99_ms={r['latency_p99_ms']:.2f};"
+             f"carryover={r['cache_carryover']};"
+             f"swept={r['cache_swept']};"
+             f"compactions={r['compactions']};"
+             f"identical={int(r['byte_identical'])}")
+    out = os.environ.get("BENCH_INGEST_JSON", "BENCH_live_ingest.json")
+    with open(out, "w") as f:
+        json.dump({"figure": "fig_live_ingest", "records": records}, f,
+                  indent=2)
+    print(f"# wrote {out} ({len(records)} records)", file=sys.stderr)
+
+
 # ------------------------------------------------- calibrated kernel bench
 
 def fig_kernels() -> None:
@@ -504,6 +570,41 @@ def fig_kernels() -> None:
     record("probe_calibration", sum(walls),
            f"tile_pass_ops={tile_pass_ops:.3g};source={source};"
            f"fitted_ops={fitted:.3g}")
+
+    # --- merged base+delta probe: wall vs delta fraction -----------------
+    # the live-ingest hot path: every dispatched probe adds an eqrange
+    # over the sorted insert keys and a rank count over the tombstone
+    # positions on top of its base window.  Timed through the dispatch
+    # layer at delta sizes of {1, 10, 50}% of the base column, parity
+    # checked against the numpy twin.
+    base_lo64 = rng.integers(0, n_keys, n_q)
+    base_hi64 = np.minimum(n_keys, base_lo64 + rng.integers(0, 256, n_q))
+    d_lo = jnp.asarray(base_lo64.astype(np.int32))
+    d_hi = jnp.asarray(base_hi64.astype(np.int32))
+    d_q64 = rng.integers(0, 4 * n_keys, n_q)
+    d_q64[:n_q // 2] = np.asarray(values)[
+        rng.integers(0, n_keys, n_q // 2)]  # half exact hits
+    d_q = jnp.asarray(d_q64.astype(np.int64))
+    for frac in (0.01, 0.1, 0.5):
+        m = max(8, int(frac * n_keys))
+        ins64 = np.sort(rng.integers(0, 4 * n_keys, m).astype(np.int64))
+        tomb64 = np.sort(rng.choice(n_keys, min(m // 2, n_keys),
+                                    replace=False).astype(np.int32))
+        ins = jnp.asarray(ins64)
+        tomb = jnp.asarray(tomb64)
+        want = ref.delta_probe_np(ins64, tomb64, np.asarray(d_q64),
+                                  base_lo64.astype(np.int32),
+                                  np.minimum(n_keys, base_hi64)
+                                  .astype(np.int32))
+        wall, got = timed(
+            lambda i, t, q, lo, hi: ops.delta_probe(i, t, q, lo, hi),
+            ins, tomb, d_q, d_lo, d_hi)
+        same = all(np.array_equal(np.asarray(a), np.asarray(b))
+                   for a, b in zip(got, want))
+        record(f"delta_probe/frac{frac:g}", wall,
+               f"backend={backend};interpret={int(interp)};"
+               f"delta_keys={m};identical={int(same)}",
+               identical=bool(same), delta_frac=frac)
 
     # --- wave fingerprint + cache replay --------------------------------
     block = jnp.asarray(rng.integers(0, 1 << 20, (trim, 4)).astype(np.int32))
@@ -765,7 +866,7 @@ def fig_endpoint() -> None:
 FIGS = [fig4_loadstats, fig5_throughput, fig5f_timeouts, fig6_server_load,
         fig7_network, fig8_latency, fig_sched_throughput, fig_sched_trace,
         fig_endpoint, fig_capacity, fig_dist_sched, fig_shard_sched,
-        fig_kernels, kernels]
+        fig_live_ingest, fig_kernels, kernels]
 
 # figures that never touch the WatDiv bench instance
 _STORELESS = (fig_kernels, kernels)

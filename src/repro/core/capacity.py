@@ -77,6 +77,10 @@ class PlannerStats(RegistryView):
         "hwm_caps",  # capacities served from the high-water-mark memory
         "observations",
         "swept",  # HWM entries dropped on an epoch sweep
+        # HWM entries re-keyed to a new epoch because the delta touched
+        # none of their constants' predicates (warm carry-over; mirrors
+        # cache.carryover)
+        "carryover",
         # wire HWM records quarantined on restore (CRC/decode failure in
         # endpoint.wire): skipped and counted, never adopted
         "wire_corrupt",
@@ -101,6 +105,9 @@ class CapacityPlanner:
     stats: PlannerStats = None
     _hwm: OrderedDict = field(default_factory=OrderedDict, repr=False)
     _deg_epoch: int = field(default=-1, repr=False)
+    _deg_base_epoch: int = field(default=-1, repr=False)
+    _base_ps: np.ndarray | None = field(default=None, repr=False)
+    _base_po: np.ndarray | None = field(default=None, repr=False)
     _max_ps: np.ndarray | None = field(default=None, repr=False)
     _max_po: np.ndarray | None = field(default=None, repr=False)
     _swept_epoch: int = field(default=0, repr=False)
@@ -144,18 +151,34 @@ class CapacityPlanner:
 
     # ------------------------------------------------------- degree oracle
     def _degree_stats(self) -> tuple[np.ndarray, np.ndarray]:
-        """(max subject out-degree, max object in-degree) per predicate,
-        computed once per store epoch via ``kops`` segment reductions."""
-        if self._deg_epoch != self.store.epoch or self._max_ps is None:
+        """(max subject out-degree, max object in-degree) per predicate.
+
+        The base half is a pair of ``kops`` segment reductions over the
+        immutable base index, cached per **base** epoch (a delta epoch
+        never re-touches the full store).  Under a delta overlay the
+        merged degree of a run is bounded by base max + insert max (the
+        two interleave), so the per-epoch half adds the insert-set's
+        per-predicate max run lengths (``TripleStore.max_ins_degrees`` —
+        delta-sized work).  Tombstones only shrink runs, so the sum stays
+        a valid upper bound.
+        """
+        if self._deg_base_epoch != self.store.base_epoch \
+                or self._base_ps is None:
             s = self.store
             n_seg = s.n_predicates + 1
             seg_ps = jnp.asarray(s.h_key_ps // s.radix, jnp.int64)
             seg_po = jnp.asarray(s.h_key_po // s.radix, jnp.int64)
-            self._max_ps = np.asarray(kops.max_run_length_per_segment(
+            self._base_ps = np.asarray(kops.max_run_length_per_segment(
                 jnp.asarray(s.h_key_ps), seg_ps, n_seg))
-            self._max_po = np.asarray(kops.max_run_length_per_segment(
+            self._base_po = np.asarray(kops.max_run_length_per_segment(
                 jnp.asarray(s.h_key_po), seg_po, n_seg))
-            self._deg_epoch = s.epoch
+            self._deg_base_epoch = s.base_epoch
+            self._deg_epoch = -1  # force the delta half to recompute
+        if self._deg_epoch != self.store.epoch or self._max_ps is None:
+            ins_ps, ins_po = self.store.max_ins_degrees()
+            self._max_ps = self._base_ps + ins_ps
+            self._max_po = self._base_po + ins_po
+            self._deg_epoch = self.store.epoch
         return self._max_ps, self._max_po
 
     def _branch_factor(self, consts: tuple[int, ...], branch) -> int:
@@ -171,8 +194,9 @@ class CapacityPlanner:
             return 1  # probe_oconst / probe_ovar_bound: pure filters
         p = int(consts[branch.pred_ci])
         if kind == "pred":
-            lo, hi = self.store.pred_run(p)
-            return hi - lo
+            # merged-exact predicate cardinality — the base run alone is
+            # not an upper bound once the delta holds inserts
+            return self.store.tp_cardinality(p)
         max_ps, max_po = self._degree_stats()
         table = max_ps if kind == "ps" else max_po
         return int(table[p]) if p < table.shape[0] else 0
@@ -339,15 +363,44 @@ class CapacityPlanner:
         return True
 
     # --------------------------------------------------------------- epoch
-    def sync_epoch(self, epoch: int) -> int:
+    @property
+    def synced_epoch(self) -> int:
+        """The store epoch this planner last swept against (callers pair
+        it with ``TripleStore.changed_preds_since`` for carry-over)."""
+        return self._swept_epoch
+
+    def sync_epoch(self, epoch: int, changed_preds=None) -> int:
         """Sweep HWM entries from other epochs on first sight of a new one
         (the epoch is also folded into every key, so this only reclaims
         memory — stale observations could never alias).  Mirrors
-        ``FragmentCache.sync_epoch``; shared planners sweep once per
+        ``FragmentCache.sync_epoch``, carry-over included: with
+        ``changed_preds`` (the predicate ids touched since the last sweep)
+        an entry whose constants (``key[1]`` — every predicate its plan
+        probes is among them) avoid the changed set is re-keyed to the new
+        epoch instead of dropped, so untouched plans keep their warm
+        capacities across delta epochs.  A high-water mark is an *upper*
+        bound on the untouched plan's need — tombstones on other
+        predicates only shrink tables — so carrying it is byte-safe
+        (capacity-independence).  Shared planners sweep once per
         transition regardless of which engine/scheduler sees it first."""
         if epoch == self._swept_epoch:
             return 0
         self._swept_epoch = epoch
+        if changed_preds is not None:
+            changed = frozenset(changed_preds)
+            hwm = OrderedDict()
+            dropped = 0
+            for k, cap in self._hwm.items():
+                if k[3] == epoch:
+                    hwm[k] = cap
+                elif changed.isdisjoint(k[1]):
+                    hwm[k[:3] + (epoch,)] = cap
+                    self.stats.carryover += 1
+                else:
+                    dropped += 1
+            self._hwm = hwm
+            self.stats.swept += dropped
+            return dropped
         stale = [k for k in self._hwm if k[3] != epoch]
         for k in stale:
             del self._hwm[k]

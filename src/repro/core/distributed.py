@@ -128,7 +128,7 @@ def make_batch_step(lane_fn, out_proto=None, *, mesh: Mesh | None = None,
     if out_proto is None:
         raise ValueError("mesh-mapped steps need out_proto for out_specs")
     store_spec = StoreArrays(*[P(data_axis) if data_axis else P()
-                               for _ in range(6)])
+                               for _ in StoreArrays._fields])
     # an empty lane_axes (every mesh axis shards the store) replicates the
     # lane batch across the mesh — each shard evaluates all lanes locally
     lane_spec = P() if not lane_axes else \
@@ -373,7 +373,10 @@ class DistributedEngine:
                 [s for _, _, s in ordered])
 
     def _get_step(self, plan: QueryPlan, batch: int):
-        key = (plan.signature, batch)
+        # the store epoch is part of the key: make_step bakes the *logical*
+        # triple count's log-factor into the lane closure, and a
+        # tombstone-only delta changes it without changing any array shape
+        key = (plan.signature, batch, self.store.epoch)
         if key not in self._cache:
             self._cache[key] = self.make_step(plan, batch)
         return self._cache[key]
@@ -431,13 +434,30 @@ class DistributedEngine:
             shard_len = -(-self.store.n_triples // self._n_data) + 64
         D = self._n_data
         ds = NamedSharding(self.mesh, P(self.dcfg.data_axis))
+
+        def _spec(length, dtype):
+            return jax.ShapeDtypeStruct((D, length), dtype, sharding=ds)
+
+        # dry-run lowers the no-delta fast path: zero-length delta arrays
+        # are the trace-time static the production store also presents
+        # when it has no pending writes
         stacked_spec = StoreArrays(
-            key_ps_pso=jax.ShapeDtypeStruct((D, shard_len), jnp.int64, sharding=ds),
-            s_pso=jax.ShapeDtypeStruct((D, shard_len), jnp.int32, sharding=ds),
-            o_pso=jax.ShapeDtypeStruct((D, shard_len), jnp.int32, sharding=ds),
-            key_po_pos=jax.ShapeDtypeStruct((D, shard_len), jnp.int64, sharding=ds),
-            s_pos=jax.ShapeDtypeStruct((D, shard_len), jnp.int32, sharding=ds),
-            o_pos=jax.ShapeDtypeStruct((D, shard_len), jnp.int32, sharding=ds),
+            key_ps_pso=_spec(shard_len, jnp.int64),
+            s_pso=_spec(shard_len, jnp.int32),
+            o_pso=_spec(shard_len, jnp.int32),
+            key_po_pos=_spec(shard_len, jnp.int64),
+            s_pos=_spec(shard_len, jnp.int32),
+            o_pos=_spec(shard_len, jnp.int32),
+            ins_key_ps=_spec(0, jnp.int64),
+            ins_s_pso=_spec(0, jnp.int32),
+            ins_o_pso=_spec(0, jnp.int32),
+            ins_key_po=_spec(0, jnp.int64),
+            ins_s_pos=_spec(0, jnp.int32),
+            ins_o_pos=_spec(0, jnp.int32),
+            tomb_pos_ps=_spec(0, jnp.int32),
+            tomb_adj_ps=_spec(0, jnp.int32),
+            tomb_pos_po=_spec(0, jnp.int32),
+            tomb_adj_po=_spec(0, jnp.int32),
         )
         lane_axes, _ = self._lane_slots()
         const_spec = jax.ShapeDtypeStruct(

@@ -88,6 +88,28 @@ in results, stats, overflow flags, retry sequences and cache digests,
 which is exactly what the shard-parametrized scheduler tests and the
 property suite pin.
 
+The store under all of this is **live**: ``TripleStore.apply_delta``
+overlays sorted insert rows and tombstones on the immutable base index,
+and every dispatched probe becomes a merged eqrange over base + delta
+(``kops.delta_probe`` beside the base probe — probe cost grows with the
+delta, never the store), with ``n_triples`` the logical live count that
+``log_factor``/``probe_op_cost`` derive from.  The scheduler serves
+*through* writes, epoch-pipelined: writes queue (``submit_write`` /
+``ingest``) and apply only at wave boundaries; each in-flight job pins
+the epoch view (device arrays, logn, probe-op cost) its first wave
+served on, so its overflow retries finish byte-identical on the old
+epoch while waves formed after the boundary serve the new one.  Across
+the boundary the warm state *carries*: fragments and planner high-water
+marks whose constants avoid the delta's changed predicates are re-keyed
+to the new epoch instead of swept (``sync_epoch`` with
+``changed_preds_since`` attribution), and a threshold compaction
+(``maybe_compact``) folds the delta into a fresh base bit-identical to
+a from-scratch build — changing no logical triple, so everything
+carries.  The invariant is the same one the lowerings pin: any delta
+state, any epoch sequence, any interface returns bytes identical to a
+stop-the-world rebuild of the merged triple set
+(``tests/test_live_ingest.py``).
+
 Cost accounting: the TPF page path charges fragment location at the
 *dispatched* probe primitive's cost (``kops.probe_op_cost`` — bisection
 steps on the jnp oracle, column-stream tile passes on Pallas), so
@@ -239,8 +261,9 @@ def _ceil_div(a: jnp.ndarray, b: int) -> jnp.ndarray:
 
 
 def _execute(plan_sig_static: tuple, plans: tuple[UnitPlan, ...], n_vars: int,
-             cfg: EngineConfig, radix: int, dev: StoreArrays,
-             const_vec: jnp.ndarray) -> tuple[BindingTable, QueryStats]:
+             cfg: EngineConfig, radix: int, logn: int, probe_ops: int,
+             dev: StoreArrays, const_vec: jnp.ndarray
+             ) -> tuple[BindingTable, QueryStats]:
     del plan_sig_static  # only used as the jit cache key
     table = unit_table(cfg.cap, max(n_vars, 1))
     nrs = jnp.int64(0)
@@ -251,7 +274,8 @@ def _execute(plan_sig_static: tuple, plans: tuple[UnitPlan, ...], n_vars: int,
 
     for k, up in enumerate(plans):
         in_count = table.count()
-        table, ops, _ = eval_unit(dev, radix, up, const_vec, table)
+        table, ops, _ = eval_unit(dev, radix, up, const_vec, table,
+                                  logn=logn)
         out_count = table.count()
         matched_triples = out_count * up.n_triple_patterns
 
@@ -293,8 +317,9 @@ def _execute(plan_sig_static: tuple, plans: tuple[UnitPlan, ...], n_vars: int,
             # (kops.probe_op_cost: bisection steps on the jnp oracle,
             # column-stream tile passes on the Pallas path), so TPF-vs-SPF
             # server-op comparisons use the same accounting as the kernel
-            # layer it actually runs.
-            probe_ops = kops.probe_op_cost(dev.key_ps_pso.shape[0])
+            # layer it actually runs.  ``probe_ops`` comes from the
+            # *logical* triple count (delta overlay included), so the
+            # account matches a from-scratch rebuilt store byte-for-byte.
             server_ops = server_ops + blocks * probe_ops + matched_triples
             client_ops = client_ops + ops
         else:
@@ -381,16 +406,24 @@ class QueryEngine:
         """The pre-planner blind ladder: restart the whole query at 4x
         capacity until it fits (the ladder-parity baseline).  One jitted
         whole-query function per (signature, cap)."""
+        from repro.core.server import log_factor
+
         const_vec = jnp.asarray(np.asarray(plan.consts, dtype=np.int64))
         cap = self.cfg.cap
+        # logn/probe_ops derive from the *logical* triple count, which can
+        # change without any device-array shape changing (a tombstone-only
+        # delta keeps every shape) — the epoch in the key is what retraces
+        # the baked-in cost constants when it does
+        n = self.store.n_triples
         while True:
             cfg = replace(self.cfg, cap=cap)
-            key = (plan.signature, cap)
+            key = (plan.signature, cap, self.store.epoch)
             fn = self._cache.get(key)
             if fn is None:
                 fn = jax.jit(
                     partial(_execute, plan.signature, plan.units, plan.n_vars,
-                            cfg, self.store.radix))
+                            cfg, self.store.radix, log_factor(n),
+                            kops.probe_op_cost(n)))
                 self._cache[key] = fn
             table, stats = fn(self.store.device, const_vec)
             if not bool(stats.overflow) or cap >= self.cfg.max_cap:
@@ -415,9 +448,12 @@ class QueryEngine:
         cfg = self.cfg
         store = self.store
         dev = store.device
+        from repro.core.server import log_factor
+
         const_vec = jnp.asarray(np.asarray(plan.consts, dtype=np.int64))[None]
         n_vars = max(plan.n_vars, 1)
-        n = dev.key_ps_pso.shape[0]
+        n = store.n_triples  # logical count: delta overlay included
+        logn = log_factor(n)
         probe_ops = kops.probe_op_cost(n)
 
         cap = self.planner.unit_start_cap(plan, 0, 1) if plan.units \
@@ -440,7 +476,7 @@ class QueryEngine:
                 rows, valid = stepper.reseat(rows, valid, want)
                 cap = want
             while True:
-                step = stepper.serial_unit_step(up, store.radix)
+                step = stepper.serial_unit_step(up, store.radix, logn)
                 ssp = tr.begin("unit.step", k=k, cap=cap) if tr else None
                 r_o, v_o, o_o, ops_o, cnt_o, peak_o = step(
                     dev, const_vec, rows[None], valid[None],

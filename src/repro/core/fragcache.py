@@ -226,6 +226,14 @@ class CacheStats(RegistryView):
         "evictions",
         "neg_evictions",  # LRU drops from the negative side table
         "stale_evictions",  # entries dropped because their epoch lapsed
+        # epoch-sweep outcome split (obs-gated like every instrument):
+        # entries whose predicates were untouched by a delta epoch are
+        # re-keyed to the new epoch instead of dropped...
+        "carryover",
+        # ...and the touched (or unattributable) remainder is dropped —
+        # counted here as well as in stale_evictions (swept is the
+        # sweep-only subset; get()-time lazy drops are stale-only)
+        "swept",
         "admission_rejects",  # freq policy kept the victim, refused the new
         "bytes_stored",
         # wire records quarantined on restore (CRC/decode failure in
@@ -336,9 +344,27 @@ class FragmentCache:
         self.stats.misses += 1
         return None
 
-    def sync_epoch(self, epoch: int) -> int:
+    @property
+    def synced_epoch(self) -> int:
+        """The store epoch this cache last swept against — callers use it
+        to ask the store which predicates changed since
+        (``TripleStore.changed_preds_since``) for warm carry-over."""
+        return self._swept_epoch
+
+    def sync_epoch(self, epoch: int, changed_preds=None) -> int:
         """Observe the store epoch; sweep stale entries on first sight of
         a new one.  Returns the number of entries dropped.
+
+        ``changed_preds`` is the set of predicate ids touched since the
+        last sweep (``TripleStore.changed_preds_since``), or ``None`` when
+        unknown.  With it, entries none of whose constant values
+        (``key[1]`` — every branch predicate a unit reads is among them)
+        intersect the changed set are **carried over**: re-keyed to the
+        new epoch in place of being dropped, so a delta touching predicate
+        ``p`` leaves fragments over other predicates warm.  The test is
+        conservative — a non-predicate constant colliding with a changed
+        predicate id merely causes a byte-safe extra sweep.  ``None``
+        keeps the legacy sweep-everything behaviour.
 
         The sweep state lives on the cache, not its callers, because the
         pod-shared cache outlives any one scheduler: a scheduler created
@@ -349,7 +375,44 @@ class FragmentCache:
         if epoch == self._swept_epoch:
             return 0
         self._swept_epoch = epoch
-        return self.invalidate_stale(epoch)
+        if changed_preds is None:
+            n = self.invalidate_stale(epoch)
+            self.stats.swept += n
+            return n
+
+        changed = frozenset(changed_preds)
+
+        def _carries(key) -> bool:
+            return changed.isdisjoint(key[1])
+
+        def _rekey(key):
+            return key[:3] + (epoch,) + key[4:]
+
+        dropped = 0
+        entries = OrderedDict()
+        for k, e in self._entries.items():
+            if e.epoch == epoch:
+                entries[k] = e
+            elif _carries(k):
+                entries[_rekey(k)] = e._replace(epoch=epoch)
+                self.stats.carryover += 1
+            else:
+                dropped += 1
+                self.stats.bytes_stored -= e.nbytes
+        self._entries = entries
+        neg = OrderedDict()
+        for k, (ovf, ops, ep, peak) in self._neg.items():
+            if ep == epoch:
+                neg[k] = (ovf, ops, ep, peak)
+            elif _carries(k):
+                neg[_rekey(k)] = (ovf, ops, epoch, peak)
+                self.stats.carryover += 1
+            else:
+                dropped += 1
+        self._neg = neg
+        self.stats.stale_evictions += dropped
+        self.stats.swept += dropped
+        return dropped
 
     def invalidate_stale(self, epoch: int) -> int:
         """Drop every entry not tagged with ``epoch``; returns the count.

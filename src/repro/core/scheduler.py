@@ -166,6 +166,26 @@ class Request(NamedTuple):
     deadline: float | None = None
 
 
+class _EpochView(NamedTuple):
+    """One store epoch's device-resident serving snapshot.
+
+    A wave pins the view it starts on (``_Job.view``), and overflow
+    retries carry the pin — so a write applied between waves
+    (``submit_write`` → ``_apply_writes``) never mixes epochs inside one
+    query execution: in-flight jobs finish on the old epoch's arrays
+    (the Python reference keeps them alive on device), fresh waves pick
+    up the new epoch.  ``logn``/``probe_ops`` ride along because the
+    cost account derives from the *logical* triple count, which moves
+    with every delta epoch.
+    """
+
+    epoch: int
+    dev: object  # StoreArrays — the replicated/vmap device view
+    stacked: object | None  # sharded StoreArrays, when captured sharded
+    logn: int
+    probe_ops: int
+
+
 @dataclass
 class _Job:
     """One distinct query execution: a lane's worth of work at one cap.
@@ -185,6 +205,9 @@ class _Job:
     # largest true per-unit peak row count seen so far (carried across
     # resume retries) — what observe_query records as the query's need
     peak_seen: int = 1
+    # the epoch view this job's first wave served on (pinned for retries;
+    # None until the job has run — fresh jobs adopt the current epoch)
+    view: _EpochView | None = None
 
 
 class SchedMetrics(obs.RegistryView):
@@ -365,8 +388,12 @@ class QueryScheduler:
         n = store.n_triples
         self._logn = log_factor(n)
         # TPF page-accounting charges the dispatched probe primitive's
-        # cost, not an analytic logn (read once, like FORCE at trace time)
+        # cost, not an analytic logn (these refresh per epoch — the
+        # logical triple count moves with every delta batch)
         self._probe_ops = kops.probe_op_cost(n)
+        self._cost_epoch = store.epoch
+        self._writes: list[tuple] = []  # queued (insert, delete) batches
+        self._draining = False
 
     # ------------------------------------------------------------- requests
     def submit(self, query: BGP, client: int = 0,
@@ -406,6 +433,66 @@ class QueryScheduler:
         rids = [self.submit(q, client=c) for c, q in stream]
         results = self.drain()
         return [results[r] for r in rids]
+
+    # ---------------------------------------------------------------- ingest
+    def submit_write(self, insert=None, delete=None) -> None:
+        """Queue a write batch (``TripleStore.apply_delta`` arguments).
+
+        Queued writes apply at the next **wave boundary**: the entry of
+        the next ``drain``, or between waves of a drain in progress.
+        In-flight jobs keep serving the epoch view they started on
+        (``_EpochView`` pinning), fresh waves pick up the post-write
+        epoch — writes never stall serving and serving never tears a
+        write across one query's waves.
+        """
+        self._writes.append((insert, delete))
+
+    def ingest(self, insert=None, delete=None) -> int:
+        """Apply a write batch now (outside a drain) or queue it for the
+        next wave boundary (inside one); returns the store epoch visible
+        to the caller after the call."""
+        self.submit_write(insert=insert, delete=delete)
+        if not self._draining:
+            self._apply_writes()
+        return self.store.epoch
+
+    def _apply_writes(self) -> bool:
+        """Drain the write queue into the store's delta overlay; refresh
+        the epoch-derived statics when the epoch moved.  Returns whether
+        anything was applied."""
+        if not self._writes:
+            return False
+        writes, self._writes = self._writes, []
+        for ins, dele in writes:
+            self.store.apply_delta(insert=ins, delete=dele)
+        self._refresh_epoch()
+        return True
+
+    def _refresh_epoch(self) -> None:
+        """Re-derive everything keyed off the store epoch: the cost-model
+        statics (the *logical* triple count moved), the plan memo (plan
+        ordering follows merged cardinalities, so post-write queries must
+        re-plan to stay byte-identical with a rebuilt store), and the
+        cache/planner sweeps (with changed-predicate carry-over)."""
+        if self.store.epoch == self._cost_epoch:
+            return
+        n = self.store.n_triples
+        self._logn = log_factor(n)
+        self._probe_ops = kops.probe_op_cost(n)
+        self._cost_epoch = self.store.epoch
+        self._plan_memo.clear()
+        self._sync_components()
+
+    def _sync_components(self) -> None:
+        """Sweep the (possibly pod-shared) cache and planner up to the
+        current epoch, handing each the predicate set changed since *its*
+        last sweep so untouched entries carry over instead of dropping
+        (``None`` — unknown history — degrades to the full sweep)."""
+        ep = self.store.epoch
+        for comp in (self.cache, self.planner):
+            if comp.synced_epoch != ep:
+                changed = self.store.changed_preds_since(comp.synced_epoch)
+                comp.sync_epoch(ep, changed_preds=changed)
 
     def _plan(self, query: BGP) -> QueryPlan:
         plan = self._plan_memo.get(query)
@@ -452,6 +539,10 @@ class QueryScheduler:
             faults.hit("drain", requests=len(requests))
         results: dict[int, tuple[BindingTable | None, QueryStats]] = {}
 
+        # wave boundary zero: queued writes land before any wave starts
+        self._draining = True
+        self._apply_writes()
+
         tr = obs.tracer
         if tr:
             dspan = tr.begin("sched.drain", requests=len(requests))
@@ -460,13 +551,13 @@ class QueryScheduler:
                 # waves freely); closed at finalize in _run_wave
                 tr.begin_async("query", req.rid, client=req.client)
 
-        # store mutated since the cache/planner last swept: drop stale
+        # store mutated since the cache/planner last swept: reconcile
         # fragments and high-water marks now (keys are epoch-tagged, so
-        # they could never alias — this just reclaims their memory eagerly
-        # instead of waiting on LRU churn; the sweep state lives on the
-        # pod-shared objects so fresh schedulers still trigger it)
-        self.cache.sync_epoch(self.store.epoch)
-        self.planner.sync_epoch(self.store.epoch)
+        # they could never alias — this reclaims touched entries' memory
+        # eagerly and carries untouched-predicate entries into the new
+        # epoch; the sweep state lives on the pod-shared objects so fresh
+        # schedulers still trigger it)
+        self._sync_components()
 
         # bucket by (signature, cap, resume unit); collapse identical
         # in-flight queries
@@ -480,20 +571,32 @@ class QueryScheduler:
                 cap = self._start_cap(plan, jkey)
                 job = _Job(plan, plan.consts, cap, [req.rid])
                 job_of[jkey] = job
-                buckets.setdefault((plan.signature, job.cap, 0), []).append(job)
+                buckets.setdefault((plan.signature, job.cap, 0, None),
+                                   []).append(job)
                 self.metrics.jobs += 1
             else:
                 job.rids.append(req.rid)
 
-        while buckets:
-            (sig, cap, k0), jobs = buckets.popitem(last=False)
-            lanes = self.scfg.lanes
-            for i in range(0, len(jobs), lanes):
-                wave = jobs[i:i + lanes]
-                retries = self._run_wave(wave, results)
-                for job in retries:
-                    buckets.setdefault((sig, job.cap, job.resume_k),
-                                       []).append(job)
+        try:
+            while buckets:
+                (sig, cap, k0, _vep), jobs = buckets.popitem(last=False)
+                lanes = self.scfg.lanes
+                for i in range(0, len(jobs), lanes):
+                    wave = jobs[i:i + lanes]
+                    retries = self._run_wave(wave, results)
+                    for job in retries:
+                        # the pinned view epoch keys the bucket so retries
+                        # from different epochs never share one wave
+                        vep = job.view.epoch if job.view is not None else None
+                        buckets.setdefault((sig, job.cap, job.resume_k, vep),
+                                           []).append(job)
+                    # wave boundary: writes queued while serving land
+                    # here — the wave that just finished served its
+                    # pinned view, the next wave (and its retries, via
+                    # the pins) stays torn-free
+                    self._apply_writes()
+        finally:
+            self._draining = False
         if tr:
             tr.end(dspan)
         self._t_submit.clear()  # unconditional: no leak across obs toggles
@@ -597,9 +700,17 @@ class QueryScheduler:
         B = 1  # smallest power-of-two width that fits, capped at scfg.lanes
         while B < min(n_active, scfg.lanes):
             B *= 2
+        # --- epoch view: pinned by retries, current for fresh jobs --------
+        # (jobs in one wave share the view by bucket construction: fresh
+        # buckets are all-None, retry buckets are keyed by the view epoch)
+        view = next((j.view for j in jobs if j.view is not None), None)
+        pinned_stale = view is not None and view.epoch != self.store.epoch
         # --- lowering pick: sharded > replicated mesh > vmap --------------
         use_shard = (self._n_shards > 0 and B >= self._shard_slots
-                     and self.store.n_triples >= scfg.shard_min_triples)
+                     and self.store.n_triples >= scfg.shard_min_triples
+                     # a stale pin without a sharded snapshot serves its
+                     # retry through the replicated/vmap step instead
+                     and not (pinned_stale and view.stacked is None))
         # overflow-latch rung: the sharded step merges after every branch
         # (global-order truncation) instead of once per unit
         latch = use_shard and cap >= self.cfg.max_cap
@@ -615,8 +726,18 @@ class QueryScheduler:
             # multiple instead (the extra lanes are no-op padding)
             B = -(-B // slots) * slots
         V = max(plan.n_vars, 1)
-        epoch = self.store.epoch
-        dev = self._stacked if use_shard else self.store.device
+        if view is None:
+            view = _EpochView(self.store.epoch, self.store.device,
+                              self._stacked if use_shard else None,
+                              self._logn, self._probe_ops)
+        elif use_shard and view.stacked is None:
+            # same-epoch pin captured on an unsharded wave: the current
+            # sharded arrays ARE that epoch's snapshot
+            view = view._replace(stacked=self._stacked)
+        for job in jobs:
+            job.view = view
+        epoch = view.epoch
+        dev = view.stacked if use_shard else view.dev
 
         consts = np.zeros((B, max(len(plan.consts), 1)), np.int64)
         for j, job in enumerate(jobs):
@@ -738,7 +859,7 @@ class QueryScheduler:
                         self._wave_shard_trim(jobs, active, k, cap)
                     step = stepper.sharded_unit_step(
                         up, self.store.radix, self.mesh, self.data_axis,
-                        self._shard_lane_axes, self._n_shards, self._logn,
+                        self._shard_lane_axes, self._n_shards, view.logn,
                         trim, latch, scfg.shard_merge)
                     self.metrics.mesh_steps += 1
                     self.metrics.shard_steps += 1
@@ -760,10 +881,11 @@ class QueryScheduler:
                                    bytes=g_bytes, trim=trim, rounds=rounds)
                 elif use_mesh:
                     step = stepper.unit_step(up, self.store.radix, self.mesh,
-                                             self._lane_axes)
+                                             self._lane_axes, logn=view.logn)
                     self.metrics.mesh_steps += 1
                 else:
-                    step = stepper.unit_step(up, self.store.radix)
+                    step = stepper.unit_step(up, self.store.radix,
+                                             logn=view.logn)
                 if lsp:
                     tr.end(lsp)
                 if faults.plan is not None:
@@ -794,7 +916,11 @@ class QueryScheduler:
                         _retire(j, k)
                         continue
                     if status[j][0] == "miss" and scfg.use_cache \
-                            and not bool(ovf[j]):
+                            and not bool(ovf[j]) \
+                            and epoch == self.store.epoch:
+                        # (a stale-pinned retry wave skips insertion: its
+                        # fragments describe a superseded epoch and would
+                        # only park dead weight under an old-epoch key)
                         # miss that needs insertion: pull only this lane's
                         # output prefix to record the replayable delta
                         self.metrics.host_block_pulls += 1
@@ -892,7 +1018,7 @@ class QueryScheduler:
                     continue
                 nrs_d, ntb_d, server_d, client_d = stepper.unit_cost(
                     self.cfg, k, up, n_in[j], counts[j], ops_lane[j],
-                    self._probe_ops)
+                    view.probe_ops)
                 a = acc[j]
                 a.nrs += nrs_d
                 a.ntb += ntb_d

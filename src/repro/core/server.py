@@ -172,21 +172,39 @@ def _active(table: BindingTable) -> jnp.ndarray:
     return jnp.sum(table.valid.astype(jnp.int64))
 
 
+def _has_delta(dev: StoreArrays) -> bool:
+    """Trace-time static: is a delta overlaid on the base index?
+
+    Shapes are static under jit, so each branch evaluator specialises at
+    trace time — with an empty delta the emitted computation is exactly
+    the pre-delta one (no delta probes, no merge), and a delta-bearing
+    epoch simply retraces (the scheduler's step-cache keys fold the
+    epoch/shapes).
+    """
+    return dev.ins_key_ps.shape[0] > 0 or dev.tomb_pos_ps.shape[0] > 0
+
+
 def _probe_run(ctx: EvalCtx, b: BranchPlan, table: BindingTable
-               ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray | None]:
+               ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray | None,
+                          jnp.ndarray]:
     """Locate each row's ``(p, s)`` run in PSO order (bound-subject cases).
 
-    Returns ``(lo, hi, owned)``; ``owned`` is None on a single-host store
-    and the per-row ownership mask under distributed owner masking (where
-    non-owned rows already carry an empty run)."""
+    Returns ``(lo, hi, owned, key)``; ``owned`` is None on a single-host
+    store and the per-row ownership mask under distributed owner masking
+    (where non-owned rows already carry an empty run).  ``key`` is the
+    composite probe key — the delta overlay probes the same key into the
+    insert column.  On a sharded store the shard's delta holds only owned
+    triples, so a non-owned row's key misses the insert run too — owner
+    masking needs no delta-side mask pass."""
     s_vals = _term_values(table.rows, b.subj_src, ctx.const_vec)
     key = ctx.const_vec[b.pred_ci] * ctx.radix + s_vals
     if ctx.owner is None:
         lo, hi = kops.eqrange(ctx.dev.key_ps_pso, key)
-        return lo, hi, None
+        return lo, hi, None, key
     my_shard, n_shards = ctx.owner
-    return kops.eqrange_owned(ctx.dev.key_ps_pso, key, s_vals,
-                              my_shard, n_shards)
+    lo, hi, owned = kops.eqrange_owned(ctx.dev.key_ps_pso, key, s_vals,
+                                       my_shard, n_shards)
+    return lo, hi, owned, key
 
 
 def _probe_active(table: BindingTable, owned: jnp.ndarray | None
@@ -214,17 +232,186 @@ def _expand_into(ctx: EvalCtx, b: BranchPlan, table: BindingTable,
             jnp.minimum(ex.total, table.cap))
 
 
+def _run_rank(col: jnp.ndarray, rlo: jnp.ndarray, rhi: jnp.ndarray,
+              x0: jnp.ndarray, col2: jnp.ndarray | None = None,
+              x1: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Absolute "left" rank of value ``x0`` (or pair ``(x0, x1)`` under
+    ``(col, col2)`` lex order) within each sorted run ``col[rlo:rhi)``.
+
+    The pair rank needs no right-sided search: ids are integers, so the
+    left rank of ``x0 + 1`` *is* the right rank of ``x0`` (the same trick
+    as ``stepper._lex_rank_range``)."""
+    a = kops.searchsorted_in_runs(col, rlo, rhi, x0)
+    if col2 is None:
+        return a
+    b = kops.searchsorted_in_runs(col, rlo, rhi, x0 + 1)
+    return kops.searchsorted_in_runs(col2, a, b, x1)
+
+
+def _merged_expand(ctx: EvalCtx, table: BindingTable, lo: jnp.ndarray,
+                   hi: jnp.ndarray, dprobe: tuple, order: str,
+                   cols: tuple) -> tuple[list, jnp.ndarray, jnp.ndarray,
+                                         jnp.ndarray]:
+    """Ragged expansion over *merged* base+delta runs, in sorted order.
+
+    ``lo``/``hi`` are each row's base run, ``dprobe`` the fused
+    ``kops.delta_probe`` result ``(ins_lo, ins_hi, tomb_lo, tomb_hi)``
+    for the same rows, ``order`` picks the tombstone arrays ("ps"/"po"),
+    and ``cols`` is a tuple of ``(base_col, ins_col)`` pairs in lex
+    significance order (one pair for single-column expansions, two for
+    the (s, o) pair expansion of ``scan_ovar_free``).
+
+    Rather than materialising and sorting the union, both sides scatter
+    directly to their merged ranks (rank-and-scatter):
+
+    - a **live base** element with in-row live rank ``r`` maps to base
+      position ``k + rank_right(tomb_adj, k)`` where ``k`` is its global
+      live index (``lo - tomb_lo + r``) — the tombstone-select closed
+      form — and lands at merged rank ``r`` + (inserts below its value);
+    - an **insert** element with in-row rank ``r`` lands at merged rank
+      ``r`` + (live base elements below its value), where "live below" is
+      (base rank below) − (tombstones below).
+
+    Each side enumerates ``cap`` output slots; a side's scatter position
+    is always >= its enumeration index (the other side only pushes ranks
+    up), so every merged output slot below ``cap`` is covered — first-cap
+    truncation semantics identical to a rebuilt store's plain expansion.
+    Values are unique within a run (triple sets; inserts are disjoint
+    from the live base), so scatter positions never collide.  Out-of-cap
+    positions drop (explicit ``mode="drop"`` — the jit default silently
+    *clips*, which would corrupt the last row).
+
+    Returns ``(vals, src_row, valid, total)`` with one gathered value
+    array per entry of ``cols``.
+    """
+    dev = ctx.dev
+    tomb_pos = dev.tomb_pos_ps if order == "ps" else dev.tomb_pos_po
+    tomb_adj = dev.tomb_adj_ps if order == "ps" else dev.tomb_adj_po
+    ilo, ihi, tlo, thi = dprobe
+    m = cols[0][1].shape[0]  # inserts (static)
+    t = tomb_pos.shape[0]  # tombstones (static)
+    cap = table.cap
+    n_rows = lo.shape[0]
+    nb = cols[0][0].shape[0]
+
+    deg_live = jnp.where(table.valid,
+                         ((hi - lo) - (thi - tlo)).astype(jnp.int64), 0)
+    deg_ins = jnp.where(table.valid, (ihi - ilo).astype(jnp.int64), 0)
+    deg = deg_live + deg_ins
+    cum = jnp.cumsum(deg)
+    total = cum[-1]
+    starts = cum - deg
+    j = jnp.arange(cap, dtype=jnp.int64)
+
+    vals = [jnp.zeros((cap,), jnp.int32) for _ in cols]
+    src_out = jnp.zeros((cap,), jnp.int32)
+
+    # side A: live base elements
+    cum_l = jnp.cumsum(deg_live)
+    starts_l = cum_l - deg_live
+    src_a = jnp.clip(kops.searchsorted(cum_l, j, side="right"), 0,
+                     n_rows - 1)
+    r_a = j - starts_l[src_a]
+    valid_a = j < cum_l[-1]
+    k_glob = (lo[src_a] - tlo[src_a]).astype(jnp.int64) + r_a
+    k_glob = jnp.clip(k_glob, 0, max(nb - 1, 0))
+    if t:
+        q = k_glob + kops.searchsorted(
+            tomb_adj, k_glob.astype(jnp.int32), side="right")
+    else:
+        q = k_glob
+    q = jnp.clip(q, 0, max(nb - 1, 0))
+    xs = [bc[q].astype(jnp.int64) for bc, _ in cols]
+    if m:
+        if len(cols) == 1:
+            c_a = _run_rank(cols[0][1], ilo[src_a], ihi[src_a], xs[0])
+        else:
+            c_a = _run_rank(cols[0][1], ilo[src_a], ihi[src_a], xs[0],
+                            cols[1][1], xs[1])
+        ins_below = (c_a - ilo[src_a]).astype(jnp.int64)
+    else:
+        ins_below = jnp.int64(0)
+    pos_a = jnp.where(valid_a, starts[src_a] + r_a + ins_below, cap)
+    for i, x in enumerate(xs):
+        vals[i] = vals[i].at[pos_a].set(x.astype(jnp.int32), mode="drop")
+    src_out = src_out.at[pos_a].set(src_a.astype(jnp.int32), mode="drop")
+
+    # side B: insert elements
+    if m:
+        cum_i = jnp.cumsum(deg_ins)
+        starts_i = cum_i - deg_ins
+        src_b = jnp.clip(kops.searchsorted(cum_i, j, side="right"), 0,
+                         n_rows - 1)
+        r_b = j - starts_i[src_b]
+        valid_b = j < cum_i[-1]
+        flat = jnp.clip(ilo[src_b].astype(jnp.int64) + r_b, 0, m - 1)
+        bs = [ic[flat].astype(jnp.int64) for _, ic in cols]
+        if len(cols) == 1:
+            p_b = _run_rank(cols[0][0], lo[src_b], hi[src_b], bs[0])
+        else:
+            p_b = _run_rank(cols[0][0], lo[src_b], hi[src_b], bs[0],
+                            cols[1][0], bs[1])
+        below = (p_b - lo[src_b]).astype(jnp.int64)
+        if t:
+            below = below - (kops.searchsorted(tomb_pos, p_b, side="left")
+                             - tlo[src_b]).astype(jnp.int64)
+        pos_b = jnp.where(valid_b, starts[src_b] + r_b + below, cap)
+        for i, x in enumerate(bs):
+            vals[i] = vals[i].at[pos_b].set(x.astype(jnp.int32),
+                                            mode="drop")
+        src_out = src_out.at[pos_b].set(src_b.astype(jnp.int32),
+                                        mode="drop")
+
+    return vals, src_out, j < total, total
+
+
+def _merged_into(ctx: EvalCtx, b: BranchPlan, table: BindingTable,
+                 lo: jnp.ndarray, hi: jnp.ndarray, dprobe: tuple,
+                 order: str, cols: tuple, write_subj: bool,
+                 write_obj: bool) -> tuple[BindingTable, jnp.ndarray]:
+    """Materialise a merged expansion into a fresh table (the delta-path
+    twin of ``_expand_into``); returns (table, expansion ops)."""
+    vals, src, valid, total = _merged_expand(ctx, table, lo, hi, dprobe,
+                                             order, cols)
+    new_rows = table.rows[src]
+    ci = 0
+    if write_subj and b.subj_src[0] == "var":
+        new_rows = new_rows.at[:, b.subj_src[1]].set(vals[ci])
+        ci += 1
+    if write_obj:
+        new_rows = new_rows.at[:, b.obj_src[1]].set(vals[ci])
+    overflow = table.overflow | (total > table.cap)
+    return (BindingTable(new_rows, valid, overflow),
+            jnp.minimum(total, table.cap))
+
+
 def probe_filter(ctx: EvalCtx, b: BranchPlan, table: BindingTable
                  ) -> tuple[BindingTable, jnp.ndarray]:
     """probe_oconst / probe_ovar_bound: subject and object both bound —
     a pure bind-join membership filter over the (p, s) runs.  Under owner
     masking non-owned rows carry empty runs, so membership is False for
-    them with no extra mask pass."""
-    lo, hi, owned = _probe_run(ctx, b, table)
+    them with no extra mask pass.
+
+    Delta overlay: a base hit only counts if its position is not
+    tombstoned, and the insert run can supply the hit instead — the
+    merged membership ``(base & ~tomb) | ins``.
+    """
+    lo, hi, owned, key = _probe_run(ctx, b, table)
     active = _probe_active(table, owned)
     o_vals = _term_values(table.rows, b.obj_src, ctx.const_vec)
-    found = kops.run_contains(ctx.dev.o_pso, lo, hi, o_vals)
     delta = active * (2 * ctx.logn) + active * ctx.logn
+    if not _has_delta(ctx.dev):
+        found = kops.run_contains(ctx.dev.o_pso, lo, hi, o_vals)
+    else:
+        pos, found = kops.run_probe(ctx.dev.o_pso, lo, hi, o_vals)
+        if ctx.dev.tomb_pos_ps.shape[0]:
+            _, t_hit = kops.sorted_probe(ctx.dev.tomb_pos_ps, pos)
+            found = found & ~t_hit
+        if ctx.dev.ins_key_ps.shape[0]:
+            ilo, ihi, _, _ = kops.delta_probe(
+                ctx.dev.ins_key_ps, ctx.dev.tomb_pos_ps, key, lo, hi)
+            found = found | kops.run_contains(ctx.dev.ins_o_pso, ilo, ihi,
+                                              o_vals)
     return compact(BindingTable(table.rows, table.valid & found,
                                 table.overflow)), delta
 
@@ -232,24 +419,40 @@ def probe_filter(ctx: EvalCtx, b: BranchPlan, table: BindingTable
 def probe_ovar_free(ctx: EvalCtx, b: BranchPlan, table: BindingTable
                     ) -> tuple[BindingTable, jnp.ndarray]:
     """Subject bound, object free: expand objects within each (p, s) run.
-    Non-owned rows (empty runs) contribute zero expansion degree."""
-    lo, hi, owned = _probe_run(ctx, b, table)
+    Non-owned rows (empty runs) contribute zero expansion degree.  With a
+    delta, the expansion runs over the merged live-base + insert runs."""
+    lo, hi, owned, key = _probe_run(ctx, b, table)
     active = _probe_active(table, owned)
-    ex = expand(lo, hi, table.valid, table.cap)
-    out, ex_ops = _expand_into(ctx, b, table, ex, None, ctx.dev.o_pso)
+    if not _has_delta(ctx.dev):
+        ex = expand(lo, hi, table.valid, table.cap)
+        out, ex_ops = _expand_into(ctx, b, table, ex, None, ctx.dev.o_pso)
+        return out, active * (2 * ctx.logn) + ex_ops
+    dp = kops.delta_probe(ctx.dev.ins_key_ps, ctx.dev.tomb_pos_ps, key,
+                          lo, hi)
+    out, ex_ops = _merged_into(
+        ctx, b, table, lo, hi, dp, "ps",
+        ((ctx.dev.o_pso, ctx.dev.ins_o_pso),), False, True)
     return out, active * (2 * ctx.logn) + ex_ops
 
 
 def scan_obound(ctx: EvalCtx, b: BranchPlan, table: BindingTable
                 ) -> tuple[BindingTable, jnp.ndarray]:
     """scan_oconst / scan_ovar_bound: subject free, object bound — expand
-    subjects out of the (p, o) run in POS order."""
+    subjects out of the (p, o) run in POS order (merged with the POS-side
+    delta when one is overlaid)."""
     active = _active(table)
     o_vals = _term_values(table.rows, b.obj_src, ctx.const_vec)
     key = ctx.const_vec[b.pred_ci] * ctx.radix + o_vals
     lo, hi = kops.eqrange(ctx.dev.key_po_pos, key)
-    ex = expand(lo, hi, table.valid, table.cap)
-    out, ex_ops = _expand_into(ctx, b, table, ex, ctx.dev.s_pos, None)
+    if not _has_delta(ctx.dev):
+        ex = expand(lo, hi, table.valid, table.cap)
+        out, ex_ops = _expand_into(ctx, b, table, ex, ctx.dev.s_pos, None)
+        return out, active * (2 * ctx.logn) + ex_ops
+    dp = kops.delta_probe(ctx.dev.ins_key_po, ctx.dev.tomb_pos_po, key,
+                          lo, hi)
+    out, ex_ops = _merged_into(
+        ctx, b, table, lo, hi, dp, "po",
+        ((ctx.dev.s_pos, ctx.dev.ins_s_pos),), True, False)
     return out, active * (2 * ctx.logn) + ex_ops
 
 
@@ -258,17 +461,33 @@ def scan_ovar_free(ctx: EvalCtx, b: BranchPlan, table: BindingTable
     """Subject and object free: expand the whole predicate run (PSO order).
 
     The run is delimited by the "left" ranks of ``p*R`` and ``(p+1)*R`` —
-    a single 2-query ``eqrange`` probe of the PSO key column.
+    a single 2-query ``eqrange`` probe of the PSO key column.  With a
+    delta the same 2-query batch rides ``delta_probe`` for the insert
+    bounds and tombstone ranks, and the expansion merges by the (s, o)
+    pair (both sides are (s, o)-lex within the predicate run).
     """
     active = _active(table)
     p = ctx.const_vec[b.pred_ci]
-    bounds, _ = kops.eqrange(
-        ctx.dev.key_ps_pso, jnp.stack([p * ctx.radix, (p + 1) * ctx.radix]))
+    qk = jnp.stack([p * ctx.radix, (p + 1) * ctx.radix])
+    bounds, _ = kops.eqrange(ctx.dev.key_ps_pso, qk)
     lo = jnp.broadcast_to(bounds[0], table.valid.shape)
     hi = jnp.broadcast_to(bounds[1], table.valid.shape)
-    ex = expand(lo, hi, table.valid, table.cap)
-    out, ex_ops = _expand_into(ctx, b, table, ex, ctx.dev.s_pso,
-                               ctx.dev.o_pso)
+    if not _has_delta(ctx.dev):
+        ex = expand(lo, hi, table.valid, table.cap)
+        out, ex_ops = _expand_into(ctx, b, table, ex, ctx.dev.s_pso,
+                                   ctx.dev.o_pso)
+        return out, active * (2 * ctx.logn) + ex_ops
+    il, _, tl, _ = kops.delta_probe(ctx.dev.ins_key_ps,
+                                    ctx.dev.tomb_pos_ps, qk, bounds,
+                                    bounds)
+    dp = (jnp.broadcast_to(il[0], lo.shape),
+          jnp.broadcast_to(il[1], lo.shape),
+          jnp.broadcast_to(tl[0], lo.shape),
+          jnp.broadcast_to(tl[1], lo.shape))
+    out, ex_ops = _merged_into(
+        ctx, b, table, lo, hi, dp, "ps",
+        ((ctx.dev.s_pso, ctx.dev.ins_s_pso),
+         (ctx.dev.o_pso, ctx.dev.ins_o_pso)), True, True)
     return out, active * (2 * ctx.logn) + ex_ops
 
 
@@ -400,12 +619,19 @@ def log_factor(n: int) -> int:
 
 def eval_unit(dev: StoreArrays, radix: int, plan: UnitPlan,
               const_vec: jnp.ndarray, table: BindingTable,
-              owner: tuple[jnp.ndarray, int] | None = None
+              owner: tuple[jnp.ndarray, int] | None = None,
+              logn: int | None = None
               ) -> tuple[BindingTable, jnp.ndarray, jnp.ndarray]:
     """Evaluate one unit seeded with ``table``; returns (table, ops, peak).
 
     ``ops`` counts probe/expansion work (device scalar) — the server/client
     load accounting uses it.  Log-factors of binary searches are folded in.
+    ``logn`` is the cost model's binary-search factor and must be derived
+    from the *logical* triple count (``log_factor(store.n_triples)``) —
+    under a delta overlay the physical base length differs from the
+    logical store size, and the ops account must stay byte-identical to a
+    from-scratch rebuilt store's.  ``None`` falls back to the base-array
+    length (exact whenever the delta is empty).
 
     ``peak`` is the max row count at any branch boundary, input included —
     on a non-overflowing evaluation this is exactly the capacity the unit
@@ -419,7 +645,8 @@ def eval_unit(dev: StoreArrays, radix: int, plan: UnitPlan,
     owner-maskable — a scan-first unit expands subjects out of the local
     shard, which owns them by construction.
     """
-    logn = log_factor(dev.key_ps_pso.shape[0])
+    if logn is None:
+        logn = log_factor(dev.key_ps_pso.shape[0])
     if owner is not None and not plan.branches[0].case.startswith("probe"):
         owner = None
     ctx = EvalCtx(dev, radix, const_vec, logn, owner)

@@ -95,7 +95,7 @@ def _branch_statics(up: UnitPlan) -> tuple:
 
 
 def unit_step(up: UnitPlan, radix: int, mesh: Mesh | None = None,
-              lane_axes: tuple[str, ...] = ()):
+              lane_axes: tuple[str, ...] = (), logn: int | None = None):
     """Jitted one-unit wave step, cached by the unit's trace statics.
 
     The key holds everything ``eval_unit`` bakes into the trace (branch
@@ -106,13 +106,17 @@ def unit_step(up: UnitPlan, radix: int, mesh: Mesh | None = None,
     planning metadata and deliberately excluded — same-shaped units from
     different queries share one compilation.
 
+    ``logn`` is the cost model's binary-search factor from the *logical*
+    triple count (static — under a delta overlay it can change while
+    every shape stays put, so it is part of the key).
+
     The mesh instantiation replicates the store (``data_axis=None``) and
     splits the wave's lanes across ``lane_axes``, so a lane computes the
     same integer arithmetic it would under vmap — byte-identical outputs,
     different device placement.
     """
     key = ("wave", _branch_statics(up), radix, kops.FORCE,
-           kops.BREAKER.generation, mesh, lane_axes)
+           kops.BREAKER.generation, mesh, lane_axes, logn)
     step = _STEP_CACHE.get(key)
     if step is None:
         def lane_fn(dev, const_vec, rows, valid, overflow):
@@ -120,7 +124,8 @@ def unit_step(up: UnitPlan, radix: int, mesh: Mesh | None = None,
             prov = jnp.arange(cap, dtype=jnp.int32)[:, None]
             table = BindingTable(jnp.concatenate([rows, prov], axis=1),
                                  valid, overflow)
-            table, ops, peak = eval_unit(dev, radix, up, const_vec, table)
+            table, ops, peak = eval_unit(dev, radix, up, const_vec, table,
+                                         logn=logn)
             return (table.rows[:, :-1], table.valid, table.overflow,
                     table.rows[:, -1], ops,
                     jnp.sum(table.valid.astype(jnp.int64)), peak)
@@ -552,18 +557,20 @@ def sharded_unit_step(up: UnitPlan, radix: int, mesh: Mesh, data_axis: str,
     return step
 
 
-def serial_unit_step(up: UnitPlan, radix: int):
+def serial_unit_step(up: UnitPlan, radix: int, logn: int | None = None):
     """The serial engine's ladder step: ``unit_step`` without the
     provenance column (``run`` checkpoints tables, not cache deltas).
     Batched with a leading lane axis like every ``make_batch_step``
-    product — the engine passes a width-1 batch."""
+    product — the engine passes a width-1 batch.  ``logn`` carries the
+    logical-count cost factor (see ``unit_step``)."""
     key = ("serial", _branch_statics(up), radix, kops.FORCE,
-           kops.BREAKER.generation)
+           kops.BREAKER.generation, logn)
     step = _STEP_CACHE.get(key)
     if step is None:
         def lane_fn(dev, const_vec, rows, valid, overflow):
             table, ops, peak = eval_unit(dev, radix, up, const_vec,
-                                         BindingTable(rows, valid, overflow))
+                                         BindingTable(rows, valid, overflow),
+                                         logn=logn)
             return (table.rows, table.valid, table.overflow, ops,
                     jnp.sum(table.valid.astype(jnp.int64)), peak)
 

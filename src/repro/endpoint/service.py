@@ -88,6 +88,9 @@ class EndpointStats(obs.RegistryView):
         "drain_bisects",  # wave splits while isolating a poisoned query
         "nrs",  # requests sent past the interface (sum of QueryStats.nrs)
         "ntb",  # bytes transferred past the interface (sum of .ntb)
+        "ingest_batches",  # write batches accepted through ingest()
+        "ingest_triples",  # triples across those batches (inserts+deletes)
+        "compactions",  # delta-into-base folds ingest() triggered
     )
 
 
@@ -231,6 +234,40 @@ class EndpointService:
         if self._arrived is not None:
             self._arrived.set()
         return await pend.future
+
+    # -------------------------------------------------------------- ingest
+    def ingest(self, insert=None, delete=None,
+               compact_frac: float | None = 0.25) -> int:
+        """The write entry point: apply a triple batch to the serving
+        store's delta overlay, live.
+
+        ``insert``/``delete`` are ``(s, p, o)`` array triples
+        (``TripleStore.apply_delta``).  The batch routes through the
+        scheduler's wave-boundary write queue: applied immediately when
+        no drain is running, otherwise between waves — queries already
+        in flight finish on the epoch view they started on, later waves
+        serve the post-write epoch, and no rebuild ever blocks the
+        request loop.
+
+        ``compact_frac`` is the periodic-compaction threshold: once the
+        delta outgrows that fraction of the base the overlay is folded
+        into a fresh base index (``TripleStore.maybe_compact``) — off
+        the serving path, never mid-drain, and with full cache/planner
+        carry-over (a compaction changes no logical triple).  ``None``
+        disables compaction here.  Returns the store epoch after the
+        call.
+        """
+        self.stats.ingest_batches += 1
+        self.stats.ingest_triples += sum(
+            int(np.asarray(b[0]).size) for b in (insert, delete)
+            if b is not None)
+        ep = self.sched.ingest(insert=insert, delete=delete)
+        if compact_frac is not None and not self.sched._draining:
+            if self.sched.store.maybe_compact(frac=compact_frac):
+                self.stats.compactions += 1
+                self.sched._refresh_epoch()
+                ep = self.sched.store.epoch
+        return ep
 
     def _retry_after(self) -> float:
         """When should a rejected client come back?  Queue depth in

@@ -1,0 +1,130 @@
+"""Pallas TPU kernel: the merged base+delta probe's delta half.
+
+With the delta overlay (``rdf.store``), every dispatched eqrange against a
+base key column gains a second, delta-sized probe: the same equal range in
+the sorted *insert* key column, plus the tombstone ranks of the base run
+bounds (how many tombstoned base positions fall below ``lo`` / ``hi`` —
+that pair turns the base run length into a *live* count and base offsets
+into live offsets).  Four rank reductions over two short sorted columns,
+for the same query batch the base probe just served.
+
+Fusing them into one kernel pass matters for the same reason
+``sorted_probe`` fuses both rank sides: the delta columns are tiny
+(that's the point of a delta store), so the cost is dominated by getting
+the query batch through the VPU, not by the column stream — one kernel
+launch per dispatched probe keeps the delta overhead at
+O(delta / K_TILE) tile passes instead of four separate launches.
+
+Both delta columns stream through the same k-tile grid axis (padded to a
+common tiled length; the insert column is int64 keys, the tombstone
+column int32 base positions widened to int64 lanes), and each query tile
+accumulates
+
+    ins_lo[i]  = #{k in ins_keys  : k <  query_keys[i]}
+    ins_hi[i]  = #{k in ins_keys  : k <= query_keys[i]}
+    tomb_lo[i] = #{p in tomb_pos  : p <  base_lo[i]}
+    tomb_hi[i] = #{p in tomb_pos  : p <  base_hi[i]}
+
+across k-tile steps (init at j == 0), exactly the ``sorted_probe``
+accumulation scheme.  Padding: insert keys pad with int64 max (invisible
+below the dtype max; the wrapper clamps ``ins_hi`` like ``sorted_probe``
+does), tombstone positions pad with int32 max (base positions are always
+``<= n_base < int32 max``, and both tombstone ranks use strict ``<``, so
+the padding is never counted — no clamp needed).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_Q_TILE = 256
+DEFAULT_K_TILE = 2048
+
+
+def _delta_probe_kernel(ins_ref, tomb_ref, qkey_ref, qlo_ref, qhi_ref,
+                        ins_lo_ref, ins_hi_ref, tomb_lo_ref, tomb_hi_ref):
+    j = pl.program_id(1)
+    ins = ins_ref[...]  # int64[K_TILE]
+    tomb = tomb_ref[...]  # int64[K_TILE] (widened base positions)
+    qk = qkey_ref[...]  # int64[Q_TILE]
+    ql = qlo_ref[...].astype(jnp.int64)  # [Q_TILE]
+    qh = qhi_ref[...].astype(jnp.int64)
+
+    p_ilo = jnp.sum(ins[None, :] < qk[:, None], axis=1, dtype=jnp.int32)
+    p_ihi = jnp.sum(ins[None, :] <= qk[:, None], axis=1, dtype=jnp.int32)
+    p_tlo = jnp.sum(tomb[None, :] < ql[:, None], axis=1, dtype=jnp.int32)
+    p_thi = jnp.sum(tomb[None, :] < qh[:, None], axis=1, dtype=jnp.int32)
+
+    @pl.when(j == 0)
+    def _init():
+        ins_lo_ref[...] = p_ilo
+        ins_hi_ref[...] = p_ihi
+        tomb_lo_ref[...] = p_tlo
+        tomb_hi_ref[...] = p_thi
+
+    @pl.when(j != 0)
+    def _accum():
+        ins_lo_ref[...] = ins_lo_ref[...] + p_ilo
+        ins_hi_ref[...] = ins_hi_ref[...] + p_ihi
+        tomb_lo_ref[...] = tomb_lo_ref[...] + p_tlo
+        tomb_hi_ref[...] = tomb_hi_ref[...] + p_thi
+
+
+@functools.partial(jax.jit, static_argnames=("q_tile", "k_tile", "interpret"))
+def delta_probe_pallas(ins_keys: jnp.ndarray, tomb_pos: jnp.ndarray,
+                       query_keys: jnp.ndarray, base_lo: jnp.ndarray,
+                       base_hi: jnp.ndarray,
+                       q_tile: int = DEFAULT_Q_TILE,
+                       k_tile: int = DEFAULT_K_TILE,
+                       interpret: bool = False
+                       ) -> tuple[jnp.ndarray, jnp.ndarray,
+                                  jnp.ndarray, jnp.ndarray]:
+    """Fused delta probe: insert eqrange + tombstone ranks of the base run.
+
+    ``ins_keys`` sorted int64 (insert composite keys), ``tomb_pos`` sorted
+    int32 (tombstoned base positions), ``query_keys`` the probe keys the
+    base eqrange just served, ``base_lo``/``base_hi`` that eqrange's
+    result.  Returns ``(ins_lo, ins_hi, tomb_lo, tomb_hi)`` int32 — see
+    the module docstring for the definitions.
+    """
+    m = ins_keys.shape[0]
+    t = tomb_pos.shape[0]
+    q = query_keys.shape[0]
+    maxkey = jnp.iinfo(ins_keys.dtype).max
+    k_len = max(m, t, 1)
+    k_len += -k_len % k_tile
+    ins_p = jnp.pad(ins_keys, (0, k_len - m), constant_values=maxkey)
+    tomb_p = jnp.pad(tomb_pos, (0, k_len - t),
+                     constant_values=jnp.iinfo(tomb_pos.dtype).max)
+    tomb_p = tomb_p.astype(jnp.int64)
+    q_pad = -q % q_tile
+    qk_p = jnp.pad(query_keys, (0, q_pad), constant_values=maxkey)
+    ql_p = jnp.pad(base_lo, (0, q_pad))
+    qh_p = jnp.pad(base_hi, (0, q_pad))
+
+    grid = (qk_p.shape[0] // q_tile, k_len // k_tile)
+    out = pl.pallas_call(
+        _delta_probe_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((k_tile,), lambda i, j: (j,)),
+            pl.BlockSpec((k_tile,), lambda i, j: (j,)),
+            pl.BlockSpec((q_tile,), lambda i, j: (i,)),
+            pl.BlockSpec((q_tile,), lambda i, j: (i,)),
+            pl.BlockSpec((q_tile,), lambda i, j: (i,)),
+        ],
+        out_specs=[pl.BlockSpec((q_tile,), lambda i, j: (i,))
+                   for _ in range(4)],
+        out_shape=[jax.ShapeDtypeStruct((qk_p.shape[0],), jnp.int32)
+                   for _ in range(4)],
+        interpret=interpret,
+    )(ins_p, tomb_p, qk_p, ql_p, qh_p)
+    ins_lo, ins_hi, tomb_lo, tomb_hi = (o[:q] for o in out)
+    # a query key equal to the dtype max sees the key padding in `<=`;
+    # its true right-rank is m (same correction as sorted_probe)
+    ins_hi = jnp.minimum(ins_hi, m)
+    return ins_lo, ins_hi, tomb_lo, tomb_hi

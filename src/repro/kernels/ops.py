@@ -53,6 +53,11 @@ Join/probe primitives (the SPF server's hot path)
                             seam, so the distributed gather-merge rides
                             the same backend dispatch).
 - ``sorted_probe``        — rank-left + membership in one sorted array.
+- ``delta_probe``         — the merged base+delta probe's delta half:
+                            insert-key equal range + tombstone ranks of
+                            the base run bounds, one fused pass (Pallas
+                            kernel, jnp oracle, numpy twin — three-way
+                            parity-pinned like ``replay_delta``).
 - ``searchsorted``        — one-sided rank in one sorted array (the ragged
                             expansion's cumulative-degree bookkeeping in
                             ``core/bindings.py`` routes through this).
@@ -92,6 +97,7 @@ import jax.numpy as jnp
 
 from repro import faults, obs
 from repro.kernels import ref
+from repro.kernels.delta_probe import delta_probe_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.owned_probe import MAX_SHARDS, eqrange_owned_pallas
 from repro.kernels.run_probe import (
@@ -314,6 +320,43 @@ def eqrange(sorted_keys: jnp.ndarray, query_keys: jnp.ndarray
                         lambda: ref.eqrange_ref(sorted_keys, query_keys))
     _note("eqrange", "ref")
     return ref.eqrange_ref(sorted_keys, query_keys)
+
+
+def delta_probe(ins_keys: jnp.ndarray, tomb_pos: jnp.ndarray,
+                query_keys: jnp.ndarray, base_lo: jnp.ndarray,
+                base_hi: jnp.ndarray
+                ) -> tuple[jnp.ndarray, jnp.ndarray,
+                           jnp.ndarray, jnp.ndarray]:
+    """The merged base+delta probe's delta half, in one fused pass.
+
+    For every dispatched base ``eqrange`` the delta overlay needs four
+    more ranks over two short sorted columns: the equal range of the same
+    probe keys in the *insert* key column (``ins_lo``/``ins_hi``) and the
+    tombstone ranks of the base run bounds (``tomb_lo``/``tomb_hi`` =
+    tombstoned base positions strictly below ``base_lo``/``base_hi``).
+    Together they give live run lengths (``(hi-lo) - (thi-tlo)``), live
+    offsets, and the insert run to merge in — probe cost grows with the
+    delta size, not the store size.  Pallas path: the fused
+    ``delta_probe`` kernel (one launch, both columns on the same tile
+    stream); oracle: ``ref.delta_probe_ref``; host twin:
+    ``ref.delta_probe_np`` — three-way parity-pinned like
+    ``replay_delta``.  Same small-batch auto-dispatch policy as
+    ``eqrange``.
+    """
+    if _use_pallas() and (FORCE == "pallas"
+                          or query_keys.shape[0] >= MIN_PALLAS_QUERIES):
+        def _pl():
+            _note("delta_probe", "pallas")
+            return delta_probe_pallas(ins_keys, tomb_pos, query_keys,
+                                      base_lo, base_hi,
+                                      interpret=_interpret())
+        return _guarded("delta_probe", _pl,
+                        lambda: ref.delta_probe_ref(ins_keys, tomb_pos,
+                                                    query_keys, base_lo,
+                                                    base_hi))
+    _note("delta_probe", "ref")
+    return ref.delta_probe_ref(ins_keys, tomb_pos, query_keys, base_lo,
+                               base_hi)
 
 
 def searchsorted(sorted_keys: jnp.ndarray, queries: jnp.ndarray,

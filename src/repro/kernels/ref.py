@@ -33,6 +33,39 @@ def eqrange_ref(sorted_keys: jnp.ndarray, query_keys: jnp.ndarray
     return lo.astype(jnp.int32), hi.astype(jnp.int32)
 
 
+def delta_probe_ref(ins_keys: jnp.ndarray, tomb_pos: jnp.ndarray,
+                    query_keys: jnp.ndarray, base_lo: jnp.ndarray,
+                    base_hi: jnp.ndarray
+                    ) -> tuple[jnp.ndarray, jnp.ndarray,
+                               jnp.ndarray, jnp.ndarray]:
+    """The merged base+delta probe's delta half, in pure jnp.
+
+    Insert-key equal range of each ``query_keys[i]`` plus the tombstone
+    ranks of the base run bounds ``base_lo[i]``/``base_hi[i]`` (count of
+    tombstoned base positions strictly below each) — the jnp oracle for
+    ``delta_probe_pallas``.
+    """
+    ins_lo, ins_hi = eqrange_ref(ins_keys, query_keys)
+    tomb_lo = jnp.searchsorted(tomb_pos, base_lo, side="left")
+    tomb_hi = jnp.searchsorted(tomb_pos, base_hi, side="left")
+    return (ins_lo, ins_hi,
+            tomb_lo.astype(jnp.int32), tomb_hi.astype(jnp.int32))
+
+
+def delta_probe_np(ins_keys: "np.ndarray", tomb_pos: "np.ndarray",
+                   query_keys: "np.ndarray", base_lo: "np.ndarray",
+                   base_hi: "np.ndarray") -> tuple:
+    """Host (numpy) twin of ``delta_probe_ref`` — bit-identical outputs;
+    the three-way parity partner the kernel tests pin alongside the
+    Pallas and jnp paths (like ``fingerprint_prefix_np``)."""
+    ins_lo = np.searchsorted(ins_keys, query_keys, side="left")
+    ins_hi = np.searchsorted(ins_keys, query_keys, side="right")
+    tomb_lo = np.searchsorted(tomb_pos, base_lo, side="left")
+    tomb_hi = np.searchsorted(tomb_pos, base_hi, side="left")
+    return (ins_lo.astype(np.int32), ins_hi.astype(np.int32),
+            tomb_lo.astype(np.int32), tomb_hi.astype(np.int32))
+
+
 def rank_ref(sorted_keys: jnp.ndarray, queries: jnp.ndarray,
              side: str = "left") -> jnp.ndarray:
     """One-sided rank (``searchsorted``) of ``queries`` in a sorted array.

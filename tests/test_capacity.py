@@ -264,8 +264,8 @@ def test_hourglass_capacity_shrink(monkeypatch):
     seen_caps = []
     orig_step = stepper.serial_unit_step
 
-    def spy(up, radix):
-        step = orig_step(up, radix)
+    def spy(up, radix, logn=None):
+        step = orig_step(up, radix, logn)
 
         def wrapped(dev, const_vec, rows, valid, ovf):
             seen_caps.append(rows.shape[1])

@@ -1,0 +1,355 @@
+"""Live ingest: delta overlay, merged base+delta probes, epoch pipelining.
+
+The tentpole contract is **byte-identity**: every query, through every
+interface and lowering, against any delta state (inserts, tombstones,
+multiple consecutive epochs, post-compaction) returns results identical
+to the same query against a ``TripleStore.build`` of the merged logical
+triple set.  On top of that the serving layer pins the epoch-pipeline
+invariants: in-flight waves finish on the epoch view they started on,
+fresh waves serve the new epoch, and cache/planner entries over
+untouched predicates carry across delta epochs instead of being swept.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import EngineConfig, QueryEngine, results_as_numpy
+from repro.core.patterns import BGP, C, TriplePattern, V
+from repro.core.scheduler import QueryScheduler, SchedulerConfig
+from repro.kernels import ops as kops
+from repro.kernels.ref import delta_probe_np, delta_probe_ref
+from repro.rdf.store import TripleStore
+
+N_TERMS = 120
+N_PREDS = 8
+
+
+def _triples(rng, n):
+    t = np.unique(np.stack([rng.integers(0, N_PREDS, n),
+                            rng.integers(0, N_TERMS, n),
+                            rng.integers(0, N_TERMS, n)], axis=1), axis=0)
+    return t[:, 1], t[:, 0], t[:, 2]  # (s, p, o)
+
+
+@pytest.fixture()
+def store():
+    rng = np.random.default_rng(11)
+    s, p, o = _triples(rng, 1500)
+    return TripleStore.build(s, p, o, n_terms=N_TERMS, n_predicates=N_PREDS)
+
+
+def _apply_round(store, rng, n_ins=40, n_del=25):
+    """One delta epoch: delete live triples, insert fresh random ones."""
+    ms, mp, mo = store.merged_triples()
+    idx = rng.choice(ms.shape[0], n_del, replace=False)
+    ins = (rng.integers(0, N_TERMS, n_ins), rng.integers(0, N_PREDS, n_ins),
+           rng.integers(0, N_TERMS, n_ins))
+    store.apply_delta(insert=ins, delete=(ms[idx], mp[idx], mo[idx]))
+
+
+def _rebuilt(store):
+    ms, mp, mo = store.merged_triples()
+    return TripleStore.build(ms, mp, mo, n_terms=store.n_terms,
+                             n_predicates=store.n_predicates)
+
+
+def _queries():
+    """Branch-case coverage: free scan, bound-object scan, star with a
+    filter branch, and a two-star path."""
+    return [
+        BGP((TriplePattern(V(0), C(1), V(1)),), n_vars=2),
+        BGP((TriplePattern(V(0), C(2), C(7)),), n_vars=1),
+        BGP((TriplePattern(V(0), C(1), V(1)),
+             TriplePattern(V(0), C(3), V(2))), n_vars=3),
+        BGP((TriplePattern(V(0), C(2), V(1)),
+             TriplePattern(V(1), C(4), V(2))), n_vars=3),
+    ]
+
+
+def _res(table):
+    return results_as_numpy(table)
+
+
+# --------------------------------------------------------------------------
+# store-level delta semantics
+# --------------------------------------------------------------------------
+
+def test_apply_delta_set_semantics(store):
+    ms, mp, mo = store.merged_triples()
+    logical = set(zip(mp.tolist(), ms.tolist(), mo.tolist()))
+    n0 = store.n_triples
+    e0 = store.epoch
+
+    # deleting a live triple tombstones it; the logical count drops
+    t = next(iter(logical))
+    store.apply_delta(delete=([t[1]], [t[0]], [t[2]]))
+    assert store.n_triples == n0 - 1 and store.epoch == e0 + 1
+
+    # re-inserting cancels the tombstone (no net change vs the base)
+    store.apply_delta(insert=([t[1]], [t[0]], [t[2]]))
+    assert store.n_triples == n0 and store.delta_size == 0
+
+    # inserting a fresh triple, then deleting it, removes the insert
+    fresh = (0, N_TERMS - 1, N_TERMS - 1)
+    assert fresh not in logical
+    store.apply_delta(insert=([fresh[1]], [fresh[0]], [fresh[2]]))
+    assert store.n_triples == n0 + 1
+    store.apply_delta(delete=([fresh[1]], [fresh[0]], [fresh[2]]))
+    assert store.n_triples == n0 and store.delta_size == 0
+
+    # ineffective batches do not bump the epoch
+    e = store.epoch
+    assert store.apply_delta(delete=([fresh[1]], [fresh[0]], [fresh[2]])) == e
+
+    # out-of-dictionary ids are a rebuild, not a delta
+    with pytest.raises(ValueError):
+        store.apply_delta(insert=([0], [N_PREDS], [0]))
+
+
+def test_merged_triples_match_manual_set(store):
+    rng = np.random.default_rng(5)
+    expect = set(zip(*[a.tolist() for a in store.merged_triples()]))
+    for _ in range(3):
+        ms, mp, mo = store.merged_triples()
+        idx = rng.choice(ms.shape[0], 20, replace=False)
+        ins = _triples(rng, 30)
+        store.apply_delta(insert=ins,
+                          delete=(ms[idx], mp[idx], mo[idx]))
+        expect -= set(zip(ms[idx].tolist(), mp[idx].tolist(),
+                          mo[idx].tolist()))
+        expect |= set(zip(*[np.asarray(a).tolist() for a in ins]))
+        got = set(zip(*[a.tolist() for a in store.merged_triples()]))
+        assert got == expect
+        assert store.n_triples == len(expect)
+
+
+def test_compaction_bit_identical_to_rebuild(store):
+    rng = np.random.default_rng(6)
+    _apply_round(store, rng)
+    _apply_round(store, rng)
+    ref = _rebuilt(store)
+    assert store.delta_size > 0
+    store.compact()
+    assert store.delta_size == 0
+    for name in ("h_key_ps", "h_s_pso", "h_o_pso", "h_key_po", "h_s_pos",
+                 "h_o_pos", "h_pred_offsets"):
+        assert np.array_equal(getattr(store, name), getattr(ref, name)), name
+    assert store.n_triples == ref.n_triples
+
+
+def test_changed_preds_tracking(store):
+    e0 = store.epoch
+    store.apply_delta(insert=([3], [1], [5]))
+    store.apply_delta(insert=([4], [2], [6]))
+    assert store.changed_preds_since(e0) == frozenset({1, 2})
+    assert store.changed_preds_since(store.epoch) == frozenset()
+    # a legacy bump has no attribution: callers must sweep everything
+    store.bump_epoch()
+    assert store.changed_preds_since(e0) is None
+
+
+# --------------------------------------------------------------------------
+# merged-probe kernel parity
+# --------------------------------------------------------------------------
+
+def test_delta_probe_three_way_parity():
+    rng = np.random.default_rng(3)
+    m, t, q, n_base = 64, 32, 128, 5000
+    ins = np.sort(rng.integers(0, 1 << 40, m).astype(np.int64))
+    tomb = np.sort(rng.choice(n_base, t, replace=False).astype(np.int32))
+    qk = rng.integers(0, 1 << 40, q).astype(np.int64)
+    qk[:m // 2] = ins[rng.integers(0, m, m // 2)]  # exact hits
+    lo = rng.integers(0, n_base // 2, q).astype(np.int32)
+    hi = lo + rng.integers(0, n_base // 2, q).astype(np.int32)
+
+    want = delta_probe_np(ins, tomb, qk, lo, hi)
+    args = [jax.numpy.asarray(a) for a in (ins, tomb, qk, lo, hi)]
+    got_ref = delta_probe_ref(*args)
+    for a, b in zip(want, got_ref):
+        assert np.array_equal(a, np.asarray(b))
+    for force in ("pallas", "ref"):
+        old = kops.FORCE
+        kops.FORCE = force
+        try:
+            got = kops.delta_probe(*args)
+        finally:
+            kops.FORCE = old
+        for a, b in zip(want, got):
+            assert np.array_equal(a, np.asarray(b)), force
+
+
+# --------------------------------------------------------------------------
+# byte-identity: every interface, >= 3 consecutive delta epochs
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("interface", ["tpf", "brtpf", "spf", "endpoint"])
+def test_engine_byte_identity_across_epochs(store, interface):
+    rng = np.random.default_rng(7)
+    cfg = EngineConfig(interface=interface, cap=2048)
+    qs = _queries()
+    for ep in range(3):
+        _apply_round(store, rng)
+        ref_eng = QueryEngine(_rebuilt(store), cfg)
+        eng = QueryEngine(store, cfg)
+        for q in qs:
+            td, sd = eng.run(q)
+            tr, sr = ref_eng.run(q)
+            assert np.array_equal(_res(td), _res(tr)), (ep, q)
+            assert bool(sd.overflow) == bool(sr.overflow)
+    # post-compaction epoch: same contract, zero delta
+    store.compact()
+    ref_eng = QueryEngine(_rebuilt(store), cfg)
+    eng = QueryEngine(store, cfg)
+    for q in qs:
+        assert np.array_equal(_res(eng.run(q)[0]), _res(ref_eng.run(q)[0]))
+
+
+def test_scheduler_lowerings_byte_identity(store):
+    """vmap, replicated-mesh and sharded waves over a delta store match
+    the serial engine on the rebuilt store (1-device meshes are valid
+    and exercise the mesh/shard lowerings on any host)."""
+    rng = np.random.default_rng(8)
+    _apply_round(store, rng)
+    _apply_round(store, rng)
+    cfg = EngineConfig(interface="spf", cap=2048)
+    ref_eng = QueryEngine(_rebuilt(store), cfg)
+    qs = _queries()
+    want = [_res(ref_eng.run(q)[0]) for q in qs]
+
+    n_dev = len(jax.devices())
+    setups = [dict()]  # vmap
+    setups.append(dict(mesh=jax.make_mesh((n_dev,), ("model",))))
+    setups.append(dict(mesh=jax.make_mesh((n_dev, 1), ("data", "model")),
+                       data_axis="data"))
+    for kw in setups:
+        sched = QueryScheduler(
+            store, cfg, SchedulerConfig(shard_min_triples=0), **kw)
+        tables, _ = sched.run_queries(qs)
+        for q, t, w in zip(qs, tables, want):
+            assert np.array_equal(_res(t), w), (kw, q)
+
+
+# --------------------------------------------------------------------------
+# epoch pipelining: in-flight waves on the old view, fresh waves on the new
+# --------------------------------------------------------------------------
+
+def test_inflight_wave_pins_old_epoch(store, monkeypatch):
+    """A write landing mid-drain applies at the wave boundary: the
+    overflow retry of a query that started pre-write finishes on the old
+    epoch's view (byte-identical to the old store), while a separate
+    query waved after the boundary serves the new epoch."""
+    cfg = EngineConfig(interface="spf", cap=16, max_cap=1 << 14,
+                       capacity_planner=False)
+    q_big = BGP((TriplePattern(V(0), C(1), V(1)),), n_vars=2)  # overflows 16
+    q_new = BGP((TriplePattern(V(0), C(2), C(7)),), n_vars=1)
+
+    old_want = _res(QueryEngine(_rebuilt(store), cfg).run(q_big)[0])
+    assert old_want.shape[0] > 16  # the retry ladder engages
+
+    # the write: tombstone one (p=2, o=7) answer and insert another
+    ms, mp, mo = store.merged_triples()
+    hit = np.nonzero((mp == 2) & (mo == 7))[0]
+    assert hit.size > 0
+    write = dict(delete=(ms[hit[:1]], mp[hit[:1]], mo[hit[:1]]),
+                 insert=([N_TERMS - 1], [2], [7]))
+
+    sched = QueryScheduler(store, cfg, SchedulerConfig(cap_hints=False))
+    fired = {"n": 0}
+    orig = QueryScheduler._run_wave
+
+    def spy(self, jobs, results):
+        out = orig(self, jobs, results)
+        fired["n"] += 1
+        if fired["n"] == 1:  # queue the write during the first wave
+            self.submit_write(**write)
+        return out
+
+    monkeypatch.setattr(QueryScheduler, "_run_wave", spy)
+    r_big = sched.submit(q_big)
+    r_new = sched.submit(q_new)
+    results = sched.drain()
+
+    # the in-flight query's retries stayed on the pre-write view
+    assert np.array_equal(_res(results[r_big][0]), old_want)
+    assert sched.metrics.retries > 0
+    # the post-boundary wave served the post-write epoch
+    new_want = _res(QueryEngine(_rebuilt(store), cfg).run(q_new)[0])
+    assert np.array_equal(_res(results[r_new][0]), new_want)
+    # and a fresh drain of the big query serves the new epoch too
+    monkeypatch.setattr(QueryScheduler, "_run_wave", orig)
+    t2, _ = sched.run_queries([q_big])
+    assert np.array_equal(
+        _res(t2[0]), _res(QueryEngine(_rebuilt(store), cfg).run(q_big)[0]))
+
+
+# --------------------------------------------------------------------------
+# warm carry-over across delta epochs
+# --------------------------------------------------------------------------
+
+def test_cache_and_hwm_carryover(store):
+    """After a delta touching predicate 4 only: fragments and high-water
+    marks whose constants avoid predicate 4 carry into the new epoch (the
+    untouched query re-serves all-hit), touched ones are swept."""
+    cfg = EngineConfig(interface="spf", cap=2048)
+    q_untouched = BGP((TriplePattern(V(0), C(1), V(1)),
+                       TriplePattern(V(0), C(3), V(2))), n_vars=3)
+    q_touched = BGP((TriplePattern(V(0), C(4), V(1)),), n_vars=2)
+    sched = QueryScheduler(store, cfg)
+    sched.run_queries([q_untouched, q_touched])  # cold: record fragments
+    _, warm = sched.run_queries([q_untouched, q_touched])
+    assert all(s.cache_misses == 0 for s in warm)  # warm: all-hit
+    hwm_before = len(sched.planner._hwm)
+    assert hwm_before > 0
+
+    sched.ingest(insert=([10, 11], [4, 4], [12, 13]))
+    assert sched.cache.stats.carryover > 0
+    assert sched.cache.stats.swept > 0
+    assert sched.planner.stats.carryover > 0
+
+    _, post = sched.run_queries([q_untouched, q_touched])
+    assert post[0].cache_misses == 0  # carried fragments still serve
+    assert post[1].cache_misses > 0  # touched predicate recomputes
+    # carried HWM entries still serve capacities at the new epoch
+    assert any(k[3] == store.epoch for k in sched.planner._hwm)
+
+
+def test_compaction_carries_everything(store):
+    """Compaction changes no logical triple: every fragment carries, and
+    the post-compaction run is all-hit and byte-identical."""
+    rng = np.random.default_rng(9)
+    _apply_round(store, rng)
+    cfg = EngineConfig(interface="spf", cap=2048)
+    qs = _queries()
+    sched = QueryScheduler(store, cfg)
+    want = [_res(t) for t in sched.run_queries(qs)[0]]
+    sched.run_queries(qs)
+
+    assert store.delta_size > 0
+    store.compact()
+    sched._refresh_epoch()
+    assert sched.cache.stats.swept == 0  # nothing dropped
+    tables, stats = sched.run_queries(qs)
+    assert all(s.cache_misses == 0 for s in stats)
+    for t, w in zip(tables, want):
+        assert np.array_equal(_res(t), w)
+
+
+def test_tombstoned_triple_never_reappears_from_cache(store):
+    """Deleting an answered triple sweeps the fragments that produced it:
+    the re-run must not resurface the tombstoned row, and must match the
+    rebuilt store byte-for-byte."""
+    cfg = EngineConfig(interface="spf", cap=2048)
+    q = BGP((TriplePattern(V(0), C(1), V(1)),), n_vars=2)
+    sched = QueryScheduler(store, cfg)
+    t0, _ = sched.run_queries([q])
+    rows0 = _res(t0[0])
+    assert rows0.shape[0] > 0
+    s_del, o_del = int(rows0[0, 0]), int(rows0[0, 1])
+
+    sched.ingest(delete=([s_del], [1], [o_del]))
+    t1, _ = sched.run_queries([q])
+    rows1 = _res(t1[0])
+    assert not ((rows1[:, 0] == s_del) & (rows1[:, 1] == o_del)).any()
+    want = _res(QueryEngine(_rebuilt(store), cfg).run(q)[0])
+    assert np.array_equal(rows1, want)
